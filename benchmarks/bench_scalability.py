@@ -1,0 +1,59 @@
+"""Paper Table 4: running times of all nine algorithms (CPU-scaled).
+
+The paper reports T1/T24/speedup on 7 datasets; this container has one
+core, so we report absolute runtimes on two synthetic datasets (the paper's
+generator) at CPU-feasible scale, for both access paths.  Multi-core scaling
+is measured structurally in bench_scaling.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.algorithms import (
+    earliest_arrival,
+    earliest_arrival_multi,
+    fastest,
+    latest_departure,
+    shortest_duration,
+    temporal_betweenness,
+    temporal_bfs,
+    temporal_cc,
+    temporal_kcore,
+    temporal_pagerank,
+)
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph, synthetic_temporal_graph
+
+
+def run(sizes=((5_000, 100_000), (20_000, 1_000_000)), n_sources: int = 8):
+    for n_v, n_e in sizes:
+        g = synthetic_temporal_graph(n_v, n_e, seed=0)
+        ts = np.asarray(g.t_start)
+        # paper: start at the 95th pct of start times, end at the max
+        win = (int(np.quantile(ts, 0.95)), int(np.asarray(g.t_end).max()))
+        sources = np.argsort(np.asarray(g.out_degree))[-n_sources:].astype(np.int32)
+        tag = f"V{n_v}_E{n_e}"
+
+        t = time_fn(lambda: earliest_arrival_multi(g, sources, win))
+        emit(f"table4/e_arrival/{tag}", t, f"{n_sources}src")
+        t = time_fn(lambda: latest_departure(g, int(sources[0]), win))
+        emit(f"table4/l_departure/{tag}", t, "1src")
+        t = time_fn(lambda: fastest(g, int(sources[0]), win, n_departures=32))
+        emit(f"table4/fastest/{tag}", t, "1src,32dep")
+        t = time_fn(lambda: shortest_duration(g, int(sources[0]), win, n_buckets=64))
+        emit(f"table4/s_duration/{tag}", t, "1src,64bkt")
+        t = time_fn(lambda: temporal_bfs(g, int(sources[0]), win))
+        emit(f"table4/t_bfs/{tag}", t, "1src")
+        t = time_fn(lambda: temporal_cc(g, win))
+        emit(f"table4/t_cc/{tag}", t, "")
+        t = time_fn(lambda: temporal_kcore(g, 4, win))
+        emit(f"table4/t_kcore/{tag}", t, "k=4")
+        t = time_fn(lambda: temporal_betweenness(g, sources[:2], win, n_buckets=64))
+        emit(f"table4/t_bc/{tag}", t, "2src,64bkt")
+        t = time_fn(lambda: temporal_pagerank(g, win, n_iters=100))
+        emit(f"table4/t_pagerank/{tag}", t, "100it")
+
+
+if __name__ == "__main__":
+    run()

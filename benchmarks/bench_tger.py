@@ -1,0 +1,53 @@
+"""Paper Figure 8: TGER query runtimes vs index size and window size.
+
+Single-"vertex" (global time-first) index queried for the most-recent X% of
+edges by start time: searchsorted + budget gather, timed against the scan.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.edgemap import index_view, scan_view
+from repro.core.predicates import in_window
+from repro.core.selective import budget_for, CostModel
+from repro.core.tger import build_tger
+from repro.data.generators import synthetic_temporal_graph
+
+import jax
+
+
+def run(sizes=(100_000, 1_000_000, 4_000_000), fracs=(0.01, 0.1, 0.2)):
+    model = CostModel()
+    for n_e in sizes:
+        g = synthetic_temporal_graph(max(n_e // 100, 64), n_e, seed=1)
+        idx = build_tger(g, degree_cutoff=1 << 30)  # global index only
+        ts = np.asarray(g.t_start)
+
+        @jax.jit
+        def scan_count(window):
+            v = scan_view(g)
+            ok = v.mask & in_window(v.t_start, v.t_end, window[0], window[1])
+            return ok.sum()
+
+        for frac in fracs:
+            lo = int(np.quantile(ts, 1 - frac))
+            hi = int(np.asarray(g.t_end).max())
+            window = jnp.asarray([lo, hi], jnp.int32)
+            budget = budget_for(frac * n_e, n_e, model)
+
+            def index_count(window, budget=budget):
+                v = index_view(g, idx, (window[0], window[1]), budget)
+                ok = v.mask & in_window(v.t_start, v.t_end, window[0], window[1])
+                return ok.sum()
+
+            jidx = jax.jit(index_count)
+            t_idx = time_fn(jidx, window)
+            t_scan = time_fn(scan_count, window)
+            emit(f"fig8/tger_query/E{n_e}/sel{frac}", t_idx,
+                 f"budget={budget};scan_us={t_scan*1e6:.1f};speedup={t_scan/max(t_idx,1e-12):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds of fn(*args) with device sync."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds*1e6:.1f},{derived}")

@@ -1,0 +1,122 @@
+"""Roofline analysis (deliverable g): turn experiments/dryrun/*.json into
+the three-term table.
+
+  compute  = HLO_FLOPs / (chips x 197e12)            [s]
+  memory   = HLO_bytes / (chips x 819e9)             [s]
+  collective = wire_bytes / (chips x 50e9)           [s]
+
+Conventions: dryrun cost_analysis is PER-DEVICE for the SPMD module, so the
+per-chip terms divide by per-chip peaks directly; wire bytes use ring-
+algorithm models per collective (see launch/dryrun.py).  Scan-over-layers
+cells use the two-point unrolled extrapolation (cost_extrapolated).
+MODEL_FLOPS conventions per family live in configs/families.py.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+V5E = dict(flops=197e12, hbm=819e9, ici=50e9, hbm_bytes=16 * 2**30)
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Dict:
+    if rec.get("status") != "ok":
+        return dict(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            status=rec.get("status"), note=rec.get("skip_reason", rec.get("error", "")),
+        )
+    n_dev = rec["n_devices"]
+    ce = rec.get("cost_extrapolated")
+    flops = (ce or rec["cost"])["flops_per_device"]
+    byts = (ce or rec["cost"])["bytes_accessed_per_device"]
+    wire = (ce or rec)["collective_wire_bytes_per_device"] if ce else \
+        rec["collective_wire_bytes_per_device"]
+    t_compute = flops / V5E["flops"]
+    t_memory = byts / V5E["hbm"]
+    t_coll = wire / V5E["ici"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    model_flops = rec.get("model_flops_global", 0.0)
+    mfu = model_flops / (n_dev * V5E["flops"] * step_time) if step_time else 0.0
+    useful = model_flops / (flops * n_dev) if flops else 0.0
+    # Memory-fit accounting: the CPU backend's temp_size_in_bytes is the SUM
+    # of temp allocations without liveness reuse (a 50M-param model reports
+    # ~42 GiB), so it cannot be a high-water mark.  The exact per-device
+    # quantity is argument_size (persistent params/opt/cache, sharded);
+    # fits = persistent state <= 14 GiB, leaving >= 2 GiB for the remat-
+    # bounded activation working set.
+    state_gib = rec["memory"]["argument_size_in_bytes"] / 2**30
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], status="ok",
+        n_devices=n_dev,
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=dominant, bound_step_s=step_time,
+        model_flops=model_flops,
+        useful_flops_ratio=useful,      # MODEL_FLOPS / (HLO_FLOPs x chips)
+        roofline_fraction=mfu,          # MODEL_FLOPS / (chips x peak x bound-step)
+        peak_gib=state_gib,
+        temp_sum_gib=rec["memory"]["temp_size_in_bytes"] / 2**30,
+        fits_hbm=state_gib <= 14.0,
+    )
+
+
+def table(dryrun_dir: str = "experiments/dryrun", mesh: str = None) -> List[Dict]:
+    rows = [roofline_row(r) for r in load_records(dryrun_dir)]
+    if mesh:
+        rows = [r for r in rows if r.get("mesh") == mesh]
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | roofline frac | useful ratio | peak GiB | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                f"{r.get('status')} | - | - | - | {r.get('note','')[:40]} |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['peak_gib']:.2f} | {'y' if r['fits_hbm'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    rows = table()
+    from benchmarks.common import emit
+
+    for r in rows:
+        if r.get("status") == "ok":
+            emit(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                r["bound_step_s"],
+                f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                f"peak_gib={r['peak_gib']:.2f}",
+            )
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write(render_markdown(rows) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma list: table4,fig7,fig8,fig9,estimator,roofline")
+    args = ap.parse_args()
+    wanted = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return wanted is None or name in wanted
+
+    print("name,us_per_call,derived")
+
+    if want("table4"):
+        from benchmarks import bench_scalability
+        sizes = ((2_000, 50_000),) if args.quick else ((5_000, 100_000), (20_000, 1_000_000))
+        bench_scalability.run(sizes=sizes, n_sources=4 if args.quick else 8)
+
+    if want("fig8"):
+        from benchmarks import bench_tger
+        sizes = (100_000,) if args.quick else (100_000, 1_000_000, 4_000_000)
+        bench_tger.run(sizes=sizes)
+
+    if want("fig9"):
+        from benchmarks import bench_selective
+        if args.quick:
+            bench_selective.run(n_v=5_000, n_e=200_000, fracs=(0.01, 0.1, 0.5))
+        else:
+            bench_selective.run()
+
+    if want("estimator"):
+        from benchmarks import bench_estimator
+        if args.quick:
+            bench_estimator.run(n_v=5_000, n_e=200_000, cutoffs=(128,))
+        else:
+            bench_estimator.run()
+
+    if want("fig7"):
+        from benchmarks import bench_scaling
+        bench_scaling.run(dev_counts=(1, 2) if args.quick else (1, 2, 4, 8))
+
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

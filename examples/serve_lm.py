@@ -1,0 +1,19 @@
+"""Batched serving example: continuous batching with the ServeEngine.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    sys.argv = ["serve", "--arch", "smollm-135m", "--requests", "12",
+                "--slots", "4", "--max-new", "10"]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

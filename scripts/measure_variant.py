@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Measure a config-variant of an LM cell without changing defaults —
+the §Perf iteration tool.
+
+  PYTHONPATH=src python scripts/measure_variant.py \
+      --arch qwen3-moe-30b-a3b --shape train_4k --set remat=False
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg field overrides, e.g. remat=False q_chunk=256")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"True": True, "False": False}.get(v, None)
+        if overrides[k] is None:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+    spec.cfg = dataclasses.replace(spec.cfg, **overrides)
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    L = spec.layer_count()
+
+    def measure(lowerable):
+        fn, a, sh, d = lowerable
+        c = jax.jit(fn, in_shardings=sh, donate_argnums=tuple(d)).lower(*a).compile()
+        ca = c.cost_analysis() or {}
+        colls = parse_collectives(c.as_text())
+        ma = c.memory_analysis()
+        return dict(
+            flops=float(ca.get("flops", 0)),
+            bytes=float(ca.get("bytes accessed", 0)),
+            wire=sum(x["wire_bytes"] for x in colls),
+            peak=int(ma.peak_memory_in_bytes),
+        )
+
+    full = measure(spec.lowerable(args.shape, mesh))
+    p1 = measure(spec.layer_scaled_lowerable(args.shape, mesh, 1))
+    p2 = measure(spec.layer_scaled_lowerable(args.shape, mesh, 2))
+    extr = {k: p1[k] + (p2[k] - p1[k]) * (L - 1) for k in ("flops", "bytes", "wire")}
+    rec = dict(
+        arch=args.arch, shape=args.shape, mesh=args.mesh, overrides=overrides,
+        peak_gib=full["peak"] / 2**30,
+        flops_per_device=extr["flops"],
+        bytes_per_device=extr["bytes"],
+        wire_per_device=extr["wire"],
+        t_compute_s=extr["flops"] / 197e12,
+        t_memory_s=extr["bytes"] / 819e9,
+        t_collective_s=extr["wire"] / 50e9,
+    )
+    print(json.dumps(rec, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

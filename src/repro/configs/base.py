@@ -1,0 +1,55 @@
+"""Config substrate: shape cells, arch specs, registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+_REGISTRY: Dict[str, Callable[[], "ArchSpec"]] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    name: str
+    kind: str                  # train | prefill | decode | serve | retrieval | analytics
+    meta: Dict[str, Any]
+    skip: Optional[str] = None  # reason when the cell is defined-but-skipped
+
+
+class ArchSpec:
+    """Interface every architecture family implements (see families.py)."""
+
+    arch_id: str = ""
+    family: str = ""
+    source: str = ""
+    cells: Dict[str, Cell] = {}
+
+    # -- dry-run ------------------------------------------------------------
+    def lowerable(self, cell_name: str, mesh):
+        """Returns (fn, args_abstract: tuple, in_shardings: tuple, donate: tuple)."""
+        raise NotImplementedError
+
+    # -- smoke ---------------------------------------------------------------
+    def smoke(self, seed: int = 0) -> Dict[str, Any]:
+        """Run one reduced-config forward/train step on CPU; returns metrics
+        (must include finite outputs — asserted by tests)."""
+        raise NotImplementedError
+
+
+def register(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs():
+    return sorted(_REGISTRY)

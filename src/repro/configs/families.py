@@ -1,0 +1,631 @@
+"""Architecture families: shared machinery turning a model config + shape
+cells into (a) lowerable dry-run programs with shardings and (b) reduced
+smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, Cell
+from repro.distributed.sharding import AxisRules, DEFAULT_RULES, logical_spec, use_mesh
+from repro.models import gnn as gnn_mod
+from repro.models import mind as mind_mod
+from repro.models import nequip as nequip_mod
+from repro.models import transformer as tf
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainConfig, make_train_step
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shardings_from_axes(axes_tree, shapes_tree, mesh, rules=None):
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    rules_obj = AxisRules({**DEFAULT_RULES, **(rules or {})})
+
+    def one(ax, shaped):
+        return NamedSharding(mesh, logical_spec(shaped.shape, ax, mesh, rules_obj))
+
+    return jax.tree_util.tree_map(one, axes_tree, shapes_tree, is_leaf=is_ax)
+
+
+def _replicated(tree, mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+LM_CELLS = {
+    "train_4k": Cell("train_4k", "train", dict(seq=4096, batch=256)),
+    "prefill_32k": Cell("prefill_32k", "prefill", dict(seq=32768, batch=32)),
+    "decode_32k": Cell("decode_32k", "decode", dict(seq=32768, batch=128)),
+    "long_500k": Cell(
+        "long_500k", "decode", dict(seq=524288, batch=1),
+        skip="pure full-attention arch: long_500k is defined for sub-quadratic "
+             "attention families only (DESIGN.md §4)",
+    ),
+}
+
+
+class LMFamily(ArchSpec):
+    family = "lm"
+
+    def __init__(self, arch_id: str, cfg: tf.LMConfig, smoke_cfg: tf.LMConfig,
+                 source: str, optimizer: str = "adamw", opt_kw: Optional[dict] = None,
+                 microbatches: int = 1, rules_override: Optional[dict] = None):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.smoke_cfg = smoke_cfg
+        self.source = source
+        self.optimizer_kind = optimizer
+        self.opt_kw = opt_kw or {}
+        self.microbatches = microbatches
+        # per-arch logical->mesh rule overrides (e.g. mistral's token-sharded
+        # DP x SP + ZeRO-3 layout, EXPERIMENTS.md §Perf iteration 2)
+        self.rules_override = rules_override
+        self.cells = dict(LM_CELLS)
+
+    # -- builders -------------------------------------------------------------
+
+    def _optimizer(self):
+        kw = dict(self.opt_kw)
+        return opt_mod.make_optimizer(self.optimizer_kind, kw.pop("lr", 3e-4), **kw)
+
+    def _train_objects(self, cfg):
+        optimizer = self._optimizer()
+        loss = lambda p, b: tf.loss_fn(p, b, cfg)
+        step = make_train_step(loss, optimizer,
+                               TrainConfig(microbatches=self.microbatches))
+        return optimizer, step
+
+    def _state_shapes_axes(self, cfg):
+        p_shapes = tf.param_shapes(cfg)
+        p_axes = tf.param_axes(cfg)
+        optimizer = self._optimizer()
+        opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        opt_axes = opt_mod.state_axes(self.optimizer_kind, p_axes, p_shapes)
+        state_shapes = {"opt": opt_shapes, "step": _sds((), I32)}
+        state_axes_t = {"opt": opt_axes, "step": ()}
+        return p_shapes, p_axes, state_shapes, state_axes_t
+
+    def _mesh_cfg(self, mesh) -> tf.LMConfig:
+        """Mesh-dependent config tweaks: MoE dispatch groups track the
+        batch-sharding degree (group-local dispatch, DESIGN.md §7)."""
+        cfg = self.cfg
+        if cfg.moe is not None and mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            g = sizes.get("pod", 1) * sizes.get("data", 1)
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, n_groups=g)
+            )
+        return cfg
+
+    def lowerable(self, cell_name: str, mesh):
+        cell = self.cells[cell_name]
+        cfg = self._mesh_cfg(mesh)
+        B, S = cell.meta["batch"], cell.meta["seq"]
+        if cell.kind == "train":
+            p_shapes, p_axes, s_shapes, s_axes = self._state_shapes_axes(cfg)
+            batch_shapes = {
+                "tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)
+            }
+            batch_axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+            _, step = self._train_objects(cfg)
+
+            rules = self.rules_override
+
+            def fn(params, state, batch):
+                with use_mesh(mesh, rules=rules):
+                    return step(params, state, batch)
+
+            args = (p_shapes, s_shapes, batch_shapes)
+            shardings = (
+                _shardings_from_axes(p_axes, p_shapes, mesh, rules),
+                _shardings_from_axes(s_axes, s_shapes, mesh, rules),
+                _shardings_from_axes(batch_axes, batch_shapes, mesh, rules),
+            )
+            return fn, args, shardings, (0, 1)
+
+        rules = self.rules_override
+        rules_obj = AxisRules({**DEFAULT_RULES, **(rules or {})})
+        p_shapes = tf.param_shapes(cfg)
+        p_axes = tf.param_axes(cfg)
+        p_shard = _shardings_from_axes(p_axes, p_shapes, mesh, rules)
+        if cell.kind == "prefill":
+            tokens = _sds((B, S), I32)
+
+            def fn(params, tokens_):
+                with use_mesh(mesh, rules=rules):
+                    return tf.prefill(params, tokens_, cfg)
+
+            tok_shard = NamedSharding(
+                mesh, logical_spec((B, S), ("batch", "seq"), mesh, rules_obj)
+            )
+            return fn, (p_shapes, tokens), (p_shard, tok_shard), ()
+
+        if cell.kind == "decode":
+            cache_shapes = jax.eval_shape(
+                lambda: tf.init_cache(cfg, B, S)
+            )
+            cache_ax = tf.cache_axes()
+            tokens = _sds((B,), I32)
+            lens = _sds((B,), I32)
+            # decode: activations are [B, d] — ZeRO-3 weight gathering would
+            # move the whole model per token; keep weights sharded (TP-style
+            # partial sums + tiny activation all-reduces), default rules, and
+            # ungrouped MoE dispatch (128 tokens don't amortize G groups).
+            # (dense_mix=True was tried here and REFUTED: with fsdp-sharded
+            # expert weights the all-experts einsum partial-sums over the
+            # weight shards and all-reduces [T, E_loc, F] activations per
+            # layer — kimi decode 0.22 s -> 3.29 s.  Sort dispatch stays.)
+            dcfg = dataclasses.replace(
+                cfg, gather_weights=False,
+                moe=dataclasses.replace(cfg.moe, n_groups=1) if cfg.moe else None,
+            )
+            rules = None
+
+            def fn(params, cache, tokens_, lens_):
+                with use_mesh(mesh, rules=rules):
+                    return tf.decode_step(params, cache, tokens_, lens_, dcfg)
+
+            drules = AxisRules(dict(DEFAULT_RULES))
+            shardings = (
+                _shardings_from_axes(p_axes, p_shapes, mesh, None),
+                _shardings_from_axes(cache_ax, cache_shapes, mesh, None),
+                NamedSharding(mesh, logical_spec((B,), ("batch",), mesh, drules)),
+                NamedSharding(mesh, logical_spec((B,), ("batch",), mesh, drules)),
+            )
+            return fn, (p_shapes, cache_shapes, tokens, lens), shardings, (1,)
+        raise ValueError(cell.kind)
+
+    # -- roofline helpers -------------------------------------------------
+
+    def layer_count(self) -> int:
+        return self.cfg.n_layers
+
+    def layer_scaled_lowerable(self, cell_name: str, mesh, n_layers: int):
+        """Same cell with a reduced UNROLLED layer count — dryrun compiles
+        L=1,2 (Python-loop layers, no scan) to recover true per-layer cost
+        (XLA cost_analysis counts lax.scan bodies once regardless of L)."""
+        clone = LMFamily(
+            self.arch_id,
+            dataclasses.replace(self.cfg, n_layers=n_layers, unroll=True),
+            self.smoke_cfg, self.source, self.optimizer_kind, self.opt_kw,
+            self.microbatches, self.rules_override,
+        )
+        return clone.lowerable(cell_name, mesh)
+
+    def model_flops(self, cell_name: str) -> float:
+        """MODEL_FLOPS convention (EXPERIMENTS.md): 6·N_active·D train,
+        2·N_active·D inference (D = tokens processed)."""
+        cell = self.cells[cell_name]
+        B = cell.meta["batch"]
+        S = cell.meta["seq"]
+        n = self.cfg.n_active_params
+        if cell.kind == "train":
+            return 6.0 * n * B * S
+        if cell.kind == "prefill":
+            return 2.0 * n * B * S
+        return 2.0 * n * B  # decode: one token per row
+
+    def smoke(self, seed: int = 0):
+        cfg = self.smoke_cfg
+        key = jax.random.PRNGKey(seed)
+        params = tf.init_params(key, cfg)
+        B, S = 2, 32
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        optimizer, step = self._train_objects(cfg)
+        from repro.train.train_step import init_train_state
+        state = init_train_state(params, optimizer, TrainConfig())
+        new_p, new_s, metrics = jax.jit(step)(params, state, {"tokens": toks, "labels": toks})
+        # decode path
+        last, cache = tf.prefill(params, toks, cfg, max_seq=S + 4)
+        logits, _ = tf.decode_step(params, cache, jnp.argmax(last, -1),
+                                   jnp.full((B,), S, I32), cfg)
+        return {
+            "loss": float(metrics["loss"]),
+            "logits_finite": bool(jnp.isfinite(logits).all()),
+            "params_finite": bool(
+                all(jnp.isfinite(l).all() for l in jax.tree_util.tree_leaves(new_p))
+            ),
+            "decode_shape": tuple(logits.shape),
+        }
+
+
+# ===========================================================================
+# GNN family (gcn / gin / graphsage)
+# ===========================================================================
+
+GNN_CELLS = {
+    "full_graph_sm": Cell(
+        "full_graph_sm", "train",
+        dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7),
+    ),
+    "minibatch_lg": Cell(
+        "minibatch_lg", "train",
+        dict(n_nodes=232_965, n_edges=114_615_892, batch_nodes=1024,
+             fanout=(15, 10), d_feat=602, n_classes=41,
+             # sampled-subgraph shapes consumed by the train step:
+             sub_nodes=1024 + 1024 * 15 + 1024 * 150,
+             sub_edges=1024 * 15 + 1024 * 150),
+    ),
+    "ogb_products": Cell(
+        "ogb_products", "train",
+        dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_classes=47),
+    ),
+    "molecule": Cell(
+        "molecule", "train",
+        dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, n_classes=2),
+    ),
+}
+
+
+class GNNFamily(ArchSpec):
+    family = "gnn"
+
+    def __init__(self, arch_id: str, arch: str, n_layers: int, d_hidden: int,
+                 source: str, aggregator: str = "mean", readout_molecule: str = "sum"):
+        self.arch_id = arch_id
+        self.arch = arch
+        self.n_layers = n_layers
+        self.d_hidden = d_hidden
+        self.aggregator = aggregator
+        self.readout_molecule = readout_molecule
+        self.source = source
+        self.cells = dict(GNN_CELLS)
+
+    def _cfg(self, cell: Cell) -> gnn_mod.GNNConfig:
+        m = cell.meta
+        return gnn_mod.GNNConfig(
+            name=self.arch_id, arch=self.arch, n_layers=self.n_layers,
+            d_hidden=self.d_hidden, d_in=m["d_feat"], n_classes=m["n_classes"],
+            aggregator=self.aggregator,
+            readout=self.readout_molecule if cell.name == "molecule" else None,
+        )
+
+    def _batch_shapes(self, cell: Cell):
+        m = cell.meta
+        if cell.name == "molecule":
+            n = m["n_nodes"] * m["batch"]
+            e = m["n_edges"] * m["batch"]
+            shapes = {
+                "x": _sds((n, m["d_feat"]), F32),
+                "src": _sds((e,), I32), "dst": _sds((e,), I32),
+                "graph_id": _sds((n,), I32),
+                "labels": _sds((m["batch"],), I32),
+            }
+            axes = {
+                "x": (None, None), "src": ("edges",), "dst": ("edges",),
+                "graph_id": (None,), "labels": (None,),
+            }
+            return shapes, axes, m["batch"]
+        n = m.get("sub_nodes", m["n_nodes"])
+        e = m.get("sub_edges", m["n_edges"])
+        shapes = {
+            "x": _sds((n, m["d_feat"]), F32),
+            "src": _sds((e,), I32), "dst": _sds((e,), I32),
+            "labels": _sds((n,), I32),
+            "label_mask": _sds((n,), F32),
+        }
+        axes = {
+            "x": (None, None), "src": ("edges",), "dst": ("edges",),
+            "labels": (None,), "label_mask": (None,),
+        }
+        return shapes, axes, None
+
+    def lowerable(self, cell_name: str, mesh):
+        cell = self.cells[cell_name]
+        cfg = self._cfg(cell)
+        params = jax.eval_shape(lambda: gnn_mod.init_gnn(jax.random.PRNGKey(0), cfg))
+        p_axes = gnn_mod.gnn_param_axes(params)
+        batch_shapes, batch_axes, n_graphs = self._batch_shapes(cell)
+
+        optimizer = opt_mod.make_optimizer("adamw", 1e-3)
+        loss = lambda p, b: (
+            gnn_mod.gnn_loss(p, ({**b, "n_graphs": n_graphs} if n_graphs else b), cfg),
+            {},
+        )
+        step = make_train_step(loss, optimizer, TrainConfig())
+        opt_shapes = jax.eval_shape(optimizer.init, params)
+        opt_axes = opt_mod.state_axes("adamw", p_axes, params)
+        s_shapes = {"opt": opt_shapes, "step": _sds((), I32)}
+        s_axes = {"opt": opt_axes, "step": ()}
+
+        def fn(p, s, b):
+            with use_mesh(mesh):
+                return step(p, s, b)
+
+        shardings = (
+            _shardings_from_axes(p_axes, params, mesh),
+            _shardings_from_axes(s_axes, s_shapes, mesh),
+            _shardings_from_axes(batch_axes, batch_shapes, mesh),
+        )
+        return fn, (params, s_shapes, batch_shapes), shardings, (0, 1)
+
+    def model_flops(self, cell_name: str) -> float:
+        cell = self.cells[cell_name]
+        cfg = self._cfg(cell)
+        m = cell.meta
+        if cell.name == "molecule":
+            n = m["n_nodes"] * m["batch"]
+            e = m["n_edges"] * m["batch"]
+        else:
+            n = m.get("sub_nodes", m["n_nodes"])
+            e = m.get("sub_edges", m["n_edges"])
+        per_layer = 2.0 * e * cfg.d_hidden + 3 * 2.0 * n * cfg.d_hidden * cfg.d_hidden
+        first = 2.0 * e * cfg.d_in + 3 * 2.0 * n * cfg.d_in * cfg.d_hidden
+        fwd = first + (cfg.n_layers - 1) * per_layer + 2.0 * n * cfg.d_hidden * cfg.n_classes
+        return 3.0 * fwd  # train: fwd + 2x bwd
+
+    def smoke(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        cfg = gnn_mod.GNNConfig(
+            name=self.arch_id, arch=self.arch, n_layers=min(self.n_layers, 2),
+            d_hidden=8, d_in=6, n_classes=3, aggregator=self.aggregator,
+        )
+        params = gnn_mod.init_gnn(jax.random.PRNGKey(seed), cfg)
+        N, E = 40, 160
+        batch = {
+            "x": jnp.asarray(rng.standard_normal((N, 6)), F32),
+            "src": jnp.asarray(rng.integers(0, N, E), I32),
+            "dst": jnp.asarray(rng.integers(0, N, E), I32),
+            "labels": jnp.asarray(rng.integers(0, 3, N), I32),
+        }
+        out = gnn_mod.gnn_forward(params, batch, cfg)
+        loss = gnn_mod.gnn_loss(params, batch, cfg)
+        grads = jax.grad(gnn_mod.gnn_loss)(params, batch, cfg)
+        return {
+            "out_shape": tuple(out.shape),
+            "loss": float(loss),
+            "finite": bool(jnp.isfinite(out).all())
+            and all(bool(jnp.isfinite(l).all()) for l in jax.tree_util.tree_leaves(grads)),
+        }
+
+
+# ===========================================================================
+# NequIP family
+# ===========================================================================
+
+class NequIPFamily(ArchSpec):
+    family = "gnn"
+
+    def __init__(self, arch_id: str, cfg: nequip_mod.NequIPConfig, source: str):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.source = source
+        self.cells = dict(GNN_CELLS)
+
+    def _batch_shapes(self, cell: Cell):
+        m = cell.meta
+        if cell.name == "molecule":
+            n = m["n_nodes"] * m["batch"]
+            e = m["n_edges"] * m["batch"]
+            n_graphs = m["batch"]
+        else:
+            n = m.get("sub_nodes", m["n_nodes"])
+            e = m.get("sub_edges", m["n_edges"])
+            n_graphs = 1
+        shapes = {
+            "species": _sds((n,), I32),
+            "pos": _sds((n, 3), F32),
+            "src": _sds((e,), I32), "dst": _sds((e,), I32),
+            "graph_id": _sds((n,), I32),
+            "energy_target": _sds((n_graphs,), F32),
+        }
+        axes = {
+            "species": (None,), "pos": (None, None),
+            "src": ("edges",), "dst": ("edges",),
+            "graph_id": (None,), "energy_target": (None,),
+        }
+        return shapes, axes, n_graphs
+
+    def lowerable(self, cell_name: str, mesh):
+        cell = self.cells[cell_name]
+        cfg = self.cfg
+        params = jax.eval_shape(lambda: nequip_mod.init_nequip(jax.random.PRNGKey(0), cfg))
+        p_axes = jax.tree_util.tree_map(lambda p: tuple(None for _ in p.shape), params)
+        batch_shapes, batch_axes, n_graphs = self._batch_shapes(cell)
+
+        optimizer = opt_mod.make_optimizer("adamw", 1e-3)
+
+        def loss(p, b):
+            e = nequip_mod.nequip_forward(
+                p, {**b, "n_graphs": n_graphs}, cfg
+            )
+            return jnp.mean((e - b["energy_target"]) ** 2), {"e_mean": e.mean()}
+
+        step = make_train_step(loss, optimizer, TrainConfig())
+        opt_shapes = jax.eval_shape(optimizer.init, params)
+        opt_axes = opt_mod.state_axes("adamw", p_axes, params)
+        s_shapes = {"opt": opt_shapes, "step": _sds((), I32)}
+        s_axes = {"opt": opt_axes, "step": ()}
+
+        def fn(p, s, b):
+            with use_mesh(mesh):
+                return step(p, s, b)
+
+        shardings = (
+            _shardings_from_axes(p_axes, params, mesh),
+            _shardings_from_axes(s_axes, s_shapes, mesh),
+            _shardings_from_axes(batch_axes, batch_shapes, mesh),
+        )
+        return fn, (params, s_shapes, batch_shapes), shardings, (0, 1)
+
+    def model_flops(self, cell_name: str) -> float:
+        cell = self.cells[cell_name]
+        cfg = self.cfg
+        m = cell.meta
+        if cell.name == "molecule":
+            n = m["n_nodes"] * m["batch"]
+            e = m["n_edges"] * m["batch"]
+        else:
+            n = m.get("sub_nodes", m["n_nodes"])
+            e = m.get("sub_edges", m["n_edges"])
+        C = cfg.d_hidden
+        tp = sum(
+            2.0 * e * C * (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+            for (l1, l2, l3) in cfg.paths
+        )
+        radial = 2.0 * e * (cfg.n_rbf * 32 + 32 * len(cfg.paths) * C)
+        mixes = 2.0 * n * C * C * 2 * (cfg.l_max + 1)
+        fwd = cfg.n_layers * (tp + radial + mixes)
+        return 3.0 * fwd
+
+    def smoke(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        cfg = dataclasses.replace(self.cfg, n_layers=2, d_hidden=8, n_species=4)
+        params = nequip_mod.init_nequip(jax.random.PRNGKey(seed), cfg)
+        N = 10
+        pos = rng.uniform(-1.5, 1.5, (N, 3)).astype(np.float32)
+        dmat = np.linalg.norm(pos[:, None] - pos[None], axis=-1)
+        src, dst = np.nonzero((dmat < cfg.cutoff) & (dmat > 0))
+        batch = {
+            "species": jnp.asarray(rng.integers(0, 4, N), I32),
+            "pos": jnp.asarray(pos),
+            "src": jnp.asarray(src, I32), "dst": jnp.asarray(dst, I32),
+        }
+        e, f = nequip_mod.nequip_energy_forces(params, batch, cfg)
+        return {
+            "energy": float(e),
+            "forces_shape": tuple(f.shape),
+            "finite": bool(jnp.isfinite(e)) and bool(jnp.isfinite(f).all()),
+        }
+
+
+# ===========================================================================
+# RecSys family (MIND)
+# ===========================================================================
+
+RECSYS_CELLS = {
+    "train_batch": Cell("train_batch", "train", dict(batch=65536)),
+    "serve_p99": Cell("serve_p99", "serve", dict(batch=512)),
+    "serve_bulk": Cell("serve_bulk", "serve", dict(batch=262144)),
+    "retrieval_cand": Cell(
+        "retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000)
+    ),
+}
+
+
+class RecsysFamily(ArchSpec):
+    family = "recsys"
+
+    def __init__(self, arch_id: str, cfg: mind_mod.MINDConfig, source: str):
+        self.arch_id = arch_id
+        self.cfg = cfg
+        self.source = source
+        self.cells = dict(RECSYS_CELLS)
+
+    def lowerable(self, cell_name: str, mesh):
+        cell = self.cells[cell_name]
+        cfg = self.cfg
+        params = jax.eval_shape(lambda: mind_mod.init_mind(jax.random.PRNGKey(0), cfg))
+        p_axes = mind_mod.mind_param_axes(params)
+        p_shard = _shardings_from_axes(p_axes, params, mesh)
+        B = cell.meta["batch"]
+
+        if cell.kind == "train":
+            batch_shapes = {
+                "hist": _sds((B, cfg.hist_len), I32),
+                "target": _sds((B,), I32),
+                "negatives": _sds((B, cfg.n_negatives), I32),
+            }
+            batch_axes = {
+                "hist": ("batch", None), "target": ("batch",),
+                "negatives": ("batch", None),
+            }
+            optimizer = opt_mod.make_optimizer("adamw", 1e-3)
+            loss = lambda p, b: (mind_mod.train_loss(p, b, cfg), {})
+            step = make_train_step(loss, optimizer, TrainConfig())
+            opt_shapes = jax.eval_shape(optimizer.init, params)
+            opt_axes = opt_mod.state_axes("adamw", p_axes, params)
+            s_shapes = {"opt": opt_shapes, "step": _sds((), I32)}
+            s_axes = {"opt": opt_axes, "step": ()}
+
+            def fn(p, s, b):
+                with use_mesh(mesh):
+                    return step(p, s, b)
+
+            shardings = (
+                p_shard,
+                _shardings_from_axes(s_axes, s_shapes, mesh),
+                _shardings_from_axes(batch_axes, batch_shapes, mesh),
+            )
+            return fn, (params, s_shapes, batch_shapes), shardings, (0, 1)
+
+        if cell.kind == "serve":
+            batch = {"hist": _sds((B, cfg.hist_len), I32)}
+
+            def fn(p, b):
+                with use_mesh(mesh):
+                    return mind_mod.serve_step(p, b, cfg)
+
+            shard = {"hist": NamedSharding(mesh, logical_spec((B, cfg.hist_len), ("batch", None), mesh))}
+            return fn, (params, batch), (p_shard, shard), ()
+
+        # retrieval
+        Nc = cell.meta["n_candidates"]
+        batch = {
+            "hist": _sds((B, cfg.hist_len), I32),
+            "candidates": _sds((Nc,), I32),
+        }
+
+        def fn(p, b):
+            with use_mesh(mesh):
+                return mind_mod.retrieval_step(p, b, cfg)
+
+        shard = {
+            "hist": NamedSharding(mesh, logical_spec((B, cfg.hist_len), ("batch", None), mesh)),
+            "candidates": NamedSharding(mesh, logical_spec((Nc,), ("candidates",), mesh)),
+        }
+        return fn, (params, batch), (p_shard, shard), ()
+
+    def model_flops(self, cell_name: str) -> float:
+        cell = self.cells[cell_name]
+        cfg = self.cfg
+        B = cell.meta["batch"]
+        d, K, H = cfg.embed_dim, cfg.n_interests, cfg.hist_len
+        tower = B * (
+            2.0 * H * d * d                      # bilinear
+            + cfg.capsule_iters * 2 * 2.0 * K * H * d
+            + 2 * 2.0 * K * d * 4 * d            # interest MLP
+        )
+        if cell.kind == "train":
+            return 3.0 * (tower + 2.0 * B * (1 + cfg.n_negatives) * d)
+        if cell.kind == "retrieval":
+            return tower + 2.0 * B * K * cell.meta["n_candidates"] * d
+        return tower
+
+    def smoke(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        cfg = dataclasses.replace(self.cfg, n_items=500, hist_len=12, n_negatives=16)
+        params = mind_mod.init_mind(jax.random.PRNGKey(seed), cfg)
+        B = 4
+        batch = {
+            "hist": jnp.asarray(rng.integers(0, 500, (B, 12)), I32),
+            "target": jnp.asarray(rng.integers(1, 500, (B,)), I32),
+            "negatives": jnp.asarray(rng.integers(1, 500, (B, 16)), I32),
+        }
+        loss = mind_mod.train_loss(params, batch, cfg)
+        grads = jax.grad(mind_mod.train_loss)(params, batch, cfg)
+        interests = mind_mod.user_tower(params, batch["hist"], cfg)
+        return {
+            "loss": float(loss),
+            "interests_shape": tuple(interests.shape),
+            "finite": bool(jnp.isfinite(interests).all())
+            and all(bool(jnp.isfinite(l).all()) for l in jax.tree_util.tree_leaves(grads)),
+        }

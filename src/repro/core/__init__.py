@@ -1,0 +1,12 @@
+"""Kairos core: temporal graph model, TGER time-first index, selective
+indexing, and the TemporalEdgeMap programming primitives."""
+from repro.core.temporal_graph import TemporalGraph, from_edges  # noqa: F401
+from repro.core.predicates import OrderingPredicateType  # noqa: F401
+from repro.core.tger import TGERIndex, build_tger  # noqa: F401
+from repro.core.selective import CostModel, decide_access  # noqa: F401
+from repro.core.edgemap import (  # noqa: F401
+    temporal_edge_map,
+    vertex_map,
+    frontier_from_sources,
+    plan_access,
+)

@@ -1,0 +1,66 @@
+"""Temporal BFS: minimum-hop temporal-respecting paths.
+
+Round h maintains the best (earliest) arrival achievable within <= h hops;
+a vertex's hop count is the first round it becomes reachable.  Exact for
+min-hop because arrival-per-round is the min over all <= h-hop paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edgemap import INT_INF, frontier_from_sources, temporal_edge_map
+from repro.core.predicates import OrderingPredicateType, edge_follows
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pred", "access", "budget", "max_rounds")
+)
+def temporal_bfs(
+    g: TemporalGraph,
+    source,
+    window: Tuple[jax.Array, jax.Array],
+    tger: Optional[TGERIndex] = None,
+    *,
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    access: str = "scan",
+    budget: int = 0,
+    max_rounds: int = 0,
+):
+    """Returns (hops[V], arrival[V]); hops = INT_INF when unreachable."""
+    V = g.n_vertices
+    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
+    hops0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(0)
+    frontier0 = frontier_from_sources(V, source)
+    max_rounds = max_rounds or V + 1
+
+    def relax(edges, arr_src):
+        ok = edge_follows(pred, arr_src, edges.t_start, edges.t_end)
+        return edges.t_end, ok
+
+    def cond(carry):
+        rnd, (_, _, frontier) = carry
+        return (rnd < max_rounds) & jnp.any(frontier)
+
+    def body(carry):
+        rnd, (arrival, hops, frontier) = carry
+        cand, _ = temporal_edge_map(
+            g, (ta, tb), frontier, arrival, relax, "min",
+            tger=tger, access=access, budget=budget,
+        )
+        new_arrival = jnp.minimum(arrival, cand)
+        improved = new_arrival < arrival
+        newly_reached = improved & (hops == INT_INF)
+        new_hops = jnp.where(newly_reached, rnd + 1, hops)
+        return rnd + 1, (new_arrival, new_hops, improved)
+
+    _, (arrival, hops, _) = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), (arrival0, hops0, frontier0))
+    )
+    return hops, arrival

@@ -1,0 +1,111 @@
+"""Temporal k-core: iterative peeling of vertices whose (undirected) degree
+within the query window drops below k; plus full coreness decomposition."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edgemap import index_view, scan_view, segment_combine
+from repro.core.predicates import in_window
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex
+
+
+@functools.partial(jax.jit, static_argnames=("access", "budget", "max_rounds"))
+def temporal_kcore(
+    g: TemporalGraph,
+    k,
+    window: Tuple[jax.Array, jax.Array],
+    tger: Optional[TGERIndex] = None,
+    *,
+    access: str = "scan",
+    budget: int = 0,
+    max_rounds: int = 0,
+) -> jax.Array:
+    """alive[V] bool: membership of the temporal k-core within the window."""
+    V = g.n_vertices
+    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    edges = (
+        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
+    )
+    valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+    alive0 = jnp.ones(V, dtype=bool)
+    max_rounds = max_rounds or V + 1
+    k = jnp.asarray(k, jnp.int32)
+
+    def cond(carry):
+        rnd, alive, changed = carry
+        return (rnd < max_rounds) & changed
+
+    def body(carry):
+        rnd, alive, _ = carry
+        live_edge = valid0 & alive[edges.src] & alive[edges.dst]
+        ones = live_edge.astype(jnp.int32)
+        deg = (
+            segment_combine(ones, edges.dst, V, "sum")
+            + segment_combine(ones, edges.src, V, "sum")
+        )
+        new_alive = alive & (deg >= k)
+        changed = jnp.any(new_alive != alive)
+        return rnd + 1, new_alive, changed
+
+    _, alive, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), alive0, jnp.bool_(True))
+    )
+    return alive
+
+
+@functools.partial(jax.jit, static_argnames=("access", "budget", "k_max"))
+def temporal_coreness(
+    g: TemporalGraph,
+    window: Tuple[jax.Array, jax.Array],
+    tger: Optional[TGERIndex] = None,
+    *,
+    k_max: int = 64,
+    access: str = "scan",
+    budget: int = 0,
+) -> jax.Array:
+    """core[v] = max k such that v belongs to the temporal k-core within the
+    window (full decomposition).  Peeling reuses the (k-1)-core's alive set
+    — the k-core is a subset — so total work is O(k_max * rounds * E')."""
+    V = g.n_vertices
+    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    edges = (
+        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
+    )
+    valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+
+    def peel_to(alive, k):
+        def cond(carry):
+            alive_, changed = carry
+            return changed
+
+        def body(carry):
+            alive_, _ = carry
+            live_edge = valid0 & alive_[edges.src] & alive_[edges.dst]
+            ones = live_edge.astype(jnp.int32)
+            deg = (
+                segment_combine(ones, edges.dst, V, "sum")
+                + segment_combine(ones, edges.src, V, "sum")
+            )
+            new_alive = alive_ & (deg >= k)
+            return new_alive, jnp.any(new_alive != alive_)
+
+        alive, _ = jax.lax.while_loop(cond, body, (alive, jnp.bool_(True)))
+        return alive
+
+    def step(carry, k):
+        alive, core = carry
+        alive = peel_to(alive, k)
+        core = jnp.where(alive, k, core)
+        return (alive, core), None
+
+    alive0 = jnp.ones(V, dtype=bool)
+    core0 = jnp.zeros(V, jnp.int32)
+    (alive, core), _ = jax.lax.scan(
+        step, (alive0, core0), jnp.arange(1, k_max + 1, dtype=jnp.int32)
+    )
+    return core

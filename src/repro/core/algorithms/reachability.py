@@ -1,0 +1,88 @@
+"""Time-constrained reachability under the OVERLAPS ordering predicate
+(paper Table 1: influence propagation / information cascades).
+
+Overlaps chains require start(A) <= start(B) and end(A) <= end(B) for
+consecutive edges — both interval ends participate, so per-vertex state is
+the (start, end) of the last edge on the path.  Minimizing both
+coordinates is a two-objective problem; we keep the lexicographically
+minimal (end, start) pair per vertex — maintained with a two-pass
+segment-min (min end, then min start among end-achievers) since JAX runs
+32-bit and packing is unavailable.  This is SOUND (every reported vertex
+is truly overlaps-reachable; the witness chain is materialized by the
+relaxation) and exact whenever minimizing end never sacrifices a needed
+start (e.g. co-ordered starts/ends — property-tested; the exhaustive
+Pareto oracle lives in core/reference.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edgemap import (
+    INT_INF,
+    frontier_from_sources,
+    index_view,
+    scan_view,
+    segment_combine,
+)
+from repro.core.predicates import in_window
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex
+
+
+@functools.partial(jax.jit, static_argnames=("access", "budget", "max_rounds"))
+def overlaps_reachability(
+    g: TemporalGraph,
+    source,
+    window: Tuple[jax.Array, jax.Array],
+    tger: Optional[TGERIndex] = None,
+    *,
+    access: str = "scan",
+    budget: int = 0,
+    max_rounds: int = 0,
+):
+    """Returns (reachable[V] bool, last_start[V], last_end[V])."""
+    V = g.n_vertices
+    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    edges = (
+        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
+    )
+    base_ok = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+    max_rounds = max_rounds or V + 1
+
+    # state: (last_end, last_start); source seeds with (ta, ta) — its first
+    # edge only needs ts >= ta, te >= ta, which the window implies.
+    end0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
+    start0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
+    frontier0 = frontier_from_sources(V, source)
+
+    def cond(carry):
+        rnd, _, _, frontier = carry
+        return (rnd < max_rounds) & jnp.any(frontier)
+
+    def body(carry):
+        rnd, s_end, s_start, frontier = carry
+        pe = s_end[edges.src]
+        ps = s_start[edges.src]
+        ok = (
+            base_ok & frontier[edges.src] & (pe < INT_INF)
+            & (ps <= edges.t_start) & (pe <= edges.t_end)
+        )
+        # two-pass lexicographic min: (1) min end per dst, (2) min start
+        # among the edges achieving that end.
+        min_end = segment_combine(edges.t_end, edges.dst, V, "min", mask=ok)
+        achieves = ok & (edges.t_end == min_end[edges.dst])
+        min_start = segment_combine(edges.t_start, edges.dst, V, "min", mask=achieves)
+        better = (min_end < s_end) | ((min_end == s_end) & (min_start < s_start))
+        new_end = jnp.where(better, min_end, s_end)
+        new_start = jnp.where(better, min_start, s_start)
+        return rnd + 1, new_end, new_start, better
+
+    _, s_end, s_start, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), end0, start0, frontier0)
+    )
+    reachable = s_end < INT_INF
+    return reachable, jnp.where(reachable, s_start, 0), jnp.where(reachable, s_end, 0)

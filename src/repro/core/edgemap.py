@@ -1,0 +1,266 @@
+"""TemporalEdgeMap / VertexMap — the Ligra-style programming model extended
+to time (paper §4.4, Table 2), in SPMD/XLA form.
+
+Frontier representation: a dense boolean mask over vertices (CPU Ligra
+switches between sparse and dense frontiers; on TPU the dense form is the
+vectorizable one, and frontier emptiness is a cheap ``jnp.any``).
+
+Two access paths (selective indexing, paper §5):
+
+  * scan  — masked segment-reduce over all edges (the Temporal-Ligra [34]
+            baseline the paper compares against);
+  * index — TGER time-first gather of a static budget of window edges,
+            then the same masked segment-reduce over K << E candidates.
+
+Both paths are semantically identical (property-tested); they differ only
+in work, which is the paper's entire design point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
+from repro.core.selective import AccessDecision, CostModel, decide_access
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex, gather_window_edges, window_range
+
+INT_INF = jnp.iinfo(jnp.int32).max
+FLOAT_INF = jnp.float32(jnp.inf)
+
+
+class EdgeView(NamedTuple):
+    """A (possibly gathered) set of candidate temporal edges."""
+
+    src: jax.Array      # i32[K]
+    dst: jax.Array      # i32[K]
+    t_start: jax.Array  # i32[K]
+    t_end: jax.Array    # i32[K]
+    weight: jax.Array   # f32[K]
+    mask: jax.Array     # bool[K] — structural validity (gather padding)
+
+
+def scan_view(g: TemporalGraph) -> EdgeView:
+    return EdgeView(
+        g.src, g.dst, g.t_start, g.t_end, g.weight,
+        jnp.ones(g.n_edges, dtype=bool),
+    )
+
+
+def index_view(g: TemporalGraph, idx: TGERIndex, window, budget: int) -> EdgeView:
+    """Gather the <=budget edges whose start time lies in the window, via the
+    global time-first permutation: O(log E) search + O(budget) gather."""
+    lo, hi = window_range(idx, window[0], window[1])
+    eids, pos = gather_window_edges(idx, lo, budget)
+    mask = pos < hi
+    return EdgeView(
+        g.src[eids], g.dst[eids], g.t_start[eids], g.t_end[eids],
+        g.weight[eids], mask,
+    )
+
+
+def hybrid_view(g: TemporalGraph, idx: TGERIndex, window,
+                per_vertex_budget: int) -> EdgeView:
+    """Heavy/light per-vertex-class access (paper §5 at vertex granularity).
+
+    Light edges (sources below the indexing cutoff) are scanned; each HEAVY
+    vertex contributes only its per-vertex TGER window range — a vectorized
+    ``bounded_searchsorted`` over its start-sorted T-CSR slice — gathered
+    under a shared static ``per_vertex_budget``.  Work is
+    O(E_light + H·(log deg + K)) instead of O(E): the skewed-hub regime the
+    paper's selective indexing targets.
+
+    XLA static-shape deviation (DESIGN.md §2): the paper lets an unselective
+    heavy vertex fall back to scanning its own adjacency; with static shapes
+    that costs the same as scanning everything, so here heavy vertices are
+    always index-accessed and completeness requires per_vertex_budget >=
+    each heavy vertex's in-window degree (callers size it from the
+    per-vertex SAT estimates; the view is exact whenever the budget covers —
+    property-tested).
+    """
+    from repro.core.tger import vertex_range
+
+    ws = jnp.asarray(window[0], jnp.int32)
+    we = jnp.asarray(window[1], jnp.int32)
+    # light partition: static gather of the unindexed-source edges
+    le = idx.light_eids
+    l_mask = jnp.arange(le.shape[0]) < idx.n_light_edges
+    l_view = (g.src[le], g.dst[le], g.t_start[le], g.t_end[le], g.weight[le], l_mask)
+
+    # heavy partition: per-vertex window ranges, budgeted gather
+    hv = jnp.maximum(idx.indexed_ids, 0)                       # [H]
+    lo, hi = vertex_range(g, hv, ws, we)                       # [H], [H]
+    pos = lo[:, None] + jnp.arange(per_vertex_budget)[None, :]  # [H, K]
+    h_mask = (pos < hi[:, None]) & (idx.indexed_ids >= 0)[:, None]
+    pos_c = jnp.minimum(pos, g.n_edges - 1).reshape(-1)
+    h_view = (
+        g.src[pos_c], g.dst[pos_c], g.t_start[pos_c], g.t_end[pos_c],
+        g.weight[pos_c], h_mask.reshape(-1),
+    )
+    return EdgeView(*[
+        jnp.concatenate([l, h]) for l, h in zip(l_view, h_view)
+    ])
+
+
+def hybrid_budget(g: TemporalGraph, idx: TGERIndex, window,
+                  floor: int = 16) -> int:
+    """Static per-vertex budget: the max in-window start-count over indexed
+    vertices (exact, host-side O(H log deg)), rounded to a power of two.
+    Guarantees hybrid_view completeness for this window."""
+    import numpy as np
+
+    if idx.n_indexed == 0:
+        return floor
+    ts = np.asarray(g.t_start)
+    off = np.asarray(g.out_offsets)
+    ws, we = int(window[0]), int(window[1])
+    worst = floor
+    for v in np.asarray(idx.indexed_ids):
+        if v < 0:
+            continue
+        sl = ts[off[v]: off[v + 1]]
+        cnt = int(np.searchsorted(sl, we, side="right")
+                  - np.searchsorted(sl, ws, side="left"))
+        worst = max(worst, cnt)
+    return 1 << (worst - 1).bit_length() if worst > 1 else 1
+
+
+def _identity(combine: str, dtype) -> jax.Array:
+    if combine == "min":
+        return jnp.array(INT_INF if jnp.issubdtype(dtype, jnp.integer) else jnp.inf, dtype)
+    if combine == "max":
+        return jnp.array(
+            jnp.iinfo(jnp.int32).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf,
+            dtype,
+        )
+    if combine == "sum":
+        return jnp.array(0, dtype)
+    raise ValueError(combine)
+
+
+def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=None):
+    """Masked segment-reduce; invalid lanes contribute the identity."""
+    ident = _identity(combine, values.dtype)
+    if mask is not None:
+        m = mask
+        while m.ndim < values.ndim:
+            m = m[..., None]
+        values = jnp.where(m, values, ident)
+        # route invalid lanes to segment 0 (still identity-valued, harmless)
+        segment_ids = jnp.where(mask, segment_ids, 0)
+    fn = dict(
+        min=jax.ops.segment_min, max=jax.ops.segment_max, sum=jax.ops.segment_sum
+    )[combine]
+    # segment_min/max fill empty segments with the dtype's max/min (the
+    # identity), segment_sum with 0 — identity semantics hold without fixup.
+    return fn(values, segment_ids, num_segments=num_segments)
+
+
+RelaxFn = Callable[[EdgeView, jax.Array], Tuple[jax.Array, jax.Array]]
+# relax(edges, src_state_gathered) -> (candidate_values[K,...], extra_valid[K])
+
+
+def temporal_edge_map(
+    g: TemporalGraph,
+    window: Tuple[jax.Array, jax.Array],
+    frontier: jax.Array,            # bool[V]
+    src_state,                      # pytree of [V, ...] arrays gathered at source side
+    relax: RelaxFn,
+    combine: str,
+    *,
+    pred: Optional[OrderingPredicateType] = None,
+    direction: str = "out",         # 'out': reduce into dst; 'in': reduce into src
+    tger: Optional[TGERIndex] = None,
+    access: str = "scan",           # 'scan' | 'index'
+    budget: int = 0,
+    check_window: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply one round of temporal edge relaxation.
+
+    Returns (combined[V, ...], touched[V]) where ``touched`` marks segments
+    that received at least one valid contribution.  The ordering predicate
+    is evaluated inside ``relax`` (it needs algorithm state); ``pred`` is
+    accepted for symmetry with Table 2 and handed to relax via closure by
+    the algorithm implementations.
+    """
+    if access == "index":
+        if tger is None or budget <= 0:
+            raise ValueError("index access requires a TGER and a positive budget")
+        edges = index_view(g, tger, window, budget)
+    elif access == "hybrid":
+        if tger is None or budget <= 0:
+            raise ValueError("hybrid access requires a TGER and a per-vertex budget")
+        edges = hybrid_view(g, tger, window, budget)
+    else:
+        edges = scan_view(g)
+
+    if direction == "out":
+        from_v, to_v = edges.src, edges.dst
+    elif direction == "in":
+        from_v, to_v = edges.dst, edges.src
+    else:
+        raise ValueError(direction)
+
+    valid = edges.mask & frontier[from_v]
+    if check_window:
+        valid &= in_window(edges.t_start, edges.t_end, window[0], window[1])
+
+    gathered = jax.tree_util.tree_map(lambda a: a[from_v], src_state)
+    cand, extra = relax(edges, gathered)
+    valid &= extra
+
+    out = segment_combine(cand, to_v, g.n_vertices, combine, mask=valid)
+    touched = segment_combine(
+        valid.astype(jnp.int32), to_v, g.n_vertices, "sum", mask=None
+    ) > 0
+    return out, touched
+
+
+def vertex_map(frontier: jax.Array, fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """VertexMap (Table 2): new frontier = {u in U | F(u)}; F vectorized."""
+    keep = fn(jnp.arange(frontier.shape[0]))
+    return frontier & keep
+
+
+def frontier_from_sources(n_vertices: int, sources) -> jax.Array:
+    f = jnp.zeros(n_vertices, dtype=bool)
+    return f.at[jnp.asarray(sources)].set(True)
+
+
+def frontier_nonempty(frontier: jax.Array) -> jax.Array:
+    return jnp.any(frontier)
+
+
+def plan_access(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    window,
+    model: CostModel = CostModel(),
+    access: str = "auto",
+) -> AccessDecision:
+    """Host-side selective-indexing decision for a whole algorithm run
+    (window is constant across rounds, so one decision serves all rounds)."""
+    if access in ("scan", "index"):
+        forced = access
+    else:
+        forced = None
+    if tger is None:
+        return AccessDecision("scan", 0, float(g.n_edges), 1.0, 0.0, 0.0)
+    return decide_access(tger, g.n_edges, (int(window[0]), int(window[1])), model, force=forced)
+
+
+__all__ = [
+    "EdgeView",
+    "scan_view",
+    "index_view",
+    "segment_combine",
+    "temporal_edge_map",
+    "vertex_map",
+    "frontier_from_sources",
+    "frontier_nonempty",
+    "plan_access",
+    "INT_INF",
+]

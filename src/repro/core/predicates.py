@@ -1,0 +1,66 @@
+"""Allen-algebra ordering predicates (paper §2.2, §4.1).
+
+A temporal path is valid when every consecutive edge pair (A, B) satisfies
+the configured ordering predicate.  In frontier-relaxation form the "A"
+side is summarized by the per-vertex state (e.g. the arrival time at the
+edge's source), so each predicate is expressed as a test between a source
+scalar and the candidate edge's interval.
+
+  Succeeds:          end(A) <= start(B)
+  StrictlySucceeds:  end(A) <  start(B)
+  Overlaps:          start(A) <= start(B) and end(A) <= end(B)
+                     (B extends past A while sharing time; both interval
+                      ends participate, so the relaxation carries the
+                      source interval's (start, end)).
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+
+class OrderingPredicateType(enum.Enum):
+    SUCCEEDS = "succeeds"
+    STRICTLY_SUCCEEDS = "strictly_succeeds"
+    OVERLAPS = "overlaps"
+
+
+def edge_follows(
+    pred: OrderingPredicateType,
+    src_end,
+    edge_start,
+    edge_end,
+    src_start=None,
+):
+    """Vectorized: may edge B=(edge_start, edge_end) follow a path whose last
+    edge A ended at ``src_end`` (and started at ``src_start``)?"""
+    if pred is OrderingPredicateType.SUCCEEDS:
+        return src_end <= edge_start
+    if pred is OrderingPredicateType.STRICTLY_SUCCEEDS:
+        return src_end < edge_start
+    if pred is OrderingPredicateType.OVERLAPS:
+        if src_start is None:
+            raise ValueError("OVERLAPS needs the source interval start")
+        return (src_start <= edge_start) & (src_end <= edge_end)
+    raise ValueError(pred)
+
+
+def interval_pair_satisfies(pred: OrderingPredicateType, a_start, a_end, b_start, b_end):
+    """OrderingPredicate(A, B, T) from Table 2 — explicit two-interval form."""
+    return edge_follows(pred, a_end, b_start, b_end, src_start=a_start)
+
+
+def in_window(t_start, t_end, window_start, window_end):
+    """Edge validity against the query window [window_start, window_end]:
+    the edge's interval must lie within the window (Alg. 2 lines 2-3 use
+    t_s >= t_a and t_e <= t_b)."""
+    return (t_start >= window_start) & (t_end <= window_end)
+
+
+__all__ = [
+    "OrderingPredicateType",
+    "edge_follows",
+    "interval_pair_satisfies",
+    "in_window",
+]

@@ -1,0 +1,156 @@
+"""Selective indexing: cost model + access-method dispatch (paper §5).
+
+Paper Eq. 1-3:
+
+    T_v = c  * [log(deg(v)) + k]        (TGER / index access)
+    S_v = c' * deg(v)                   (T-CSR parallel scan)
+    C_v = T_v  if beta <= theta_sel else S_v,   beta = k / m
+
+with ``k`` estimated by the 2D density histogram (SAT here, O(1)).
+
+TPU granularity adaptation (DESIGN.md §2): per-vertex branching is hostile
+to SPMD execution, so the decision is made once per edgemap *call* (the
+query window is fixed for the lifetime of an algorithm run) using the
+global histogram, choosing between
+
+    scan path:  masked segment-reduce over all E edges       cost c'*E
+    index path: searchsorted + gather of K budget edges      cost c*(log2 E + K)
+
+``K`` is the estimated cardinality rounded up to a power-of-two "budget
+ladder" rung so each rung compiles exactly once.  A per-vertex-class split
+(heavy/light partitions) is layered on top in the distributed engine.
+
+Cost constants ``c``/``c'`` are measured, not assumed — see
+``calibrate_constants`` and benchmarks/bench_selective.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import estimate_window
+from repro.core.tger import TGERIndex
+
+# Defaults "derived experimentally" (paper §5.1): the scan path streams ~4
+# int32 fields per edge through the VPU while the index path pays a gather
+# per edge; on both TPU and the CPU emulator the gather costs ~4-6x a
+# streamed element.  theta_sel: paper finds crossover between 10% and 20%.
+DEFAULT_C_INDEX = 5.0
+DEFAULT_C_SCAN = 1.0
+DEFAULT_THETA_SEL = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    c_index: float = DEFAULT_C_INDEX
+    c_scan: float = DEFAULT_C_SCAN
+    theta_sel: float = DEFAULT_THETA_SEL
+    # safety factor on the estimated cardinality before rounding to a rung —
+    # under-budgeting would drop edges, so we over-provision.
+    budget_slack: float = 1.25
+    max_budget_rungs: int = 32
+
+    def index_cost(self, n_edges: int, k: float) -> float:
+        return self.c_index * (math.log2(max(n_edges, 2)) + k)
+
+    def scan_cost(self, n_edges: int) -> float:
+        return self.c_scan * n_edges
+
+    def choose(self, n_edges: int, k_est: float) -> str:
+        """Paper Eq. 3 at call granularity: index iff selective enough AND
+        the modeled index cost undercuts the scan."""
+        beta = k_est / max(n_edges, 1)
+        if beta <= self.theta_sel and self.index_cost(n_edges, k_est) < self.scan_cost(n_edges):
+            return "index"
+        return "scan"
+
+
+def budget_for(k_est: float, n_edges: int, model: CostModel) -> int:
+    """Round the (slack-inflated) estimate up to a power-of-two rung,
+    clamped to [64, next_pow2(E)] so compilation count stays bounded."""
+    want = max(int(k_est * model.budget_slack) + 1, 64)
+    rung = 1 << (want - 1).bit_length()
+    cap = 1 << max(int(n_edges - 1).bit_length(), 6)
+    return min(rung, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessDecision:
+    method: str            # "scan" | "index"
+    budget: int            # gather budget (index path only)
+    k_est: float
+    selectivity: float
+    index_cost: float
+    scan_cost: float
+
+
+def decide_access(
+    idx: TGERIndex,
+    n_edges: int,
+    window: Tuple[int, int],
+    model: CostModel = CostModel(),
+    force: Optional[str] = None,
+) -> AccessDecision:
+    """Runtime access-method decision for a query window (Figure 6's decision
+    tree at call granularity).  Host-side: returns static method + budget so
+    the jitted edgemap specializes per rung."""
+    k_est = float(estimate_window(idx.global_hist, window[0], window[1]))
+    beta = k_est / max(n_edges, 1)
+    b = budget_for(k_est, n_edges, model)
+    dec_method = model.choose(n_edges, k_est) if force is None else force
+    if dec_method == "index" and b >= n_edges:
+        dec_method = "scan"  # budget degenerated to a full scan
+    return AccessDecision(
+        method=dec_method,
+        budget=b,
+        k_est=k_est,
+        selectivity=beta,
+        index_cost=model.index_cost(n_edges, k_est),
+        scan_cost=model.scan_cost(n_edges),
+    )
+
+
+def per_vertex_decisions(
+    idx: TGERIndex,
+    degrees,
+    window: Tuple[int, int],
+    model: CostModel = CostModel(),
+):
+    """Vectorized paper-granularity decision for every *indexed* vertex:
+    returns (use_index[H] bool, k_est[H]).  Used by the estimator-accuracy
+    benchmark (§6.5) and by the heavy/light split edgemap."""
+    from repro.core.histogram import Histogram2D
+
+    k_est = jax.vmap(
+        lambda sat, se, de: estimate_window(
+            Histogram2D(sat, se, de), window[0], window[1]
+        )
+    )(idx.vertex_hist.sat, idx.vertex_hist.start_edges, idx.vertex_hist.dur_edges)
+    deg = jnp.asarray(degrees)[jnp.maximum(idx.indexed_ids, 0)].astype(jnp.float32)
+    beta = k_est / jnp.maximum(deg, 1.0)
+    t_v = model.c_index * (jnp.log2(jnp.maximum(deg, 2.0)) + k_est)
+    s_v = model.c_scan * deg
+    use_index = (beta <= model.theta_sel) & (t_v < s_v)
+    return use_index, k_est
+
+
+def calibrate_constants(scan_time_per_edge: float, index_time_per_edge: float) -> CostModel:
+    """Build a CostModel from measured per-edge costs (benchmarks feed this)."""
+    c_scan = 1.0
+    c_index = max(index_time_per_edge / max(scan_time_per_edge, 1e-12), 1e-3)
+    return CostModel(c_index=c_index, c_scan=c_scan)
+
+
+__all__ = [
+    "CostModel",
+    "AccessDecision",
+    "decide_access",
+    "per_vertex_decisions",
+    "budget_for",
+    "calibrate_constants",
+]

@@ -1,0 +1,141 @@
+"""Temporal graph data model (paper §2.1) and T-CSR storage (paper §4.2).
+
+A temporal graph G = (V, E, T, tau[, w]): each directed edge carries a
+discrete validity interval [t_start, t_end] and an optional weight.
+
+Storage is the paper's T-CSR: standard CSR arrays extended with parallel
+``t_start`` / ``t_end`` arrays, edges sorted by ``(src, t_start)``.  The
+in-edge view is a *permutation* into the same storage (O(m) total space,
+matching the paper's storage-efficiency claim for TGER + T-CSR).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF_TIME = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TemporalGraph:
+    """T-CSR temporal graph. All arrays are device arrays (pytree leaves).
+
+    Edge arrays are sorted by (src, t_start); ``out_offsets[v]`` is the first
+    edge of vertex ``v``.  ``in_perm`` permutes edge ids into (dst, t_start)
+    order with ``in_offsets`` the matching offsets, giving the in-edge view
+    without duplicating edge payloads.
+    """
+
+    # --- edge payload, (src, t_start)-sorted -------------------------------
+    src: jax.Array          # i32[E]
+    dst: jax.Array          # i32[E]
+    t_start: jax.Array      # i32[E]
+    t_end: jax.Array        # i32[E]
+    weight: jax.Array       # f32[E]
+    # --- CSR offsets --------------------------------------------------------
+    out_offsets: jax.Array  # i32[V+1]
+    # --- in-edge view (permutation into the arrays above) ------------------
+    in_perm: jax.Array      # i32[E]
+    in_offsets: jax.Array   # i32[V+1]
+    # --- static metadata ----------------------------------------------------
+    n_vertices: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def out_degree(self) -> jax.Array:
+        return self.out_offsets[1:] - self.out_offsets[:-1]
+
+    @property
+    def in_degree(self) -> jax.Array:
+        return self.in_offsets[1:] - self.in_offsets[:-1]
+
+    def in_edge_fields(self):
+        """Edge arrays gathered into (dst, t_start) order."""
+        p = self.in_perm
+        return self.dst[p], self.src[p], self.t_start[p], self.t_end[p], self.weight[p]
+
+
+def _build_offsets(sorted_keys: np.ndarray, n_vertices: int) -> np.ndarray:
+    counts = np.bincount(sorted_keys, minlength=n_vertices)
+    offsets = np.zeros(n_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return offsets.astype(np.int32)
+
+
+def from_edges(
+    src,
+    dst,
+    t_start,
+    t_end=None,
+    weight=None,
+    n_vertices: Optional[int] = None,
+    rng: Optional[np.random.Generator] = None,
+) -> TemporalGraph:
+    """Build a T-CSR TemporalGraph from raw (host) edge arrays.
+
+    If ``t_end`` is missing, it is sampled uniformly in
+    [t_start, t_start + span] following the paper (§6 Datasets: "if the
+    temporal edges in a dataset only have start times, then end time is
+    sampled from a uniform distribution, similar to [25, 26]").
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    t_start = np.asarray(t_start, dtype=np.int64)
+    n_e = src.shape[0]
+    if n_vertices is None:
+        n_vertices = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    if t_end is None:
+        rng = rng or np.random.default_rng(0)
+        span = max(int(t_start.max(initial=1) - t_start.min(initial=0)), 1)
+        dur = rng.integers(0, max(span // 10, 1) + 1, size=n_e)
+        t_end = t_start + dur
+    t_end = np.asarray(t_end, dtype=np.int64)
+    if weight is None:
+        weight = np.ones(n_e, dtype=np.float32)
+    weight = np.asarray(weight, dtype=np.float32)
+
+    # sort by (src, t_start): the T-CSR invariant that makes every per-vertex
+    # adjacency slice start-time-sorted (the per-vertex TGER entry point).
+    order = np.lexsort((t_start, src))
+    src, dst, t_start, t_end, weight = (
+        a[order] for a in (src, dst, t_start, t_end, weight)
+    )
+    out_offsets = _build_offsets(src, n_vertices)
+
+    # in-edge permutation: edge ids in (dst, t_start) order.
+    in_perm = np.lexsort((t_start, dst)).astype(np.int32)
+    in_offsets = _build_offsets(dst[in_perm], n_vertices)
+
+    return TemporalGraph(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        t_start=jnp.asarray(t_start, jnp.int32),
+        t_end=jnp.asarray(t_end, jnp.int32),
+        weight=jnp.asarray(weight),
+        out_offsets=jnp.asarray(out_offsets, jnp.int32),
+        in_perm=jnp.asarray(in_perm, jnp.int32),
+        in_offsets=jnp.asarray(in_offsets, jnp.int32),
+        n_vertices=int(n_vertices),
+        n_edges=int(n_e),
+    )
+
+
+def validate(g: TemporalGraph) -> None:
+    """Cheap structural invariants (used by tests and loaders)."""
+    assert g.src.shape == g.dst.shape == g.t_start.shape == g.t_end.shape
+    assert int(g.out_offsets[-1]) == g.n_edges
+    assert int(g.in_offsets[-1]) == g.n_edges
+    s = np.asarray(g.src)
+    assert (np.diff(s) >= 0).all(), "T-CSR must be src-sorted"
+    ts = np.asarray(g.t_start)
+    off = np.asarray(g.out_offsets)
+    for v in range(min(g.n_vertices, 64)):  # spot-check slices
+        sl = ts[off[v]: off[v + 1]]
+        assert (np.diff(sl) >= 0).all(), "per-vertex slice must be start-sorted"
+    assert bool((g.t_end >= g.t_start).all()), "intervals must be well-formed"

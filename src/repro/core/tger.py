@@ -1,0 +1,223 @@
+"""TGER — Temporal Graph Edge Registry (paper §3.1, §4.3), TPU adaptation.
+
+The paper's TGER is a per-vertex priority-search tree over edge intervals,
+answering 3-sided queries in O(log m + k).  Pointer trees do not map to
+TPU/XLA; the *time-first* insight does.  Our registry is:
+
+  1. a global permutation of edge ids sorted by t_start ("time-first"
+     layout) — a window query [ta, tb] is two ``searchsorted`` calls giving
+     a contiguous id range, from which the index-path edgemap gathers a
+     static power-of-two budget of candidate edges (O(log E + K) work
+     instead of O(E));
+
+  2. equi-depth time buckets over that sorted order (B boundaries), used by
+     the cost model for fast bucket-granular selectivity and by the
+     distributed engine for time-partitioned sharding;
+
+  3. per-vertex 3-sided queries: every T-CSR adjacency slice is already
+     start-sorted, so ``vertex_prefix`` returns (lo, hi) edge-id bounds for
+     "start <= bound" / "start in range" in O(log deg(v)) — the min-heap
+     axis of the paper's PST becomes a sorted prefix, the BST axis becomes
+     a masked filter on t_end over the prefix;
+
+  4. per-indexed-vertex SAT histograms (selective indexing: only vertices
+     with deg >= cutoff are indexed — paper's build-time threshold, 2k
+     edges by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.histogram import (
+    DEFAULT_BUCKETS,
+    Histogram2D,
+    build_histogram,
+    stack_histograms,
+)
+from repro.core.temporal_graph import TemporalGraph
+
+DEFAULT_DEGREE_CUTOFF = 2048  # paper §5: "currently set to 2k edges"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TGERIndex:
+    # -- global time-first layout -------------------------------------------
+    perm_by_start: jax.Array    # i32[E] edge ids sorted by t_start
+    start_sorted: jax.Array     # i32[E] t_start in ascending order
+    bucket_bounds: jax.Array    # i32[B+1] equi-depth start-time boundaries
+    # -- global cardinality histogram (drives the per-call cost model) ------
+    global_hist: Histogram2D
+    # -- per-vertex selective index ------------------------------------------
+    indexed_ids: jax.Array      # i32[H] vertex ids with a TGER slot
+    vertex_hist: Histogram2D    # batched [H, nb+1, nb+1]
+    vertex_to_slot: jax.Array   # i32[V]; -1 when vertex not indexed
+    # -- heavy/light edge partition (hybrid edgemap) --------------------------
+    light_eids: jax.Array       # i32[E_light] edges whose src is NOT indexed
+    # -- static ---------------------------------------------------------------
+    degree_cutoff: int = dataclasses.field(metadata=dict(static=True))
+    n_indexed: int = dataclasses.field(metadata=dict(static=True))
+    n_buckets_time: int = dataclasses.field(metadata=dict(static=True))
+    n_light_edges: int = dataclasses.field(metadata=dict(static=True))
+
+
+def build_tger(
+    g: TemporalGraph,
+    degree_cutoff: int = DEFAULT_DEGREE_CUTOFF,
+    n_time_buckets: int = 64,
+    n_hist_buckets: int = DEFAULT_BUCKETS,
+    index_in_edges: bool = False,
+) -> TGERIndex:
+    """IndexVertices (paper Alg. 1): host-side parallel build.
+
+    The paper sorts each indexed vertex's edges by start time and recursively
+    builds a PST; we sort once globally (the T-CSR build already start-sorted
+    each slice) and materialize the global time-first permutation plus the
+    per-vertex histograms.
+    """
+    t_start = np.asarray(g.t_start)
+    t_end = np.asarray(g.t_end)
+    E = g.n_edges
+
+    perm = np.argsort(t_start, kind="stable").astype(np.int32)
+    start_sorted = t_start[perm]
+
+    # equi-depth buckets: boundaries at quantiles of the start-time order.
+    B = min(n_time_buckets, max(E, 1))
+    idx = np.linspace(0, max(E - 1, 0), B + 1).astype(np.int64)
+    bucket_bounds = start_sorted[idx] if E else np.zeros(B + 1, np.int64)
+
+    global_hist = build_histogram(t_start, t_end, n_hist_buckets)
+
+    # selective per-vertex indexing (out-degree by default; optionally also
+    # in-degree, per Alg. 1's omitted in-neighbor pass).
+    deg = np.asarray(g.out_degree)
+    if index_in_edges:
+        deg = np.maximum(deg, np.asarray(g.in_degree))
+    indexed = np.nonzero(deg >= degree_cutoff)[0].astype(np.int32)
+    offsets = np.asarray(g.out_offsets)
+    hists = []
+    for v in indexed:
+        lo, hi = int(offsets[v]), int(offsets[v + 1])
+        hists.append(build_histogram(t_start[lo:hi], t_end[lo:hi], n_hist_buckets))
+    if not hists:  # keep a 1-slot placeholder so shapes stay static
+        hists = [build_histogram(np.zeros(0), np.zeros(0), n_hist_buckets)]
+        vertex_hist = stack_histograms(hists)
+        indexed_arr = np.full(1, -1, np.int32)
+    else:
+        vertex_hist = stack_histograms(hists)
+        indexed_arr = indexed
+
+    vertex_to_slot = np.full(g.n_vertices, -1, np.int32)
+    for slot, v in enumerate(indexed):
+        vertex_to_slot[v] = slot
+
+    # heavy/light partition: light = edges of unindexed sources (scanned
+    # every round by the hybrid edgemap); heavy vertices' edges are reached
+    # through their per-vertex start-sorted T-CSR slices.
+    src_np = np.asarray(g.src)
+    is_heavy_src = vertex_to_slot[src_np] >= 0
+    light_eids = np.nonzero(~is_heavy_src)[0].astype(np.int32)
+    if light_eids.size == 0:
+        light_eids = np.zeros(1, np.int32)  # keep shapes non-empty
+        n_light = 0
+    else:
+        n_light = int(light_eids.size)
+
+    return TGERIndex(
+        perm_by_start=jnp.asarray(perm),
+        start_sorted=jnp.asarray(start_sorted, jnp.int32),
+        bucket_bounds=jnp.asarray(bucket_bounds, jnp.int32),
+        global_hist=global_hist,
+        indexed_ids=jnp.asarray(indexed_arr),
+        vertex_hist=vertex_hist,
+        vertex_to_slot=jnp.asarray(vertex_to_slot),
+        light_eids=jnp.asarray(light_eids),
+        degree_cutoff=int(degree_cutoff),
+        n_indexed=int(len(indexed)),
+        n_buckets_time=int(B),
+        n_light_edges=n_light,
+    )
+
+
+# --------------------------------------------------------------------------
+# query primitives
+# --------------------------------------------------------------------------
+
+def window_range(idx: TGERIndex, window_start, window_end):
+    """Global 3-sided query on the heap (start-time) axis: positions [lo, hi)
+    in the time-first order whose start lies in [window_start, window_end].
+    O(log E)."""
+    lo = jnp.searchsorted(idx.start_sorted, jnp.asarray(window_start, jnp.int32), side="left")
+    hi = jnp.searchsorted(idx.start_sorted, jnp.asarray(window_end, jnp.int32), side="right")
+    return lo, hi
+
+
+def gather_window_edges(idx: TGERIndex, lo, budget: int):
+    """Gather a static ``budget`` of edge ids from the time-first order
+    starting at ``lo``; callers mask positions >= hi.  Returns (edge_ids,
+    positions) with out-of-range positions clamped."""
+    pos = lo + jnp.arange(budget, dtype=lo.dtype)
+    pos_c = jnp.minimum(pos, idx.start_sorted.shape[0] - 1)
+    return idx.perm_by_start[pos_c], pos
+
+
+def bounded_searchsorted(arr, lo, hi, value, side: str = "left", iters: int = 32):
+    """Binary search for ``value`` restricted to the (sorted) slice
+    arr[lo:hi], with static shapes: a fixed ``iters``-step bisection (any
+    slice length < 2**iters).  Vectorizes over lo/hi/value.  This is the
+    PST descent of the paper's TGER, flattened onto the VPU."""
+    value = jnp.asarray(value)
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+
+    def body(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        mv = arr[jnp.clip(mid, 0, arr.shape[0] - 1)]
+        go_right = (mv < value) if side == "left" else (mv <= value)
+        active = l < h
+        new_l = jnp.where(active & go_right, mid + 1, l)
+        new_h = jnp.where(active & ~go_right, mid, h)
+        return new_l, new_h
+
+    l, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return l
+
+
+def vertex_prefix(g: TemporalGraph, v, start_bound, strict: bool = False):
+    """Per-vertex 3-sided query, heap axis: edge-id range [lo, hi) of vertex
+    ``v``'s out-edges with t_start <= start_bound (or < when ``strict``).
+    O(log deg(v)) — the PST descent collapses to a bisection inside the
+    start-sorted T-CSR slice.  Vectorizes over ``v``/``start_bound``."""
+    lo = g.out_offsets[v]
+    hi = g.out_offsets[v + 1]
+    side = "left" if strict else "right"
+    pos = bounded_searchsorted(g.t_start, lo, hi, start_bound, side=side)
+    return lo, pos
+
+
+def vertex_range(g: TemporalGraph, v, start_lo, start_hi):
+    """Edge-id range of v's out-edges with t_start in [start_lo, start_hi].
+    Vectorizes over ``v``/bounds."""
+    lo0 = g.out_offsets[v]
+    hi0 = g.out_offsets[v + 1]
+    lo = bounded_searchsorted(g.t_start, lo0, hi0, start_lo, side="left")
+    hi = bounded_searchsorted(g.t_start, lo0, hi0, start_hi, side="right")
+    return lo, hi
+
+
+__all__ = [
+    "TGERIndex",
+    "build_tger",
+    "window_range",
+    "gather_window_edges",
+    "vertex_prefix",
+    "vertex_range",
+    "DEFAULT_DEGREE_CUTOFF",
+]

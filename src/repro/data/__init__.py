@@ -1,0 +1,1 @@
+from repro.data.generators import synthetic_temporal_graph, power_law_temporal_graph  # noqa: F401

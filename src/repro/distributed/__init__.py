@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    constrain,
+    logical_spec,
+    use_mesh,
+    current_mesh,
+)

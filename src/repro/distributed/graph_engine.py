@@ -1,0 +1,352 @@
+"""Distributed temporal-graph engine: edge-partitioned TemporalEdgeMap.
+
+Sharding model (DESIGN.md §3.4):
+
+  * edges   -> sharded over ("pod", "data")  — each device owns E/P edges;
+  * queries -> sharded over "model"          — multi-source batches are
+               embarrassingly parallel (the paper's 100-source sweeps);
+  * vertex state -> replicated within a query shard.
+
+One relaxation round = local masked segment-reduce over the device's edge
+shard + a single ``pmin``/``psum`` over the edge axes.  This preserves the
+paper's anti-message-passing argument at scale: the per-round communication
+is one associative combine of the [V] state, not per-edge messages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.edgemap import INT_INF
+
+EDGE_AXES = ("pod", "data")
+
+
+def _edge_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in EDGE_AXES if a in mesh.axis_names)
+
+
+def shard_edges(mesh: Mesh, *arrays):
+    """Pad edge arrays to the edge-shard multiple and device_put them."""
+    axes = _edge_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    out = []
+    for arr in arrays:
+        e = arr.shape[0]
+        pad = (-e) % n_shards
+        if pad:
+            arr = jnp.pad(arr, (0, pad), constant_values=0)
+        out.append(jax.device_put(arr, NamedSharding(mesh, P(axes))))
+    return out
+
+
+def make_ea_round(mesh: Mesh, n_vertices: int, strict: bool = False):
+    """Builds one distributed earliest-arrival relaxation round.
+
+    arrival: [S, V] (sources sharded over `model`), edge arrays: [E] sharded
+    over ("pod","data"), edge_valid: [E] bool (pre-masked padding).
+    Returns new arrival after one global relax.
+    """
+    axes = _edge_axes(mesh)
+    model_in_mesh = "model" in mesh.axis_names
+    src_spec = P("model" if model_in_mesh else None, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=src_spec,
+        check_vma=False,
+    )
+    def ea_round(arrival, src, dst, ts, te, evalid, window):
+        ta, tb = window[0], window[1]
+        arr_src = arrival[:, src]                       # [S_loc, E_loc]
+        follows = (arr_src < ts) if strict else (arr_src <= ts)
+        ok = (
+            evalid & (ts >= ta) & (te <= tb)
+        )[None, :] & follows & (arr_src < INT_INF)
+        cand = jnp.where(ok, te[None, :], INT_INF)
+        ids = jnp.where(ok, dst[None, :], 0)
+        partial = jax.vmap(
+            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
+        )(cand, ids)
+        combined = jax.lax.pmin(partial, axis_name=axes)
+        return jnp.minimum(arrival, combined)
+
+    return ea_round
+
+
+def make_ea_round_selective(mesh: Mesh, n_vertices: int, budget_per_shard: int,
+                            strict: bool = False):
+    """Distributed index-path round: each edge shard keeps its edges in
+    time-first (t_start-sorted) order, binary-searches the window bounds
+    locally, gathers its static per-shard budget of candidate edges, and
+    relaxes only those — per-device work O(log E_loc + K) instead of
+    O(E_loc), combined with the same single ``pmin``.  This is selective
+    indexing at shard granularity (DESIGN.md §2)."""
+    axes = _edge_axes(mesh)
+    model_in_mesh = "model" in mesh.axis_names
+    src_spec = P("model" if model_in_mesh else None, None)
+    K = budget_per_shard
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=src_spec,
+        check_vma=False,
+    )
+    def ea_round_idx(arrival, src, dst, ts, te, evalid, window):
+        ta, tb = window[0], window[1]
+        # local time-first search: ts is locally sorted (shard invariant)
+        lo = jnp.searchsorted(ts, ta, side="left")
+        hi = jnp.searchsorted(ts, tb, side="right")
+        pos = jnp.minimum(lo + jnp.arange(K), ts.shape[0] - 1)
+        in_win = (lo + jnp.arange(K)) < hi
+        s, d_, t1, t2, ev = src[pos], dst[pos], ts[pos], te[pos], evalid[pos]
+        arr_src = arrival[:, s]                          # [S_loc, K]
+        follows = (arr_src < t1) if strict else (arr_src <= t1)
+        ok = (ev & in_win & (t2 <= tb))[None, :] & follows & (arr_src < INT_INF)
+        cand = jnp.where(ok, t2[None, :], INT_INF)
+        ids = jnp.where(ok, d_[None, :], 0)
+        partial = jax.vmap(
+            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
+        )(cand, ids)
+        combined = jax.lax.pmin(partial, axis_name=axes)
+        return jnp.minimum(arrival, combined)
+
+    return ea_round_idx
+
+
+def sort_edges_by_time_per_shard(mesh: Mesh, src, dst, ts, te):
+    """Host-side: sort edges by t_start within each shard slice so the
+    selective round's local searchsorted is valid."""
+    import numpy as np
+
+    axes = _edge_axes(mesh)
+    n_shards = 1
+    for a in axes:
+        n_shards *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    e = src.shape[0]
+    pad = (-e) % n_shards
+    arrs = []
+    for arr in (src, dst, ts, te):
+        a = np.asarray(arr)
+        arrs.append(np.pad(a, (0, pad), constant_values=0))
+    src_p, dst_p, ts_p, te_p = arrs
+    valid = np.pad(np.ones(e, bool), (0, pad), constant_values=False)
+    per = (e + pad) // n_shards
+    for i in range(n_shards):
+        sl = slice(i * per, (i + 1) * per)
+        order = np.argsort(ts_p[sl], kind="stable")
+        for a in (src_p, dst_p, ts_p, te_p):
+            a[sl] = a[sl][order]
+        valid[sl] = valid[sl][order]
+    put = lambda a: jax.device_put(jnp.asarray(a), NamedSharding(mesh, P(axes)))
+    return put(src_p), put(dst_p), put(ts_p), put(te_p), put(valid)
+
+
+def make_pagerank_round(mesh: Mesh, n_vertices: int, damping: float = 0.85):
+    """One distributed temporal-PageRank power iteration (sum combine)."""
+    axes = _edge_axes(mesh)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    def pr_round(pr, src, dst, ts, te, evalid, inv_out_deg, window):
+        ta, tb = window[0], window[1]
+        ok = evalid & (ts >= ta) & (te <= tb)
+        contrib = jnp.where(ok, pr[src] * inv_out_deg[src], 0.0)
+        ids = jnp.where(ok, dst, 0)
+        partial = jax.ops.segment_sum(contrib, ids, num_segments=n_vertices)
+        agg = jax.lax.psum(partial, axis_name=axes)
+        return (1.0 - damping) / n_vertices + damping * agg
+
+    return pr_round
+
+
+def make_ea_round_sparse(mesh: Mesh, n_vertices: int, exchange_budget: int,
+                         strict: bool = False):
+    """Frontier-sparse exchange round (beyond-paper, EXPERIMENTS.md §Perf).
+
+    The dense round pmin's the full [S, V] state every round (V-sized wire
+    payload regardless of how few vertices changed).  Here each shard
+    relaxes locally, selects its K best *improvements* (vertex id, arrival)
+    — K a static budget — and all-gathers only those pairs; every shard
+    then applies the union with a local scatter-min.
+
+    Correctness: improvements not exchanged this round (budget overflow) are
+    recomputed from the unchanged local edges next round; each round commits
+    at least the K smallest outstanding arrivals per shard, so the fixpoint
+    loop converges to the same answer as the dense round (tested).  Mirrors
+    Ligra's dense->sparse frontier switch, applied to the wire.
+    """
+    axes = _edge_axes(mesh)
+    model_in_mesh = "model" in mesh.axis_names
+    src_spec = P("model" if model_in_mesh else None, None)
+    K = min(exchange_budget, n_vertices)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=src_spec,
+        check_vma=False,
+    )
+    def ea_round_sparse(arrival, src, dst, ts, te, evalid, window):
+        ta, tb = window[0], window[1]
+        arr_src = arrival[:, src]                       # [S_loc, E_loc]
+        follows = (arr_src < ts) if strict else (arr_src <= ts)
+        ok = (
+            evalid & (ts >= ta) & (te <= tb)
+        )[None, :] & follows & (arr_src < INT_INF)
+        cand = jnp.where(ok, te[None, :], INT_INF)
+        ids = jnp.where(ok, dst[None, :], 0)
+        partial = jax.vmap(
+            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
+        )(cand, ids)
+        improved = partial < arrival                    # [S_loc, V]
+        # K smallest improved arrivals per source (ties to INT_INF when not
+        # improved -> naturally excluded)
+        keyed = jnp.where(improved, partial, INT_INF)
+        neg_top, idx = jax.lax.top_k(-keyed, K)         # [S_loc, K]
+        vals = -neg_top
+        # exchange only the (idx, vals) pairs across the edge axes
+        g_idx = jax.lax.all_gather(idx, axis_name=axes, tiled=False)   # [P, S_loc, K]
+        g_val = jax.lax.all_gather(vals, axis_name=axes, tiled=False)
+        n_sh = g_idx.shape[0] if g_idx.ndim == 3 else 1
+        g_idx = g_idx.reshape(n_sh, *idx.shape)
+        g_val = g_val.reshape(n_sh, *vals.shape)
+
+        def apply_one(arr_row, idx_rows, val_rows):
+            flat_i = idx_rows.reshape(-1)
+            flat_v = val_rows.reshape(-1)
+            upd = jax.ops.segment_min(flat_v, flat_i, num_segments=n_vertices)
+            return jnp.minimum(arr_row, upd)
+
+        new = jax.vmap(apply_one, in_axes=(0, 1, 1))(
+            arrival, g_idx, g_val
+        )
+        return new
+
+    return ea_round_sparse
+
+
+def make_ea_round_selective_sparse(mesh: Mesh, n_vertices: int,
+                                   budget_per_shard: int, exchange_budget: int,
+                                   strict: bool = False):
+    """Selective indexing + frontier-sparse exchange composed: the TGER
+    gather bounds per-round *memory* traffic (only window edges touched) and
+    the top-K improvement exchange bounds per-round *wire* traffic.  This is
+    the fully optimized kairos round (EXPERIMENTS.md §Perf iteration 2)."""
+    axes = _edge_axes(mesh)
+    model_in_mesh = "model" in mesh.axis_names
+    src_spec = P("model" if model_in_mesh else None, None)
+    Kb = budget_per_shard
+    Kx = min(exchange_budget, n_vertices)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=src_spec,
+        check_vma=False,
+    )
+    def ea_round(arrival, src, dst, ts, te, evalid, window):
+        ta, tb = window[0], window[1]
+        lo = jnp.searchsorted(ts, ta, side="left")
+        hi = jnp.searchsorted(ts, tb, side="right")
+        pos = jnp.minimum(lo + jnp.arange(Kb), ts.shape[0] - 1)
+        in_win = (lo + jnp.arange(Kb)) < hi
+        s, d_, t1, t2, ev = src[pos], dst[pos], ts[pos], te[pos], evalid[pos]
+        arr_src = arrival[:, s]
+        follows = (arr_src < t1) if strict else (arr_src <= t1)
+        ok = (ev & in_win & (t2 <= tb))[None, :] & follows & (arr_src < INT_INF)
+        cand = jnp.where(ok, t2[None, :], INT_INF)
+        ids = jnp.where(ok, d_[None, :], 0)
+        partial = jax.vmap(
+            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
+        )(cand, ids)
+        improved = partial < arrival
+        keyed = jnp.where(improved, partial, INT_INF)
+        neg_top, idx = jax.lax.top_k(-keyed, Kx)
+        vals = -neg_top
+        g_idx = jax.lax.all_gather(idx, axis_name=axes, tiled=False)
+        g_val = jax.lax.all_gather(vals, axis_name=axes, tiled=False)
+        g_idx = g_idx.reshape(-1, *idx.shape)
+        g_val = g_val.reshape(-1, *vals.shape)
+
+        def apply_one(arr_row, idx_rows, val_rows):
+            upd = jax.ops.segment_min(
+                val_rows.reshape(-1), idx_rows.reshape(-1),
+                num_segments=n_vertices,
+            )
+            return jnp.minimum(arr_row, upd)
+
+        return jax.vmap(apply_one, in_axes=(0, 1, 1))(arrival, g_idx, g_val)
+
+    return ea_round
+
+
+def make_cc_round(mesh: Mesh, n_vertices: int):
+    """One distributed hash-min label-propagation round (temporal CC)."""
+    axes = _edge_axes(mesh)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    def cc_round(labels, src, dst, ts, te, evalid, window):
+        ta, tb = window[0], window[1]
+        ok = evalid & (ts >= ta) & (te <= tb)
+        big = jnp.iinfo(jnp.int32).max
+        fwd = jax.ops.segment_min(
+            jnp.where(ok, labels[src], big), jnp.where(ok, dst, 0),
+            num_segments=n_vertices,
+        )
+        bwd = jax.ops.segment_min(
+            jnp.where(ok, labels[dst], big), jnp.where(ok, src, 0),
+            num_segments=n_vertices,
+        )
+        partial = jnp.minimum(fwd, bwd)
+        combined = jax.lax.pmin(partial, axis_name=axes)
+        new = jnp.minimum(labels, combined)
+        return jnp.minimum(new, new[new])  # pointer jump
+
+    return cc_round
+
+
+def run_distributed_ea(
+    mesh: Mesh,
+    arrival0,             # [S, V] initialized (ta at sources, INF elsewhere)
+    edge_arrays,          # (src, dst, ts, te) already shard_edges'd
+    edge_valid,
+    window,
+    max_rounds: int = 64,
+    strict: bool = False,
+):
+    """Fixpoint loop around the distributed round (host loop: round count is
+    small — graph diameter — and each round is one jitted SPMD program)."""
+    n_vertices = arrival0.shape[-1]
+    round_fn = jax.jit(make_ea_round(mesh, n_vertices, strict))
+    src, dst, ts, te = edge_arrays
+    arrival = arrival0
+    for _ in range(max_rounds):
+        new = round_fn(arrival, src, dst, ts, te, edge_valid, window)
+        if bool(jnp.all(new == arrival)):
+            return new
+        arrival = new
+    return arrival

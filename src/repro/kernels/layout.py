@@ -1,0 +1,62 @@
+"""Destination-tile edge layout for the Pallas segment kernels.
+
+TPU kernels cannot scatter to arbitrary addresses; instead we pre-group
+edges by destination tile (dst // tile_v) and pad each group to a multiple
+of the edge-block size.  Every grid step then owns exactly one output tile
+(selected via scalar prefetch), turning the scatter into a VMEM-local
+reduction.  The grouping is a host-side, build-once transformation —
+the TPU analogue of the paper's "sorted-by-destination in-edge view".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TileLayout:
+    """Edge order + block->tile mapping for one (graph, tile_v, block_e)."""
+
+    perm: np.ndarray         # i32[Ep] edge ids in grouped order (padding = -1)
+    block_tile: np.ndarray   # i32[NB] output tile owned by each edge block
+    n_blocks: int
+    n_tiles: int
+    tile_v: int
+    block_e: int
+    n_edges_padded: int
+
+
+def build_tile_layout(dst: np.ndarray, n_vertices: int, tile_v: int, block_e: int) -> TileLayout:
+    dst = np.asarray(dst)
+    n_tiles = -(-n_vertices // tile_v)
+    tile_of_edge = dst // tile_v
+    order = np.argsort(tile_of_edge, kind="stable").astype(np.int64)
+
+    perm_parts = []
+    block_tiles = []
+    sorted_tiles = tile_of_edge[order]
+    # boundaries of each tile group in the sorted order
+    bounds = np.searchsorted(sorted_tiles, np.arange(n_tiles + 1))
+    for t in range(n_tiles):
+        grp = order[bounds[t]: bounds[t + 1]]
+        if grp.size == 0:
+            continue
+        pad = (-grp.size) % block_e
+        grp = np.concatenate([grp, np.full(pad, -1, np.int64)])
+        perm_parts.append(grp)
+        block_tiles.extend([t] * (grp.size // block_e))
+    if not perm_parts:  # empty graph: one padded block for tile 0
+        perm_parts = [np.full(block_e, -1, np.int64)]
+        block_tiles = [0]
+    perm = np.concatenate(perm_parts).astype(np.int32)
+    block_tile = np.asarray(block_tiles, np.int32)
+    return TileLayout(
+        perm=perm,
+        block_tile=block_tile,
+        n_blocks=len(block_tile),
+        n_tiles=n_tiles,
+        tile_v=tile_v,
+        block_e=block_e,
+        n_edges_padded=perm.size,
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics each kernel must reproduce; kernel tests
+sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_INF = jnp.iinfo(jnp.int32).max
+
+
+def temporal_relax_min_ref(dst, arr_src, t_start, t_end, valid, window, n_vertices, strict=False):
+    """Fused temporal relax: out[v] = min over valid edges into v (window +
+    ordering predicate against the source arrival) of t_end; INT_INF
+    elsewhere.  ``arr_src`` is the source arrival gathered per edge (with
+    non-frontier sources pre-masked to INT_INF)."""
+    ta, tb = window
+    follows = (arr_src < t_start) if strict else (arr_src <= t_start)
+    ok = valid & (t_start >= ta) & (t_end <= tb) & follows & (arr_src < INT_INF)
+    cand = jnp.where(ok, t_end, INT_INF)
+    ids = jnp.where(ok, dst, 0)
+    return jax.ops.segment_min(cand, ids, num_segments=n_vertices)
+
+
+def segment_spmm_ref(dst, messages, valid, n_vertices):
+    """out[v, :] = sum of messages over valid edges into v (the GNN
+    message-passing / EmbeddingBag primitive)."""
+    m = jnp.where(valid[:, None], messages, 0)
+    ids = jnp.where(valid, dst, 0)
+    zero_row = jnp.zeros_like(messages[:1])
+    m = jnp.where(valid[:, None], m, zero_row)
+    return jax.ops.segment_sum(m, ids, num_segments=n_vertices)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: tiled segment-sum SpMM (gather -> one-hot MXU matmul
+-> tile accumulate) — the GNN message-passing / EmbeddingBag primitive.
+
+out[v, :] = sum over edges e with dst[e] == v of messages[e, :]
+
+XLA's scatter-add serializes on TPU; with the destination-tile edge layout
+each grid step turns its edge block into a [tile_v, block_e] one-hot matrix
+and hits the MXU: out_tile += onehot @ messages_block.  This is the
+standard dense-scatter trick (cf. MegaBlocks-style grouped matmuls) applied
+to graph aggregation; arithmetic overhead is tile_v/avg_useful but runs at
+MXU rather than scatter throughput.
+
+Feature dim is additionally tiled by ``tile_d`` so (block_e x tile_d) and
+(tile_v x tile_d) stay VMEM-resident and MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(
+    block_tile_ref,   # i32[NB] scalar prefetch
+    dst_loc_ref,      # i32[1, block_e]
+    msg_ref,          # f32[1, block_e, tile_d]
+    valid_ref,        # i32[1, block_e]
+    init_ref,         # f32[1, tile_v, tile_d] aliased to out
+    out_ref,          # f32[1, tile_v, tile_d]
+    *,
+    tile_v: int,
+    block_e: int,
+):
+    del block_tile_ref, init_ref
+    dst_loc = dst_loc_ref[0, :]
+    ok = valid_ref[0, :] != 0
+    msg = msg_ref[0, :, :]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_v, block_e), 0)
+    onehot = (row_ids == dst_loc[None, :]) & ok[None, :]
+    contrib = jax.lax.dot_general(
+        onehot.astype(msg.dtype), msg,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[0, :, :] = out_ref[0, :, :] + contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_tiles", "tile_v", "block_e", "tile_d", "interpret"),
+)
+def segment_spmm_tiles(
+    dst_local,      # i32[NB*block_e] grouped by tile (layout order)
+    messages,       # f32[NB*block_e, D]
+    valid,          # i32[NB*block_e]
+    block_tile,     # i32[NB]
+    n_tiles: int,
+    *,
+    tile_v: int = 256,
+    block_e: int = 512,
+    tile_d: int = 128,
+    interpret: bool = True,
+):
+    """Returns out[n_tiles, tile_v, D] of per-tile feature sums."""
+    nb = block_tile.shape[0]
+    d = messages.shape[-1]
+    pad_d = (-d) % tile_d
+    if pad_d:
+        messages = jnp.pad(messages, ((0, 0), (0, pad_d)))
+    dp = d + pad_d
+    nd = dp // tile_d
+    init = jnp.zeros((n_tiles, tile_v, dp), jnp.float32)
+
+    edge_spec = pl.BlockSpec((1, block_e), lambda i, j, bt: (i, 0))
+    msg_spec = pl.BlockSpec((1, block_e, tile_d), lambda i, j, bt: (i, 0, j))
+    tile_spec = pl.BlockSpec((1, tile_v, tile_d), lambda i, j, bt: (bt[i], 0, j))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nd),
+        in_specs=[edge_spec, msg_spec, edge_spec, tile_spec],
+        out_specs=tile_spec,
+    )
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, tile_v=tile_v, block_e=block_e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_v, dp), jnp.float32),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(
+        block_tile,
+        dst_local.reshape(nb, block_e),
+        messages.astype(jnp.float32).reshape(nb, block_e, dp),
+        valid.reshape(nb, block_e),
+        init,
+    )
+    return out[..., :d]

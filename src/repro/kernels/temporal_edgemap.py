@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused temporal relax (windowed predicate + tile-local
+segment-min) — the hot loop of TemporalEdgeMap.
+
+XLA lowers ``segment_min`` over arbitrary destination ids to scatter-min,
+which serializes on TPU.  This kernel exploits the destination-tile edge
+layout (kernels/layout.py): each grid step owns one [tile_v] output tile in
+VMEM, evaluates the window + ordering predicate on the VPU, and reduces its
+edge block into the tile with a chunked compare-select tree — no scatter.
+
+Grid: (n_blocks,).  Scalar prefetch carries (block->tile map, window).
+The output is min-accumulated across blocks via input/output aliasing of an
+INT_INF-initialized buffer; revisits of a tile are consecutive because the
+layout groups blocks by tile, so the block stays resident in VMEM between
+them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INT_INF = jnp.iinfo(jnp.int32).max
+
+
+def _relax_min_kernel(
+    # scalar prefetch
+    block_tile_ref,      # i32[NB]   (unused in body; drives out index_map)
+    window_ref,          # i32[2]
+    # VMEM blocks (leading block dim of 1)
+    dst_loc_ref,         # i32[1, block_e]  dst - tile_base, in [0, tile_v)
+    arr_ref,             # i32[1, block_e]  source arrival (INT_INF if masked)
+    ts_ref,              # i32[1, block_e]
+    te_ref,              # i32[1, block_e]
+    valid_ref,           # i32[1, block_e]  1 = structurally valid
+    init_ref,            # i32[1, tile_v]   aliased to out
+    out_ref,             # i32[1, tile_v]
+    *,
+    tile_v: int,
+    block_e: int,
+    chunk: int,
+    strict: bool,
+):
+    del block_tile_ref, init_ref  # aliasing: out_ref holds the accumulator
+    ta = window_ref[0]
+    tb = window_ref[1]
+    arr = arr_ref[0, :]
+    ts = ts_ref[0, :]
+    te = te_ref[0, :]
+    follows = (arr < ts) if strict else (arr <= ts)
+    ok = (
+        (valid_ref[0, :] != 0)
+        & (ts >= ta) & (te <= tb)
+        & follows & (arr < INT_INF)
+    )
+    cand = jnp.where(ok, te, INT_INF)
+    dst_loc = dst_loc_ref[0, :]
+
+    acc = jnp.full((tile_v,), INT_INF, jnp.int32)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, tile_v), 1)
+    for c in range(block_e // chunk):  # static unroll: [chunk, tile_v] VMEM tiles
+        d = jax.lax.dynamic_slice(dst_loc, (c * chunk,), (chunk,))
+        v = jax.lax.dynamic_slice(cand, (c * chunk,), (chunk,))
+        hit = d[:, None] == col_ids
+        vals = jnp.where(hit, v[:, None], INT_INF)
+        acc = jnp.minimum(acc, jnp.min(vals, axis=0))
+    out_ref[0, :] = jnp.minimum(out_ref[0, :], acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_tiles", "tile_v", "block_e", "chunk", "strict", "interpret")
+)
+def temporal_relax_min_tiles(
+    dst_local,      # i32[NB*block_e] grouped by tile (layout order)
+    arr_src,        # i32[NB*block_e]
+    t_start,        # i32[NB*block_e]
+    t_end,          # i32[NB*block_e]
+    valid,          # i32[NB*block_e]
+    block_tile,     # i32[NB]
+    window,         # i32[2]
+    n_tiles: int,
+    *,
+    tile_v: int = 512,
+    block_e: int = 1024,
+    chunk: int = 128,
+    strict: bool = False,
+    interpret: bool = True,
+):
+    """Returns out[n_tiles, tile_v] of per-tile minima (INT_INF elsewhere)."""
+    nb = block_tile.shape[0]
+    init = jnp.full((n_tiles, tile_v), INT_INF, jnp.int32)
+
+    def reshape(x):
+        return x.reshape(nb, block_e)
+
+    edge_spec = pl.BlockSpec((1, block_e), lambda i, bt, w: (i, 0))
+    tile_spec = pl.BlockSpec((1, tile_v), lambda i, bt, w: (bt[i], 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb,),
+        in_specs=[edge_spec] * 5 + [tile_spec],
+        out_specs=tile_spec,
+    )
+    kernel = functools.partial(
+        _relax_min_kernel,
+        tile_v=tile_v, block_e=block_e, chunk=chunk, strict=strict,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_v), jnp.int32),
+        input_output_aliases={7: 0},  # init (arg 7 incl. prefetch) -> out
+        interpret=interpret,
+    )(
+        block_tile, jnp.asarray(window, jnp.int32),
+        reshape(dst_local), reshape(arr_src), reshape(t_start),
+        reshape(t_end), reshape(valid), init,
+    )

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init), so this module has no __future__ imports.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  -> proves the program fits per-device HBM
+  * compiled.cost_analysis()    -> per-device HLO FLOPs / bytes accessed
+  * collective payloads parsed from the post-SPMD HLO -> wire-bytes model
+
+Everything lands in experiments/dryrun/<arch>__<shape>__<mesh>.json, which
+benchmarks/roofline.py turns into the three-term roofline table.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get_arch, list_archs
+from repro.launch.mesh import V5E, make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|reduce-scatter"
+    r"|all-to-all|collective-permute-start|collective-permute)\b(.*)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective payloads + modeled wire bytes (ring algorithms;
+    conventions documented in EXPERIMENTS.md §Roofline)."""
+    out = []
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op, rest = m.groups()
+        op = op.replace("-start", "")
+        payload = _shape_bytes(shape_str)
+        gm = _GROUPS_BRACE_RE.search(rest)
+        if gm:
+            k = len([x for x in gm.group(1).split(",") if x.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(rest)
+            k = int(gi.group(2)) if gi else 1
+        k = max(k, 1)
+        if op == "all-reduce":
+            wire = 2 * payload * (k - 1) / k
+        elif op == "all-gather":
+            wire = payload * (k - 1) / k
+        elif op == "reduce-scatter":
+            wire = payload * (k - 1)          # input = k x output
+        elif op == "all-to-all":
+            wire = payload * (k - 1) / k
+        else:  # collective-permute
+            wire = payload
+        out.append(dict(op=op, payload_bytes=payload, group_size=k, wire_bytes=wire))
+    return out
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, out_dir: str,
+             save_hlo: bool = False):
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    spec = get_arch(arch_id)
+    cell = spec.cells[shape]
+    rec = dict(
+        arch=arch_id, shape=shape, mesh=mesh_kind,
+        mesh_shape=list(mesh.devices.shape), axis_names=list(mesh.axis_names),
+        n_devices=int(mesh.devices.size), kind=cell.kind, meta=cell.meta,
+        timestamp=time.time(),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch_id}__{shape}__{mesh_kind}.json")
+
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[SKIP] {arch_id} x {shape} x {mesh_kind}: {cell.skip}")
+        return rec
+
+    try:
+        t0 = time.time()
+        fn, args, shardings, donate = spec.lowerable(shape, mesh)
+        jitted = jax.jit(fn, in_shardings=shardings,
+                         donate_argnums=tuple(donate))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        mem = {
+            a: int(getattr(ma, a))
+            for a in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "peak_memory_in_bytes", "generated_code_size_in_bytes",
+            )
+        }
+        # arguments are donated/aliased where possible; live per-device bytes:
+        live = mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"] \
+            + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"]
+        mem["live_bytes_est"] = int(live)
+        mem["fits_v5e_16g"] = bool(live <= V5E["hbm_bytes"])
+
+        ca = compiled.cost_analysis() or {}
+        cost = {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)
+        coll_summary = {}
+        for c in colls:
+            s = coll_summary.setdefault(
+                c["op"], dict(count=0, payload_bytes=0, wire_bytes=0.0)
+            )
+            s["count"] += 1
+            s["payload_bytes"] += c["payload_bytes"]
+            s["wire_bytes"] += c["wire_bytes"]
+        rec.update(
+            status="ok",
+            lower_seconds=t_lower, compile_seconds=t_compile,
+            memory=mem, cost=cost,
+            collectives=coll_summary,
+            collective_wire_bytes_per_device=sum(c["wire_bytes"] for c in colls),
+            hlo_instructions=hlo.count("\n"),
+        )
+
+        # XLA cost_analysis counts lax.scan bodies ONCE; for scan-over-layers
+        # models recover per-layer cost from L=1 vs L=2 lowers, extrapolate.
+        if hasattr(spec, "layer_scaled_lowerable"):
+            L = spec.layer_count()
+            pts = {}
+            for l_small in (1, 2):
+                fn2, args2, sh2, d2 = spec.layer_scaled_lowerable(
+                    shape, mesh, l_small
+                )
+                c2 = (
+                    jax.jit(fn2, in_shardings=sh2, donate_argnums=tuple(d2))
+                    .lower(*args2).compile()
+                )
+                ca2 = c2.cost_analysis() or {}
+                colls2 = parse_collectives(c2.as_text())
+                pts[l_small] = dict(
+                    flops=float(ca2.get("flops", 0.0)),
+                    bytes=float(ca2.get("bytes accessed", 0.0)),
+                    wire=sum(cc["wire_bytes"] for cc in colls2),
+                )
+            extr = {
+                key: pts[1][key] + (pts[2][key] - pts[1][key]) * (L - 1)
+                for key in ("flops", "bytes", "wire")
+            }
+            rec["cost_extrapolated"] = dict(
+                method="two_point_layer_extrapolation", n_layers=L,
+                l1=pts[1], l2=pts[2],
+                flops_per_device=extr["flops"],
+                bytes_accessed_per_device=extr["bytes"],
+                collective_wire_bytes_per_device=extr["wire"],
+            )
+
+        if hasattr(spec, "model_flops"):
+            rec["model_flops_global"] = float(spec.model_flops(shape))
+        if save_hlo:
+            with open(out_path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(hlo)
+        print(
+            f"[OK]   {arch_id} x {shape} x {mesh_kind}: "
+            f"compile {t_compile:.1f}s peak/dev "
+            f"{mem['peak_memory_in_bytes']/2**30:.2f} GiB "
+            f"flops/dev {cost['flops_per_device']:.3e} "
+            f"wire/dev {rec['collective_wire_bytes_per_device']/2**20:.1f} MiB"
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep the sweep going
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch_id} x {shape} x {mesh_kind}: {rec['error']}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", type=str,
+                    default=os.environ.get("DRYRUN_OUT", "experiments/dryrun"))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            spec = get_arch(a)
+            print(a, "->", ", ".join(spec.cells))
+        return
+
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else list(spec.cells)
+        for shape in shapes:
+            for mk in meshes:
+                out_path = os.path.join(args.out, f"{arch_id}__{shape}__{mk}.json")
+                if args.skip_existing and os.path.exists(out_path):
+                    with open(out_path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[CACHED] {arch_id} x {shape} x {mk}")
+                            continue
+                rec = run_cell(arch_id, shape, mk, args.out, save_hlo=args.save_hlo)
+                failures += rec.get("status") == "error"
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Callers that need 512 placeholder devices must set
+XLA_FLAGS *before any jax import* — launch/dryrun.py does this in its first
+two lines.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+# TPU v5e hardware model (roofline constants; see EXPERIMENTS.md §Roofline)
+V5E = dict(
+    peak_bf16_flops=197e12,     # per chip
+    hbm_bandwidth=819e9,        # bytes/s per chip
+    ici_link_bandwidth=50e9,    # bytes/s per link
+    hbm_bytes=16 * 2**30,       # 16 GiB per chip
+)

@@ -1,0 +1,100 @@
+"""Training driver: data pipeline -> jitted train step -> checkpoint/resume
+-> straggler monitoring.  CPU-runnable at reduced scale (this container) and
+mesh-aware at production scale (same code path the dry-run compiles).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50 \
+      --scale smoke --batch 8 --seq 64 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.tokens import MarkovCorpus
+from repro.distributed.compression import CompressionConfig
+from repro.models import transformer as tf
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import StragglerMonitor
+from repro.train.optimizer import make_optimizer, warmup_cosine
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compression", choices=["none", "int8", "topk"], default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    if spec.family != "lm":
+        raise SystemExit("train.py drives LM archs; see examples/ for others")
+    cfg = spec.smoke_cfg if args.scale == "smoke" else spec.cfg
+
+    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={args.arch} scale={args.scale} params={n_params/1e6:.2f}M")
+
+    optimizer = make_optimizer(
+        "adamw", warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
+    )
+    tcfg = TrainConfig(
+        microbatches=args.microbatches,
+        compression=CompressionConfig(kind=args.compression),
+    )
+    loss_fn = lambda p, b: tf.loss_fn(p, b, cfg)
+    step_fn = jax.jit(make_train_step(loss_fn, optimizer, tcfg), donate_argnums=(0, 1))
+    state = init_train_state(params, optimizer, tcfg)
+
+    mgr = CheckpointManager(args.ckpt, keep=3, async_save=True) if args.ckpt else None
+    start_step = 0
+    if mgr and args.resume and mgr.latest_step() is not None:
+        restored, start_step = mgr.restore({"params": params, "state": state})
+        params, state = restored["params"], restored["state"]
+        print(f"resumed from step {start_step}")
+
+    corpus = MarkovCorpus(vocab=cfg.vocab, seed=args.seed)
+    batches = corpus.batches(args.batch, args.seq, seed=args.seed + 1)
+    monitor = StragglerMonitor(threshold=3.0, policy="flag")
+
+    losses = []
+    for step_idx in range(start_step, args.steps):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        monitor.step_start()
+        params, state, metrics = step_fn(params, state, batch)
+        metrics = jax.device_get(metrics)
+        action = monitor.step_end()
+        losses.append(float(metrics["loss"]))
+        if action:
+            print(f"[straggler] step {step_idx}: {action} "
+                  f"(median {monitor.median*1e3:.0f} ms)")
+        if step_idx % args.log_every == 0 or step_idx == args.steps - 1:
+            print(f"step {step_idx:5d} loss {metrics['loss']:.4f} "
+                  f"gnorm {metrics['grad_norm']:.3f}")
+        if mgr and (step_idx + 1) % args.ckpt_every == 0:
+            mgr.save(step_idx + 1, {"params": params, "state": state}, blocking=False)
+    if mgr:
+        mgr.save(args.steps, {"params": params, "state": state}, blocking=True)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
+          f"median step {monitor.median*1e3:.0f} ms")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""GNN architectures: GCN, GIN, GraphSAGE — message passing via
+``segment_sum`` over edge lists (JAX has no sparse message-passing
+primitive; this substrate IS part of the system, and shares its edge-
+partitioned execution model with the temporal engine's TemporalEdgeMap).
+
+Graphs arrive as ``{"x": [N, F], "src": [E], "dst": [E]}`` (+ optional
+``graph_id`` for batched small graphs -> pooled readout).  The Pallas
+``segment_spmm`` kernel is a drop-in for the aggregation when running on
+TPU shards (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str                  # gcn | gin | graphsage
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int
+    aggregator: str = "mean"   # mean | sum
+    readout: Optional[str] = None  # None (node-level) | "sum" | "mean"
+    eps_learnable: bool = True     # GIN-eps
+    dtype: Any = jnp.float32
+
+
+def _seg_sum(values, ids, n):
+    return jax.ops.segment_sum(values, ids, num_segments=n)
+
+
+def aggregate(x, src, dst, n_nodes, kind: str):
+    """Neighbor aggregation dst <- f(src); the GNN SpMM primitive."""
+    msgs = x[src]
+    out = _seg_sum(msgs, dst, n_nodes)
+    if kind == "mean":
+        deg = _seg_sum(jnp.ones_like(src, dtype=x.dtype), dst, n_nodes)
+        out = out / jnp.maximum(deg, 1.0)[:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_gnn(key, cfg: GNNConfig) -> Dict:
+    ks = jax.random.split(key, cfg.n_layers * 4 + 2)
+    params: Dict[str, Any] = {"layers": []}
+    d_prev = cfg.d_in
+    kidx = 0
+
+    def dense(shape):
+        nonlocal kidx
+        w = jax.random.normal(ks[kidx], shape, cfg.dtype) / jnp.sqrt(1.0 * shape[0])
+        kidx += 1
+        return w
+
+    for _ in range(cfg.n_layers):
+        if cfg.arch == "gcn":
+            lp = {"w": dense((d_prev, cfg.d_hidden)), "b": jnp.zeros(cfg.d_hidden, cfg.dtype)}
+        elif cfg.arch == "gin":
+            lp = {
+                "mlp_w1": dense((d_prev, cfg.d_hidden)),
+                "mlp_b1": jnp.zeros(cfg.d_hidden, cfg.dtype),
+                "mlp_w2": dense((cfg.d_hidden, cfg.d_hidden)),
+                "mlp_b2": jnp.zeros(cfg.d_hidden, cfg.dtype),
+                "eps": jnp.zeros((), cfg.dtype),
+            }
+        elif cfg.arch == "graphsage":
+            lp = {
+                "w_self": dense((d_prev, cfg.d_hidden)),
+                "w_nbr": dense((d_prev, cfg.d_hidden)),
+                "b": jnp.zeros(cfg.d_hidden, cfg.dtype),
+            }
+        else:
+            raise ValueError(cfg.arch)
+        params["layers"].append(lp)
+        d_prev = cfg.d_hidden
+    params["head_w"] = dense((d_prev, cfg.n_classes))
+    params["head_b"] = jnp.zeros(cfg.n_classes, cfg.dtype)
+    return params
+
+
+def gnn_param_axes(params) -> Any:
+    """Feature dims shard over `model` ('feat'); everything else replicated."""
+    def ax(p):
+        if p.ndim == 2:
+            return (None, "feat")
+        return tuple(None for _ in p.shape)
+    return jax.tree_util.tree_map(ax, params)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def gnn_forward(params, batch, cfg: GNNConfig):
+    x = batch["x"].astype(cfg.dtype)
+    src, dst = batch["src"], batch["dst"]
+    n = x.shape[0]
+
+    for li, lp in enumerate(params["layers"]):
+        if cfg.arch == "gcn":
+            # symmetric normalization with self loops: D^-1/2 (A+I) D^-1/2 X W
+            deg = _seg_sum(jnp.ones_like(src, jnp.float32), dst, n) + 1.0
+            inv_sqrt = jax.lax.rsqrt(deg)
+            msgs = (x * inv_sqrt[:, None])[src]
+            agg = _seg_sum(msgs, dst, n) * inv_sqrt[:, None]
+            agg = agg + x * (inv_sqrt**2)[:, None]          # self loop
+            x = agg @ lp["w"] + lp["b"]
+        elif cfg.arch == "gin":
+            agg = aggregate(x, src, dst, n, "sum")
+            h = (1.0 + lp["eps"]) * x + agg
+            h = jax.nn.relu(h @ lp["mlp_w1"] + lp["mlp_b1"])
+            x = h @ lp["mlp_w2"] + lp["mlp_b2"]
+        else:  # graphsage
+            agg = aggregate(x, src, dst, n, cfg.aggregator)
+            x = x @ lp["w_self"] + agg @ lp["w_nbr"] + lp["b"]
+        if li < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+        x = constrain(x, None, "feat")
+
+    if cfg.readout:
+        gid = batch["graph_id"]
+        n_graphs = batch["n_graphs"] if isinstance(batch.get("n_graphs"), int) else int(gid.max()) + 1
+        pooled = _seg_sum(x, gid, n_graphs)
+        if cfg.readout == "mean":
+            cnt = _seg_sum(jnp.ones_like(gid, dtype=x.dtype), gid, n_graphs)
+            pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+        x = pooled
+    return x @ params["head_w"] + params["head_b"]
+
+
+def gnn_loss(params, batch, cfg: GNNConfig):
+    logits = gnn_forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    mask = batch.get("label_mask")
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

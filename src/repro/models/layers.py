@@ -1,0 +1,163 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Every init function returns (params, axes) where ``axes`` mirrors params
+with tuples of logical axis names consumed by distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype) * scale, tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 1e4):
+    """x: [..., S, H, Dh]; positions: [..., S] (int)."""
+    d_head = x.shape[-1]
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention: chunked flash-style (training/prefill) + decode
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax chunked attention — O(S) live memory per (q,kv) tile.
+
+    q: [B, S, H, Dh]; k, v: [B, S, KH, Dh] (GQA: H = KH * G).
+    XLA fuses each tile; the scores matrix is never materialized, which is
+    what lets 32k prefill compile inside v5e HBM.
+    """
+    B, S, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = S // q_chunk, S // kv_chunk
+    scale = 1.0 / math.sqrt(Dh)
+
+    qr = q.reshape(B, nq, q_chunk, KH, G, Dh)
+    kr = k.reshape(B, nk, kv_chunk, KH, Dh)
+    vr = v.reshape(B, nk, kv_chunk, KH, Dh)
+
+    def q_block(qi):
+        qb = qr[:, qi] * scale  # [B, qc, KH, G, Dh]
+        iq = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kr[:, ki]
+            vb = vr[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            if causal:
+                ik = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = iq[:, None] >= ik[None, :]
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [B, KH, G, qc, Dh]
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))  # [nq, B, KH, G, qc, Dh]
+    out = jnp.moveaxis(blocks, 0, 1)               # [B, nq, KH, G, qc, Dh]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode over a (possibly seq-sharded) KV cache.
+
+    q: [B, H, Dh]; caches: [B, Smax, KH, Dh]; cache_len: scalar int —
+    number of valid cache positions.  Softmax over the cache axis is a
+    sharded reduction (flash-decoding combine under GSPMD when kv_seq is
+    sharded over `model`).
+    """
+    B, H, Dh = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, KH, G, Dh) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, :] < cache_len, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, "batch", "seq", "mlp") if h.ndim == 3 else h
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean token CE; logits [..., V] (possibly vocab-sharded), labels [...]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

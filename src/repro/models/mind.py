@@ -1,0 +1,143 @@
+"""MIND (arXiv:1904.08030): Multi-Interest Network with Dynamic routing.
+
+Huge sparse item-embedding table (row-sharded over `model`) -> behavior-
+sequence EmbeddingBag (jnp.take + mask; JAX has no native EmbeddingBag — we
+build it) -> B2I capsule dynamic routing into K interest capsules ->
+label-aware attention (train) / max-over-interest scoring (retrieval).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 2.0          # label-aware attention sharpness
+    n_negatives: int = 1024     # sampled-softmax negatives (train)
+    dtype: Any = jnp.float32
+
+
+def init_mind(key, cfg: MINDConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    return {
+        "item_embed": jax.random.normal(ks[0], (cfg.n_items, d), cfg.dtype) * 0.02,
+        "bilinear": jax.random.normal(ks[1], (d, d), cfg.dtype) / jnp.sqrt(1.0 * d),
+        "mlp_w1": jax.random.normal(ks[2], (d, 4 * d), cfg.dtype) / jnp.sqrt(1.0 * d),
+        "mlp_b1": jnp.zeros(4 * d, cfg.dtype),
+        "mlp_w2": jax.random.normal(ks[3], (4 * d, d), cfg.dtype) / jnp.sqrt(4.0 * d),
+        "mlp_b2": jnp.zeros(d, cfg.dtype),
+        # fixed (untrained) routing-logit initializer, as in the paper
+        "routing_init": jax.random.normal(ks[4], (cfg.n_interests, cfg.hist_len)) * 1.0,
+    }
+
+
+def mind_param_axes(params) -> Any:
+    axes = {k: tuple(None for _ in v.shape) for k, v in params.items()}
+    axes["item_embed"] = ("rows", None)
+    return axes
+
+
+def embedding_bag(table, ids, mask=None, combine: str = "none"):
+    """JAX EmbeddingBag: gather rows + optional masked reduce.
+    ids [..., H] -> [..., H, d] ('none') or [..., d] ('sum'/'mean')."""
+    out = jnp.take(table, ids, axis=0)
+    if mask is not None:
+        out = out * mask[..., None].astype(out.dtype)
+    if combine == "sum":
+        return out.sum(axis=-2)
+    if combine == "mean":
+        denom = (
+            mask.sum(axis=-1, keepdims=True).astype(out.dtype)
+            if mask is not None else out.shape[-2]
+        )
+        return out.sum(axis=-2) / jnp.maximum(denom, 1.0)
+    return out
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def user_tower(params, hist_ids, cfg: MINDConfig):
+    """hist_ids [B, H] (0 = padding) -> interests [B, K, d]."""
+    mask = hist_ids > 0                                  # [B, H]
+    e = embedding_bag(params["item_embed"], hist_ids, mask)  # [B, H, d]
+    e = constrain(e, "batch", None, None)
+    se = e @ params["bilinear"]                          # shared S transform
+
+    B = hist_ids.shape[0]
+    b_logit = jnp.broadcast_to(
+        params["routing_init"][None], (B, cfg.n_interests, cfg.hist_len)
+    )
+    neg = jnp.float32(-1e9)
+    b_logit = jnp.where(mask[:, None, :], b_logit, neg)
+
+    def routing_iter(b, _):
+        c = jax.nn.softmax(b, axis=1)                    # over interests
+        z = jnp.einsum("bkh,bhd->bkd", c, se)
+        u = _squash(z)
+        b_new = b + jnp.einsum("bkd,bhd->bkh", u, se)
+        b_new = jnp.where(mask[:, None, :], b_new, neg)
+        return b_new, u
+
+    b_final, us = jax.lax.scan(
+        routing_iter, b_logit, None, length=cfg.capsule_iters
+    )
+    interests = us[-1]                                   # [B, K, d]
+    h = jax.nn.relu(interests @ params["mlp_w1"] + params["mlp_b1"])
+    interests = h @ params["mlp_w2"] + params["mlp_b2"]
+    return constrain(interests, "batch", "interests", None)
+
+
+def label_aware_attention(interests, target_e, p: float):
+    """v_u = sum_k softmax((u_k . e_t)^p) u_k."""
+    scores = jnp.einsum("bkd,bd->bk", interests, target_e)
+    w = jax.nn.softmax(jnp.abs(scores) ** p * jnp.sign(scores), axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, interests)
+
+
+def train_loss(params, batch, cfg: MINDConfig):
+    """Sampled-softmax loss.  batch: {hist [B,H], target [B], negatives [B,N]}."""
+    interests = user_tower(params, batch["hist"], cfg)
+    tgt_e = jnp.take(params["item_embed"], batch["target"], axis=0)
+    v_u = label_aware_attention(interests, tgt_e, cfg.pow_p)
+    neg_e = jnp.take(params["item_embed"], batch["negatives"], axis=0)  # [B,N,d]
+    pos_logit = jnp.einsum("bd,bd->b", v_u, tgt_e)[:, None]
+    neg_logit = jnp.einsum("bd,bnd->bn", v_u, neg_e)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=1).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -logp[:, 0].mean()
+
+
+def score_candidates(params, interests, cand_ids):
+    """Retrieval scoring: max over interests of dot(interest, candidate).
+    interests [B, K, d]; cand_ids [Nc] -> scores [B, Nc]."""
+    cand_e = jnp.take(params["item_embed"], cand_ids, axis=0)  # [Nc, d]
+    cand_e = constrain(cand_e, "candidates", None)
+    s = jnp.einsum("bkd,nd->bkn", interests, cand_e)
+    return s.max(axis=1)
+
+
+def serve_step(params, batch, cfg: MINDConfig):
+    """Online inference: user histories -> interest vectors."""
+    return user_tower(params, batch["hist"], cfg)
+
+
+def retrieval_step(params, batch, cfg: MINDConfig, top_k: int = 100):
+    interests = user_tower(params, batch["hist"], cfg)
+    scores = score_candidates(params, interests, batch["candidates"])
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts FFN with sort-based (MegaBlocks-style) dispatch.
+
+Top-k routing -> sort token-expert pairs by expert -> pack into per-expert
+capacity buffers -> grouped einsum over the expert axis (sharded over
+`model` for expert parallelism) -> weighted scatter back via segment-sum.
+All shapes static; overflow beyond capacity is dropped (standard capacity-
+factor semantics).
+
+Group-local dispatch (``n_groups > 1``): tokens are split into G groups
+aligned with the data-parallel sharding, and the argsort/scatter dispatch is
+computed *within* each group.  A global dispatch makes every capacity slot
+depend on every token, which GSPMD can only lower as replicate+all-reduce of
+the [E, C, d] buffer (~38 TB/device/step for qwen3-train — measured in
+EXPERIMENTS.md §Perf).  Group-local dispatch keeps the scatter local to each
+data shard; the only cross-device movement left is the expert-parallel
+all-to-all implied by resharding [G(data), E(model), Cg, d].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                   # per-expert hidden size
+    n_shared: int = 0           # shared (always-on) experts, DeepSeek/Kimi style
+    capacity_factor: float = 1.25
+    n_groups: int = 1           # dispatch groups (== data shards at scale)
+    # dense-mix path: compute EVERY expert on every token and weighted-select.
+    # Only sane for tiny token counts (decode): with B*k draws ~ E, nearly all
+    # expert weights are read regardless, and the scatter/sort dispatch (whose
+    # GSPMD lowering all-reduces the capacity buffer) disappears entirely.
+    dense_mix: bool = False
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig):
+    ks = jax.random.split(key, 7)
+    E, F = cfg.n_experts, cfg.d_ff
+    params = {
+        "router": dense_init(ks[0], (d_model, E), (None, None))[0],
+        "w_gate": dense_init(ks[1], (E, d_model, F), ("experts", "fsdp", None))[0],
+        "w_up": dense_init(ks[2], (E, d_model, F), ("experts", "fsdp", None))[0],
+        "w_down": dense_init(ks[3], (E, F, d_model), ("experts", None, "fsdp"))[0],
+    }
+    axes = {
+        "router": (None, None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if cfg.n_shared:
+        Fs = cfg.d_ff * cfg.n_shared
+        params["shared"] = {
+            "w_gate": dense_init(ks[4], (d_model, Fs), ("fsdp", "mlp"))[0],
+            "w_up": dense_init(ks[5], (d_model, Fs), ("fsdp", "mlp"))[0],
+            "w_down": dense_init(ks[6], (Fs, d_model), ("mlp", "fsdp"))[0],
+        }
+        axes["shared"] = {
+            "w_gate": ("fsdp", "mlp"),
+            "w_up": ("fsdp", "mlp"),
+            "w_down": ("mlp", "fsdp"),
+        }
+    return params, axes
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    """Per-group expert capacity (group-local tokens)."""
+    per_group = n_tokens // cfg.n_groups
+    c = int(per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+    return -(-c // 8) * 8
+
+
+def _dispatch_group(x, top_w, top_ids, E: int, K: int, C: int):
+    """Group-local sort-based dispatch.
+    x [T, d]; top_w/top_ids [T, K] -> (buf [E, C, d], slot [T*K], token_of,
+    keep, pair_w)."""
+    T, d = x.shape
+    flat_e = top_ids.reshape(-1)                              # [T*K]
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    token_of = order // K
+    start_of = jnp.searchsorted(sorted_e, jnp.arange(E))      # [E]
+    pos_in_e = jnp.arange(T * K) - start_of[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)    # overflow spill row
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[token_of])
+    buf = buf[: E * C].reshape(E, C, d)
+    pair_w = top_w.reshape(-1)[order]
+    return buf, slot, token_of, keep, pair_w
+
+
+def _combine_group(out_buf, slot, token_of, keep, pair_w, T: int):
+    """Scatter expert outputs back to tokens: [E*C, d] -> [T, d]."""
+    EC = out_buf.shape[0]
+    gathered = out_buf[jnp.minimum(slot, EC - 1)] * jnp.where(keep, pair_w, 0.0)[:, None]
+    return jax.ops.segment_sum(gathered, token_of, num_segments=T)
+
+
+def _moe_dense_mix(params, x, cfg: MoEConfig):
+    """All-experts compute + weighted select (decode path)."""
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    gate = jnp.zeros((T, E), jnp.float32)
+    gate = gate.at[jnp.arange(T)[:, None], top_ids].set(top_w)
+
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(E, probs.dtype).at[top_ids.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x, wg)) * jnp.einsum(
+        "td,edf->tef", x, wu
+    )
+    h = constrain(h, None, "experts", None)
+    out_e = jnp.einsum("tef,efd->ted", h, wd)
+    out = jnp.einsum("ted,te->td", out_e, gate.astype(x.dtype))
+    if cfg.n_shared:
+        sh = params["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"].astype(x.dtype)) * (
+            x @ sh["w_up"].astype(x.dtype)
+        )
+        out = out + hs @ sh["w_down"].astype(x.dtype)
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(params, x, cfg: MoEConfig, dtype=None):
+    """x: [T, d] -> [T, d]. Returns (out, aux_loss)."""
+    if cfg.dense_mix:
+        return _moe_dense_mix(params, x, cfg)
+    T, d = x.shape
+    E, K, G = cfg.n_experts, cfg.top_k, cfg.n_groups
+    assert T % G == 0, f"tokens {T} must divide into {G} dispatch groups"
+    Tg = T // G
+    C = capacity(T, cfg)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)                 # [T, K]
+    top_w = (top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # load-balancing auxiliary loss (Switch-style), computed globally
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(E, probs.dtype).at[top_ids.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- group-local dispatch -------------------------------------------
+    xg = x.reshape(G, Tg, d)
+    # pin the dispatch input layout: groups over data, tokens-within-group
+    # local.  (At G=1 / decode shapes this gathers the tiny token tensor
+    # instead of letting GSPMD all-reduce the replicated capacity buffer.)
+    xg = constrain(xg, "moe_groups", None, None)
+    wg_ = top_w.reshape(G, Tg, K)
+    ig_ = top_ids.reshape(G, Tg, K)
+    buf, slot, token_of, keep, pair_w = jax.vmap(
+        lambda a, b, c_: _dispatch_group(a, b, c_, E, K, C)
+    )(xg, wg_, ig_)
+    # buf [G, E, C, d]: G over data (the token->expert all-to-all boundary),
+    # experts over model (EP).
+    buf = constrain(buf, "moe_groups", "experts", None, None)
+
+    # ---- grouped expert computation -------------------------------------
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, wu
+    )
+    h = constrain(h, "moe_groups", "experts", None, None)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, wd).reshape(G, E * C, d)
+    out_buf = constrain(out_buf, "moe_groups", None, None)
+
+    # ---- weighted scatter back (group-local) -----------------------------
+    out = jax.vmap(lambda ob, s, t, k_, w: _combine_group(ob, s, t, k_, w, Tg))(
+        out_buf, slot, token_of, keep, pair_w
+    )
+    out = out.reshape(T, d)
+
+    if cfg.n_shared:
+        sh = params["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"].astype(x.dtype)) * (
+            x @ sh["w_up"].astype(x.dtype)
+        )
+        out = out + hs @ sh["w_down"].astype(x.dtype)
+    return out.astype(x.dtype), aux

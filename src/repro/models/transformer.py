@@ -1,0 +1,442 @@
+"""Decoder-only transformer LM (dense or MoE) — scan-over-layers + remat.
+
+Layers are weight-stacked ([L, ...] leading dim) and executed with
+``lax.scan`` so compile time and HLO size are O(1) in depth — required for
+the 61/88-layer production configs — with ``jax.checkpoint`` on the layer
+body for activation rematerialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, gather_fsdp
+from repro.models.layers import (
+    decode_attention,
+    dense_init,
+    flash_attention,
+    rope,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 1e6
+    use_qk_norm: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    tie_embeddings: bool = False
+    # unroll layers as a Python loop instead of lax.scan — used by the
+    # dry-run's cost extrapolation (XLA cost_analysis counts scan bodies
+    # once; an unrolled L=1 vs L=2 pair recovers true per-layer cost).
+    unroll: bool = False
+    # explicit ZeRO-3 weight gathering at use-time (EXPERIMENTS.md §Perf):
+    # all-gather the fsdp-sharded weight shards per layer instead of letting
+    # GSPMD all-reduce batch-sized partial activations.
+    gather_weights: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-flops accounting)."""
+        d, dh = self.d_model, self.head_dim
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * d
+        if self.moe:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+            ff += self.moe.n_shared * 3 * d * self.moe.d_ff
+        else:
+            ff = 3 * d * self.d_ff
+        norms = 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + norms) + emb + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.n_params
+        d = self.d_model
+        dh = self.head_dim
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * dh + self.n_heads * dh * d
+        ff = (self.moe.top_k + self.moe.n_shared) * 3 * d * self.moe.d_ff
+        ff += d * self.moe.n_experts  # router
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + 2 * d) + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: LMConfig):
+    """(shape, logical_axes, init_kind) per parameter; single source of truth
+    for init, abstract shapes, and sharding specs."""
+    d, dh, H, KH, L = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    layer: Dict[str, Any] = {
+        "wq": ((L, d, H, dh), ("layers", "fsdp", "heads", None), "dense"),
+        "wk": ((L, d, KH, dh), ("layers", "fsdp", "kv_heads", None), "dense"),
+        "wv": ((L, d, KH, dh), ("layers", "fsdp", "kv_heads", None), "dense"),
+        "wo": ((L, H, dh, d), ("layers", "heads", None, "fsdp"), "dense"),
+        "ln1": ((L, d), ("layers", None), "ones"),
+        "ln2": ((L, d), ("layers", None), "ones"),
+    }
+    if cfg.use_qk_norm:
+        layer["q_norm"] = ((L, dh), ("layers", None), "ones")
+        layer["k_norm"] = ((L, dh), ("layers", None), "ones")
+    if cfg.moe:
+        E, F = cfg.moe.n_experts, cfg.moe.d_ff
+        moe: Dict[str, Any] = {
+            "router": ((L, d, E), ("layers", None, None), "dense"),
+            "w_gate": ((L, E, d, F), ("layers", "experts", "fsdp", None), "dense"),
+            "w_up": ((L, E, d, F), ("layers", "experts", "fsdp", None), "dense"),
+            "w_down": ((L, E, F, d), ("layers", "experts", None, "fsdp"), "dense"),
+        }
+        if cfg.moe.n_shared:
+            Fs = F * cfg.moe.n_shared
+            moe["shared"] = {
+                "w_gate": ((L, d, Fs), ("layers", "fsdp", "mlp"), "dense"),
+                "w_up": ((L, d, Fs), ("layers", "fsdp", "mlp"), "dense"),
+                "w_down": ((L, Fs, d), ("layers", "mlp", "fsdp"), "dense"),
+            }
+        layer["moe"] = moe
+    else:
+        layer["w_gate"] = ((L, d, cfg.d_ff), ("layers", "fsdp", "mlp"), "dense")
+        layer["w_up"] = ((L, d, cfg.d_ff), ("layers", "fsdp", "mlp"), "dense")
+        layer["w_down"] = ((L, cfg.d_ff, d), ("layers", "mlp", "fsdp"), "dense")
+    tree: Dict[str, Any] = {
+        "embed": ((cfg.vocab, d), ("vocab", None), "embed"),
+        "layers": layer,
+        "final_ln": ((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ((d, cfg.vocab), ("fsdp", "vocab"), "dense")
+    return tree
+
+
+def _is_leaf(x):
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[2], str)
+
+
+def init_params(key, cfg: LMConfig) -> Dict:
+    layout = _layout(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(layout, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(leaf, k):
+        shape, _, kind = leaf
+        if kind == "ones":
+            return jnp.ones(shape, cfg.dtype)
+        if kind == "embed":
+            return (jax.random.normal(k, shape) * 1.0).astype(cfg.dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else 1
+        return (jax.random.normal(k, shape) / jnp.sqrt(1.0 * fan_in)).astype(cfg.dtype)
+
+    vals = [make(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def param_shapes(cfg: LMConfig):
+    """ShapeDtypeStruct pytree without allocating (dry-run input)."""
+    layout = _layout(cfg)
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(leaf[0], cfg.dtype),
+        layout, is_leaf=_is_leaf,
+    )
+
+
+def param_axes(cfg: LMConfig):
+    """Pytree of logical-axis tuples matching params."""
+    layout = _layout(cfg)
+    return jax.tree_util.tree_map(lambda leaf: leaf[1], layout, is_leaf=_is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+# use-time logical axes of each per-layer weight (leading "layers" dim
+# already sliced off by scan) — consumed by the ZeRO-3 gather below.
+_WEIGHT_AXES = {
+    "wq": ("fsdp", "heads", None),
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),
+    "w_gate": ("fsdp", "mlp"),
+    "w_up": ("fsdp", "mlp"),
+    "w_down": ("mlp", "fsdp"),
+}
+_MOE_WEIGHT_AXES = {
+    "w_gate": ("experts", "fsdp", None),
+    "w_up": ("experts", "fsdp", None),
+    "w_down": ("experts", None, "fsdp"),
+}
+
+
+def _gather_layer_weights(lp, cfg: LMConfig):
+    """Explicit per-layer ZeRO-3 all-gather of fsdp-sharded weights."""
+    if not cfg.gather_weights:
+        return lp
+    out = dict(lp)
+    for k, ax in _WEIGHT_AXES.items():
+        if k in out:
+            out[k] = gather_fsdp(out[k], *ax)
+    if "moe" in out:
+        moe = dict(out["moe"])
+        for k, ax in _MOE_WEIGHT_AXES.items():
+            if k in moe:
+                moe[k] = gather_fsdp(moe[k], *ax)
+        if "shared" in moe:
+            moe["shared"] = {
+                k: gather_fsdp(v, *_WEIGHT_AXES[k])
+                for k, v in moe["shared"].items()
+            }
+        out["moe"] = moe
+    return out
+
+
+def _layer_body(cfg: LMConfig, h, lp, positions):
+    """One transformer block. h: [B, S, d]."""
+    B, S, d = h.shape
+    lp = _gather_layer_weights(lp, cfg)
+    x = rms_norm(h, lp["ln1"])
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    # under sequence-parallel rules ("seq" -> model), K/V gather the full
+    # sequence (the SP all-gather); under TP rules this is a no-op.
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    attn = flash_attention(q, k, v, causal=True,
+                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + jnp.einsum("bshk,hkd->bsd", attn, lp["wo"].astype(x.dtype))
+
+    x = rms_norm(h, lp["ln2"])
+    if cfg.moe:
+        flat, aux = moe_ffn(lp["moe"], x.reshape(B * S, d), cfg.moe)
+        ff = flat.reshape(B, S, d)
+    else:
+        ff = jax.nn.silu(x @ lp["w_gate"].astype(x.dtype)) * (
+            x @ lp["w_up"].astype(x.dtype)
+        )
+        ff = constrain(ff, "batch", "seq", "mlp")
+        ff = ff @ lp["w_down"].astype(x.dtype)
+        aux = jnp.float32(0.0)
+    h = h + ff
+    h = constrain(h, "batch", "seq", None)
+    return h, aux
+
+
+def forward(params, tokens, cfg: LMConfig):
+    """tokens [B, S] -> logits [B, S, vocab] (f32), aux loss."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    body = lambda h_, lp: _layer_body(cfg, h_, lp, positions)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.unroll:
+        aux_sum = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+            h, aux = body(h, lp)
+            aux_sum = aux_sum + aux
+        auxes = aux_sum
+    else:
+        def scan_fn(h_, lp):
+            h_, aux = body(h_, lp)
+            return h_, aux
+
+        h, auxes = jax.lax.scan(scan_fn, h, params["layers"])
+    h = rms_norm(h, params["final_ln"])
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    if "lm_head" in params and cfg.gather_weights:
+        head = gather_fsdp(head, "fsdp", "vocab")
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32), jnp.sum(auxes)
+
+
+def loss_fn(params, batch, cfg: LMConfig, aux_weight: float = 0.01):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def cache_axes():
+    return {
+        "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    }
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: LMConfig):
+    """One decode step with per-slot cache lengths (continuous batching).
+
+    tokens [B]; cache_len: scalar or [B] — number of valid positions per
+    row.  Returns (logits [B, vocab], new cache).
+    """
+    B = tokens.shape[0]
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    h = params["embed"][tokens].astype(cfg.dtype)  # [B, d]
+    pos = cache_len[:, None]                       # [B, 1]
+    rows = jnp.arange(B)
+
+    def scan_fn(carry, inputs):
+        h_ = carry
+        lp, kc, vc = inputs
+        lp = _gather_layer_weights(lp, cfg)
+        x = rms_norm(h_, lp["ln1"])
+        q = jnp.einsum("bd,dhk->bhk", x, lp["wq"].astype(x.dtype))
+        k = jnp.einsum("bd,dhk->bhk", x, lp["wk"].astype(x.dtype))
+        v = jnp.einsum("bd,dhk->bhk", x, lp["wv"].astype(x.dtype))
+        if cfg.use_qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+        kc = kc.at[rows, cache_len].set(k)
+        vc = vc.at[rows, cache_len].set(v)
+        attn = decode_attention(q, kc, vc, (cache_len + 1)[:, None, None, None])
+        h_ = h_ + jnp.einsum("bhk,hkd->bd", attn, lp["wo"].astype(x.dtype))
+        x2 = rms_norm(h_, lp["ln2"])
+        if cfg.moe:
+            ff, _ = moe_ffn(lp["moe"], x2, cfg.moe)
+        else:
+            ff = (
+                jax.nn.silu(x2 @ lp["w_gate"].astype(x.dtype))
+                * (x2 @ lp["w_up"].astype(x.dtype))
+            ) @ lp["w_down"].astype(x.dtype)
+        h_ = h_ + ff
+        return h_, (kc, vc)
+
+    if cfg.unroll:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            sl = jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+            h, (kc_i, vc_i) = scan_fn(h, (sl, cache["k"][i], cache["v"][i]))
+            ks.append(kc_i)
+            vs.append(vc_i)
+        new_k, new_v = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (new_k, new_v) = jax.lax.scan(
+            scan_fn, h, (params["layers"], cache["k"], cache["v"])
+        )
+    h = rms_norm(h, params["final_ln"])
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    if "lm_head" in params and cfg.gather_weights:
+        head = gather_fsdp(head, "fsdp", "vocab")
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, {"k": new_k, "v": new_v}
+
+
+def prefill(params, tokens, cfg: LMConfig, max_seq: Optional[int] = None):
+    """Prefill: forward over the prompt, materializing the KV cache.
+
+    Returns (last_logits [B, vocab], cache).  Cache layout matches
+    decode_step ([L, B, Smax, KH, Dh]).
+    """
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    h = params["embed"][tokens].astype(cfg.dtype)
+    h = constrain(h, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h_, lp):
+        lp = _gather_layer_weights(lp, cfg)
+        x = rms_norm(h_, lp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"].astype(x.dtype))
+        if cfg.use_qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q = constrain(q, "batch", "seq", "heads", None)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+        attn = flash_attention(q, k, v, causal=True,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h_ = h_ + jnp.einsum("bshk,hkd->bsd", attn, lp["wo"].astype(x.dtype))
+        x2 = rms_norm(h_, lp["ln2"])
+        if cfg.moe:
+            d = x2.shape[-1]
+            ff, _ = moe_ffn(lp["moe"], x2.reshape(B * S, d), cfg.moe)
+            ff = ff.reshape(B, S, d)
+        else:
+            ff = (
+                jax.nn.silu(x2 @ lp["w_gate"].astype(x.dtype))
+                * (x2 @ lp["w_up"].astype(x.dtype))
+            ) @ lp["w_down"].astype(x.dtype)
+        h_ = h_ + ff
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+        # cache layout: keep the decode sharding (kv_seq over model) — the
+        # SP-gathered k/v above are seq-replicated, and an unconstrained
+        # scan output would stack them replicated (16x HBM).
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", None)
+        return h_, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.unroll:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+            h, (kc_i, vc_i) = body(h, lp)
+            ks.append(kc_i)
+            vs.append(vc_i)
+        kcache, vcache = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (kcache, vcache) = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h[:, -1], params["final_ln"])
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    if "lm_head" in params and cfg.gather_weights:
+        head = gather_fsdp(head, "fsdp", "vocab")
+    logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+    return logits, {"k": kcache, "v": vcache}

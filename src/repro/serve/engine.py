@@ -1,0 +1,120 @@
+"""Batched serving engine with continuous batching.
+
+Fixed-size slot array; each slot holds one request's KV state and current
+length.  Each engine step decodes every active slot in one fused
+``decode_step``; finished slots (EOS or max-tokens) are refilled from the
+queue via ``prefill`` into the slot's cache rows.  This is the standard
+continuous-batching loop (vLLM-style scheduling, KV in dense slots rather
+than paged blocks — paging is block-table indirection inside the cache,
+orthogonal to the engine loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LMConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] token ids
+    max_new_tokens: int = 32
+    generated: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    requests_completed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: LMConfig, batch_slots: int, max_seq: int,
+                 eos_id: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, batch_slots, max_seq)
+        self.lengths = np.zeros(batch_slots, np.int32)
+        self.last_tokens = np.zeros(batch_slots, np.int32)
+        self.budget = np.zeros(batch_slots, np.int32)       # remaining new tokens
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.queue: Deque[Request] = deque()
+        self.stats = EngineStats()
+        self._decode = jax.jit(
+            lambda p, c, t, l: decode_step(p, c, t, l, cfg)
+        )
+
+    # -- request management ---------------------------------------------------
+
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                prompt = jnp.asarray(req.prompt)[None, :]
+                logits, pcache = prefill(self.params, prompt, self.cfg, max_seq=self.max_seq)
+                # copy this request's cache rows into slot s
+                for key in ("k", "v"):
+                    self.cache[key] = self.cache[key].at[:, s].set(pcache[key][:, 0])
+                tok = int(jnp.argmax(logits[0]))
+                req.generated.append(tok)
+                self.stats.tokens_generated += 1  # first token (from prefill)
+                self.active[s] = req
+                self.lengths[s] = len(req.prompt)
+                self.last_tokens[s] = tok
+                self.budget[s] = req.max_new_tokens - 1
+
+    # -- engine loop ------------------------------------------------------------
+
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._fill_slots()
+        active_mask = np.array([r is not None for r in self.active])
+        if not active_mask.any():
+            return 0
+        tokens = jnp.asarray(self.last_tokens)
+        lengths = jnp.asarray(self.lengths)
+        logits, self.cache = self._decode(self.params, self.cache, tokens, lengths)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None:
+                continue
+            tok = int(next_tokens[s])
+            req.generated.append(tok)
+            self.lengths[s] += 1
+            self.last_tokens[s] = tok
+            self.budget[s] -= 1
+            self.stats.tokens_generated += 1
+            done = (
+                tok == self.eos_id
+                or self.budget[s] <= 0
+                or self.lengths[s] >= self.max_seq - 1
+            )
+            if done:
+                self.stats.requests_completed += 1
+                self.active[s] = None
+                self.lengths[s] = 0
+        self.stats.steps += 1
+        return int(active_mask.sum())
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.stats

@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing: atomic, sharded-aware, optionally async.
+
+Layout: <dir>/step_<N>/ containing one .npy per leaf (flattened key path)
+plus manifest.json (paths, shapes, dtypes, step).  Writes go to a temp dir
+renamed into place, so a crash mid-write never corrupts the latest
+checkpoint — the restart path picks the newest complete manifest.
+Restores place leaves onto the current mesh via NamedSharding, so a job can
+restart on a *different* topology (elastic re-mesh) from the same files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, blocking: Optional[bool] = None):
+        self.wait()  # serialize with any in-flight async save
+        if step in self.all_steps():
+            return  # already checkpointed (e.g. periodic + final collide)
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking is False or (blocking is None and self.async_save):
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def _write(self, step: int, host_tree):
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "leaves": {}}
+        for key, leaf in flat.items():
+            fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(np.shape(leaf)),
+                "dtype": str(np.asarray(leaf).dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.directory, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        """Restore into the structure of ``template`` (values ignored).
+        ``shardings``: optional matching pytree of NamedSharding — leaves are
+        device_put with them, enabling restore onto a different mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        flat_template = _flatten(template)
+        flat_shardings = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for key in flat_template:
+            meta = manifest["leaves"][key]
+            arr = np.load(os.path.join(path, meta["file"]))
+            sh = flat_shardings.get(key)
+            loaded[key] = jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+
+        # rebuild tree in template order
+        leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+        keys_in_order = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+            for path_, _ in leaves_paths[0]
+        ]
+        new_leaves = [loaded[k] for k in keys_in_order]
+        return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves), step

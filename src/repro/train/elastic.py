@@ -1,0 +1,93 @@
+"""Elastic scaling + straggler mitigation.
+
+Elastic: on host failure, the controller rebuilds the largest usable mesh
+from the surviving device count (keeping the model axis intact — TP
+degree is fixed by the sharded weights; only the data/pod axes shrink),
+recomputes shardings, and restores the latest checkpoint onto the new
+topology (CheckpointManager.restore takes the new shardings).
+
+Straggler mitigation: a per-step timing watermark; a step whose duration
+exceeds ``threshold x`` the rolling median marks its host as a straggler.
+Policy hooks: "flag" (log only), "rebalance" (shrink the slow host's data
+shard — modeled), "evict" (treat as failure -> elastic re-mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    note: str
+
+
+def plan_remesh(
+    n_surviving: int,
+    model_parallel: int,
+    axis_names: Tuple[str, ...] = ("data", "model"),
+) -> ElasticPlan:
+    """Largest (data, model) mesh with the model axis preserved.
+
+    Weight shards fix the TP degree; data parallelism absorbs the loss.
+    E.g. 256 -> 240 devices with model=16 gives data=15.
+    """
+    if n_surviving < model_parallel:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with {n_surviving} devices"
+        )
+    data = n_surviving // model_parallel
+    used = data * model_parallel
+    return ElasticPlan(
+        mesh_shape=(data, model_parallel),
+        axis_names=axis_names,
+        n_devices=used,
+        note=f"{n_surviving} surviving -> mesh {data}x{model_parallel} ({used} used)",
+    )
+
+
+def build_mesh_from_plan(plan: ElasticPlan, devices: Optional[List] = None):
+    devices = devices if devices is not None else jax.devices()
+    devices = devices[: plan.n_devices]
+    arr = np.asarray(devices).reshape(plan.mesh_shape)
+    return jax.sharding.Mesh(arr, plan.axis_names)
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, window: int = 32, policy: str = "flag"):
+        self.threshold = threshold
+        self.window: Deque[float] = deque(maxlen=window)
+        self.policy = policy
+        self.flagged: List[Tuple[int, float, float]] = []  # (step, dur, median)
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> Optional[str]:
+        """Returns an action string when a straggler is detected."""
+        dur = time.perf_counter() - self._t0
+        self._step += 1
+        med = float(np.median(self.window)) if len(self.window) >= 8 else None
+        self.window.append(dur)
+        if med is not None and dur > self.threshold * med:
+            self.flagged.append((self._step, dur, med))
+            if self.policy == "evict":
+                return "evict"
+            if self.policy == "rebalance":
+                return "rebalance"
+            return "flag"
+        return None
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.window)) if self.window else 0.0

@@ -1,0 +1,207 @@
+"""Optimizers (pure pytree implementations — no optax dependency).
+
+AdamW for the normal path; Adafactor (factored second moment, no first
+moment by default) for trillion-parameter configs where Adam's 2x fp32
+state does not fit HBM.  Optimizer state inherits the parameter sharding
+(leaf-for-leaf), so ZeRO-style partitioning falls out of the param specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1
+        )
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * g32 * g32
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                m_new.astype(state_dtype),
+                v_new.astype(state_dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory O(rows + cols) per matrix)
+# ---------------------------------------------------------------------------
+
+def adafactor(
+    lr: Callable | float,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree_util.tree_map(one, params)
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - stepf ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                u = g32 * jax.lax.rsqrt(vr / jnp.maximum(denom, eps))[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_state = treedef.unflatten([o[1] for o in outs])
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m_new = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m_new).astype(p.dtype), m_new
+
+        out = jax.tree_util.tree_map(upd, grads, state, params)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str, lr, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[kind](lr, **kw)
+
+
+def state_axes(kind: str, param_axes_tree, param_shapes_tree):
+    """Logical axes for optimizer state, mirroring the parameter sharding
+    (ZeRO-style: state shards exactly like its parameter)."""
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    if kind in ("adamw",):
+        return {"m": param_axes_tree, "v": param_axes_tree}
+    if kind == "sgd":
+        return param_axes_tree
+    if kind == "adafactor":
+        def one(ax, shaped):
+            shape = shaped.shape
+            if len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128:
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": tuple(ax)}
+
+        return jax.tree_util.tree_map(one, param_axes_tree, param_shapes_tree, is_leaf=is_ax)
+    raise ValueError(kind)

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# CPU-only test environment; smoke tests must see exactly 1 device (the
+# dry-run — and only the dry-run — forces 512).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,154 @@
+"""All nine temporal algorithms vs the numpy reference oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reference as R
+from repro.core.algorithms import (
+    earliest_arrival,
+    earliest_arrival_multi,
+    fastest,
+    latest_departure,
+    shortest_duration,
+    temporal_betweenness,
+    temporal_bfs,
+    temporal_cc,
+    temporal_kcore,
+    temporal_pagerank,
+)
+from repro.core.onepass import earliest_arrival_onepass
+from repro.core.predicates import OrderingPredicateType as T
+from repro.core.tger import build_tger
+from repro.data.generators import synthetic_temporal_graph
+
+SEEDS = [3, 17]
+
+
+def _setup(seed, n_v=50, n_e=420):
+    g = synthetic_temporal_graph(n_v, n_e, seed=seed)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.2)), int(np.asarray(g.t_end).max()))
+    src = int(np.asarray(g.src)[seed % g.n_edges])
+    return g, win, src
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("pred", ["succeeds", "strictly_succeeds"])
+def test_earliest_arrival(seed, pred):
+    g, win, src = _setup(seed)
+    p = T.SUCCEEDS if pred == "succeeds" else T.STRICTLY_SUCCEEDS
+    got = np.asarray(earliest_arrival(g, src, win, pred=p))
+    ref = R.earliest_arrival_ref(g, src, win, pred)
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_latest_departure(seed):
+    g, win, src = _setup(seed)
+    got = np.asarray(latest_departure(g, src, win))
+    ref = R.latest_departure_ref(g, src, win)
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_temporal_bfs(seed):
+    g, win, src = _setup(seed)
+    hops, arr = temporal_bfs(g, src, win)
+    h_ref, a_ref = R.temporal_bfs_ref(g, src, win)
+    assert (np.asarray(hops) == h_ref).all()
+    assert (np.asarray(arr) == a_ref).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fastest(seed):
+    g, win, src = _setup(seed)
+    got = np.asarray(fastest(g, src, win, n_departures=256))
+    ref = R.fastest_ref(g, src, win)
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_shortest_duration_sound_and_exact(seed):
+    g, win, src = _setup(seed, n_v=35, n_e=220)
+    got = np.asarray(shortest_duration(g, src, win, n_buckets=256))
+    ref = R.shortest_duration_ref(g, src, win)
+    finite = np.isfinite(ref)
+    assert (np.isfinite(got) == finite).all()          # same reachable set
+    assert (got[finite] >= ref[finite] - 1e-6).all()   # sound
+    # exact on this resolution (windows fit in 256 buckets)
+    assert (got[finite] == ref[finite]).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_temporal_cc(seed):
+    g, win, _ = _setup(seed)
+    got = np.asarray(temporal_cc(g, win))
+    ref = R.temporal_cc_ref(g, win)
+    # same partition (label values both use min-vertex-id convention)
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_temporal_kcore(k):
+    g, win, _ = _setup(3)
+    got = np.asarray(temporal_kcore(g, k, win))
+    ref = R.temporal_kcore_ref(g, k, win)
+    assert (got == ref).all()
+
+
+def test_temporal_pagerank():
+    g, win, _ = _setup(17)
+    got = np.asarray(temporal_pagerank(g, win, n_iters=60))
+    ref = R.temporal_pagerank_ref(g, win, n_iters=60)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-7)
+
+
+def test_temporal_betweenness():
+    g, win, src = _setup(3, n_v=40, n_e=250)
+    got = np.asarray(temporal_betweenness(g, [src], win, n_buckets=512))
+    ref = R.temporal_betweenness_ref(g, [src], win)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_multi_source_vmap():
+    g, win, _ = _setup(3)
+    sources = [0, 1, 2, 3]
+    got = np.asarray(earliest_arrival_multi(g, sources, win))
+    for i, s in enumerate(sources):
+        assert (got[i] == R.earliest_arrival_ref(g, s, win)).all()
+
+
+def test_onepass_matches_frontier():
+    g, win, src = _setup(17)
+    idx = build_tger(g, degree_cutoff=16)
+    got = np.asarray(earliest_arrival_onepass(g, idx, src, win, chunk_size=64,
+                                              intra_chunk_iters=3))
+    ref = np.asarray(earliest_arrival(g, src, win))
+    assert (got == ref).all()
+
+
+def test_index_path_algorithms_match_scan():
+    g, win, src = _setup(3)
+    idx = build_tger(g, degree_cutoff=16)
+    budget = 1 << 9
+    for fn, kw in [
+        (earliest_arrival, {}),
+        (temporal_bfs, {}),
+    ]:
+        a = fn(g, src, win, access="scan", **kw)
+        b = fn(g, src, win, idx, access="index", budget=budget, **kw)
+        a = a if isinstance(a, tuple) else (a,)
+        b = b if isinstance(b, tuple) else (b,)
+        for x, y in zip(a, b):
+            assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_temporal_coreness_decomposition():
+    """core[v] >= k  <=>  v survives k-core peeling, for every k."""
+    from repro.core.algorithms import temporal_coreness
+
+    g, win, _ = _setup(3)
+    core = np.asarray(temporal_coreness(g, win, k_max=16))
+    for k in (1, 2, 4, 8, 16):
+        ref = R.temporal_kcore_ref(g, k, win)
+        assert ((core >= k) == ref).all()

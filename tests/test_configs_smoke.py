@@ -1,0 +1,37 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness (deliverable f)."""
+import pytest
+
+from repro.configs import ASSIGNED, get_arch, list_archs
+
+
+@pytest.mark.parametrize("arch_id", ASSIGNED + ["kairos"])
+def test_arch_smoke(arch_id):
+    spec = get_arch(arch_id)
+    metrics = spec.smoke(seed=0)
+    assert metrics, f"{arch_id} smoke returned nothing"
+    finite_keys = [k for k in metrics if "finite" in k or k == "matches_single_device"]
+    assert finite_keys, f"{arch_id} smoke has no finiteness assertion"
+    for k in finite_keys:
+        assert metrics[k], f"{arch_id}: {k} failed ({metrics})"
+
+
+def test_all_assigned_archs_registered():
+    known = set(list_archs())
+    for a in ASSIGNED:
+        assert a in known
+    assert "kairos" in known
+
+
+@pytest.mark.parametrize("arch_id", ASSIGNED)
+def test_cells_defined(arch_id):
+    spec = get_arch(arch_id)
+    assert len(spec.cells) == 4, f"{arch_id} must define its 4 shape cells"
+    for cell in spec.cells.values():
+        assert cell.kind in ("train", "prefill", "decode", "serve", "retrieval", "analytics")
+
+
+def test_lm_long_500k_skip_reason():
+    spec = get_arch("smollm-135m")
+    cell = spec.cells["long_500k"]
+    assert cell.skip and "full-attention" in cell.skip

@@ -1,0 +1,103 @@
+"""Distributed runtime: logical sharding rules + multi-device engine
+equivalence (subprocess with 8 forced host devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import AxisRules, DEFAULT_RULES, logical_spec, use_mesh
+
+
+def test_logical_spec_no_mesh_is_fully_specified():
+    spec = logical_spec((16, 32), ("batch", "mlp"))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_divisibility_fallback():
+    import jax
+
+    mesh = jax.make_mesh(
+        (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    # 9 heads on a model axis of size 1 -> trivially divisible
+    spec = logical_spec((9,), ("heads",), mesh=mesh)
+    assert spec == P("model")
+
+
+def test_missing_mesh_axes_dropped():
+    import jax
+
+    mesh = jax.make_mesh(
+        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    spec = logical_spec((8, 4), ("batch", "heads"), mesh=mesh)
+    # "pod" and "model" absent from mesh -> reduced/replicated
+    assert spec == P("data", None)
+
+
+def test_unknown_axis_raises():
+    with pytest.raises(KeyError):
+        logical_spec((4,), ("nonsense",))
+
+
+_SUBPROCESS_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.data.generators import power_law_temporal_graph
+    from repro.distributed import graph_engine as ge
+    from repro.core.algorithms import earliest_arrival
+    from repro.core.edgemap import INT_INF
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    g = power_law_temporal_graph(90, 2500, seed=13)
+    ts = np.asarray(g.t_start)
+    win = jnp.asarray([int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max())], jnp.int32)
+    sources = jnp.asarray([0, 1, 2, 3])
+    arr0 = jnp.full((4, g.n_vertices), INT_INF, jnp.int32)
+    arr0 = arr0.at[jnp.arange(4), sources].set(win[0])
+
+    edges = ge.shard_edges(mesh, g.src, g.dst, g.t_start, g.t_end)
+    evalid = ge.shard_edges(mesh, jnp.ones(g.n_edges, bool))[0]
+    out = ge.run_distributed_ea(mesh, arr0, edges, evalid, win, max_rounds=60)
+    ref = np.stack([np.asarray(earliest_arrival(g, int(s), (int(win[0]), int(win[1]))))
+                    for s in sources])
+    scan_ok = bool((np.asarray(out) == ref).all())
+
+    # selective (index-path) round equivalence on sorted-per-shard edges
+    ssrc, sdst, sts, ste, svalid = ge.sort_edges_by_time_per_shard(
+        mesh, g.src, g.dst, g.t_start, g.t_end)
+    sel_round = jax.jit(ge.make_ea_round_selective(mesh, g.n_vertices,
+                                                   budget_per_shard=1024))
+    arr = arr0
+    for _ in range(60):
+        new = sel_round(arr, ssrc, sdst, sts, ste, svalid, win)
+        if bool(jnp.all(new == arr)):
+            break
+        arr = new
+    sel_ok = bool((np.asarray(arr) == ref).all())
+    print(json.dumps({"scan_ok": scan_ok, "sel_ok": sel_ok}))
+    """
+)
+
+
+def test_distributed_engine_8dev_subprocess():
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROG],
+        capture_output=True, text=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["scan_ok"], "distributed scan-path EA != single-device EA"
+    assert res["sel_ok"], "distributed index-path EA != single-device EA"

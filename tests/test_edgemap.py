@@ -1,0 +1,98 @@
+"""TemporalEdgeMap: scan-path vs index-path equivalence (the core
+correctness property of selective indexing) + frontier semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edgemap import (
+    INT_INF,
+    frontier_from_sources,
+    index_view,
+    plan_access,
+    scan_view,
+    segment_combine,
+    temporal_edge_map,
+)
+from repro.core.predicates import OrderingPredicateType as T, edge_follows
+from repro.core.selective import CostModel
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import build_tger
+
+
+def _random_graph(rng, n_v, n_e, t_max=200):
+    src = rng.integers(0, n_v, n_e)
+    dst = rng.integers(0, n_v, n_e)
+    ts = rng.integers(0, t_max, n_e)
+    te = ts + rng.integers(0, 20, n_e)
+    return from_edges(src, dst, ts, te, n_vertices=n_v)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), qlo=st.floats(0.0, 0.95))
+def test_scan_index_equivalence(seed, qlo):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, 30, 300)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, qlo)), int(np.asarray(g.t_end).max()))
+    state = jnp.asarray(rng.integers(0, 200, 30), jnp.int32)
+    frontier = jnp.asarray(rng.random(30) < 0.6)
+
+    def relax(edges, s):
+        return edges.t_end, edge_follows(T.SUCCEEDS, s, edges.t_start, edges.t_end)
+
+    out_scan, _ = temporal_edge_map(
+        g, win, frontier, state, relax, "min", access="scan"
+    )
+    lo_hi = int(((ts >= win[0]) & (ts <= win[1])).sum())
+    budget = max(64, 1 << (lo_hi).bit_length())
+    out_idx, _ = temporal_edge_map(
+        g, win, frontier, state, relax, "min",
+        tger=idx, access="index", budget=budget,
+    )
+    assert (np.asarray(out_scan) == np.asarray(out_idx)).all()
+
+
+def test_direction_in():
+    rng = np.random.default_rng(7)
+    g = _random_graph(rng, 20, 120)
+    state = jnp.zeros(20, jnp.int32)
+    frontier = jnp.ones(20, dtype=bool)
+    win = (0, 10_000)
+
+    def relax(edges, s):
+        return edges.t_start, jnp.ones_like(edges.t_start, dtype=bool)
+
+    out, touched = temporal_edge_map(
+        g, win, frontier, state, relax, "max", direction="in"
+    )
+    # out[u] = max start time of any out-edge of u (reduce into src)
+    src = np.asarray(g.src)
+    ts = np.asarray(g.t_start)
+    expect = np.full(20, np.iinfo(np.int32).min)
+    np.maximum.at(expect, src, ts)
+    got = np.asarray(out)
+    assert (got[expect > np.iinfo(np.int32).min] == expect[expect > np.iinfo(np.int32).min]).all()
+
+
+def test_segment_combine_empty_segments():
+    vals = jnp.asarray([5, 3], jnp.int32)
+    ids = jnp.asarray([1, 1])
+    out = segment_combine(vals, ids, 4, "min")
+    assert int(out[1]) == 3
+    assert int(out[0]) == INT_INF  # empty -> identity
+
+
+def test_frontier_and_planning():
+    rng = np.random.default_rng(11)
+    g = _random_graph(rng, 25, 250)
+    idx = build_tger(g, degree_cutoff=8)
+    f = frontier_from_sources(25, [3, 7])
+    assert int(f.sum()) == 2
+    ts = np.asarray(g.t_start)
+    dec = plan_access(g, idx, (int(np.quantile(ts, 0.99)), int(ts.max() + 100)),
+                      CostModel())
+    assert dec.method in ("index", "scan")
+    dec2 = plan_access(g, None, (0, 100))
+    assert dec2.method == "scan"

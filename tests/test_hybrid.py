@@ -1,0 +1,91 @@
+"""Heavy/light hybrid edgemap: per-vertex-class selective indexing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithms import earliest_arrival, temporal_bfs
+from repro.core.edgemap import hybrid_budget, hybrid_view, scan_view
+from repro.core.predicates import in_window
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph
+
+
+@pytest.fixture(scope="module")
+def gi():
+    g = power_law_temporal_graph(150, 6000, seed=31)
+    return g, build_tger(g, degree_cutoff=64)
+
+
+def test_partition_covers_all_edges(gi):
+    g, idx = gi
+    src = np.asarray(g.src)
+    slot = np.asarray(idx.vertex_to_slot)
+    light = np.asarray(idx.light_eids)[: idx.n_light_edges]
+    assert (slot[src[light]] == -1).all()
+    heavy_count = int((slot[src] >= 0).sum())
+    assert idx.n_light_edges + heavy_count == g.n_edges
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+def test_hybrid_view_matches_scan_window_set(gi, q):
+    """The set of (edge, window-valid) pairs seen by hybrid == scan."""
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, q)), int(np.asarray(g.t_end).max()))
+    kb = hybrid_budget(g, idx, win)
+    hv = hybrid_view(g, idx, (jnp.int32(win[0]), jnp.int32(win[1])), kb)
+    ok = np.asarray(hv.mask & in_window(hv.t_start, hv.t_end, win[0], win[1]))
+    got = sorted(zip(
+        np.asarray(hv.src)[ok].tolist(), np.asarray(hv.dst)[ok].tolist(),
+        np.asarray(hv.t_start)[ok].tolist(),
+    ))
+    sv = scan_view(g)
+    ok2 = np.asarray(in_window(sv.t_start, sv.t_end, win[0], win[1]))
+    expect = sorted(zip(
+        np.asarray(sv.src)[ok2].tolist(), np.asarray(sv.dst)[ok2].tolist(),
+        np.asarray(sv.t_start)[ok2].tolist(),
+    ))
+    assert got == expect
+
+
+@pytest.mark.parametrize("q", [0.3, 0.95])
+def test_hybrid_ea_matches_scan(gi, q):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, q)), int(np.asarray(g.t_end).max()))
+    kb = hybrid_budget(g, idx, win)
+    src = int(np.argmax(np.asarray(g.out_degree)))
+    a = np.asarray(earliest_arrival(g, src, win, access="scan"))
+    b = np.asarray(earliest_arrival(g, src, win, idx, access="hybrid", budget=kb))
+    assert (a == b).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 300))
+def test_hybrid_property_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n_v, n_e = 40, 400
+    g = from_edges(
+        rng.integers(0, n_v, n_e), rng.integers(0, n_v, n_e),
+        rng.integers(0, 200, n_e), None, n_vertices=n_v,
+        rng=np.random.default_rng(seed),
+    )
+    idx = build_tger(g, degree_cutoff=12)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.5)), int(np.asarray(g.t_end).max()))
+    kb = hybrid_budget(g, idx, win)
+    s = int(rng.integers(0, n_v))
+    a = np.asarray(earliest_arrival(g, s, win, access="scan"))
+    b = np.asarray(earliest_arrival(g, s, win, idx, access="hybrid", budget=kb))
+    assert (a == b).all()
+
+
+def test_hybrid_work_reduction_on_selective_window(gi):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.99)), int(np.asarray(g.t_end).max()))
+    kb = hybrid_budget(g, idx, win)
+    work = idx.n_light_edges + idx.n_indexed * kb
+    assert work < g.n_edges / 2, "hybrid must touch far fewer edge slots"

@@ -1,0 +1,59 @@
+"""Allen-algebra ordering predicates (paper §2.2)."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import (
+    OrderingPredicateType as T,
+    edge_follows,
+    in_window,
+    interval_pair_satisfies,
+)
+
+interval = st.tuples(st.integers(0, 100), st.integers(0, 50)).map(
+    lambda t: (t[0], t[0] + t[1])
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=interval, b=interval)
+def test_succeeds_definition(a, b):
+    got = bool(interval_pair_satisfies(T.SUCCEEDS, a[0], a[1], b[0], b[1]))
+    assert got == (a[1] <= b[0])
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=interval, b=interval)
+def test_strictly_succeeds_implies_succeeds(a, b):
+    strict = bool(interval_pair_satisfies(T.STRICTLY_SUCCEEDS, a[0], a[1], b[0], b[1]))
+    weak = bool(interval_pair_satisfies(T.SUCCEEDS, a[0], a[1], b[0], b[1]))
+    assert not strict or weak
+    assert strict == (a[1] < b[0])
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=interval, b=interval)
+def test_overlaps_definition(a, b):
+    got = bool(interval_pair_satisfies(T.OVERLAPS, a[0], a[1], b[0], b[1]))
+    assert got == ((a[0] <= b[0]) and (a[1] <= b[1]))
+
+
+def test_overlaps_requires_src_start():
+    with pytest.raises(ValueError):
+        edge_follows(T.OVERLAPS, 1, 2, 3)
+
+
+@settings(max_examples=60, deadline=None)
+@given(e=interval, w=interval)
+def test_in_window(e, w):
+    got = bool(in_window(e[0], e[1], w[0], w[1]))
+    assert got == (e[0] >= w[0] and e[1] <= w[1])
+
+
+def test_vectorized():
+    ts = jnp.asarray([1, 5, 9])
+    te = jnp.asarray([2, 6, 10])
+    out = edge_follows(T.SUCCEEDS, jnp.asarray([2, 6, 11]), ts, te)
+    assert out.tolist() == [False, False, False]
+    out = edge_follows(T.SUCCEEDS, jnp.asarray([1, 5, 9]), ts, te)
+    assert out.tolist() == [True, True, True]

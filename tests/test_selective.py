@@ -1,0 +1,82 @@
+"""Selective-indexing cost model (paper §5, Eq. 1-3)."""
+import numpy as np
+import pytest
+
+from repro.core.selective import (
+    CostModel,
+    budget_for,
+    calibrate_constants,
+    decide_access,
+    per_vertex_decisions,
+)
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph
+
+
+@pytest.fixture(scope="module")
+def gi():
+    g = power_law_temporal_graph(150, 6000, seed=4)
+    return g, build_tger(g, degree_cutoff=32)
+
+
+def test_selective_window_uses_index(gi):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.98)), int(np.asarray(g.t_end).max()))
+    dec = decide_access(idx, g.n_edges, win)
+    assert dec.method == "index"
+    assert dec.selectivity < 0.15
+
+
+def test_broad_window_uses_scan(gi):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(ts.min()), int(np.asarray(g.t_end).max()))
+    dec = decide_access(idx, g.n_edges, win)
+    assert dec.method == "scan"
+    assert dec.selectivity > 0.5
+
+
+def test_force_overrides(gi):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(ts.min()), int(np.asarray(g.t_end).max()))
+    dec = decide_access(idx, g.n_edges, win, force="index")
+    # a full-window force degenerates back to scan via the budget cap
+    assert dec.method in ("index", "scan")
+    dec2 = decide_access(idx, g.n_edges, (int(np.quantile(ts, 0.99)), int(ts.max())),
+                         force="scan")
+    assert dec2.method == "scan"
+
+
+def test_budget_ladder_is_pow2():
+    m = CostModel()
+    for k in (1, 63, 64, 100, 5000, 12345):
+        b = budget_for(float(k), 1 << 20, m)
+        assert b & (b - 1) == 0
+        assert b >= min(k, 64)
+
+
+def test_cost_model_crossover():
+    """Eq. 3: index wins iff beta <= theta AND modeled cost is lower."""
+    m = CostModel(c_index=5.0, c_scan=1.0, theta_sel=0.15)
+    E = 100_000
+    assert m.choose(E, k_est=1000) == "index"      # beta=0.01
+    assert m.choose(E, k_est=50_000) == "scan"     # beta=0.5
+    # beta under theta but modeled index cost exceeds the scan cost
+    m_slow_index = CostModel(c_index=10.0, c_scan=1.0, theta_sel=0.15)
+    assert m_slow_index.choose(E, k_est=E * 0.14) == "scan"
+
+
+def test_calibration():
+    m = calibrate_constants(scan_time_per_edge=1e-9, index_time_per_edge=6e-9)
+    assert m.c_index == pytest.approx(6.0)
+
+
+def test_per_vertex_decisions(gi):
+    g, idx = gi
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.98)), int(np.asarray(g.t_end).max()))
+    use_index, k_est = per_vertex_decisions(idx, g.out_degree, win)
+    assert use_index.shape[0] == max(idx.n_indexed, 1)
+    assert (np.asarray(k_est) >= 0).all()

@@ -1,0 +1,54 @@
+"""Serving engine: continuous batching correctness vs reference greedy
+decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+
+CFG = tf.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                  d_ff=64, vocab=64, dtype=jnp.float32, q_chunk=8, kv_chunk=8)
+
+
+def _greedy_reference(params, prompt, n_new, pad_to):
+    toks = list(prompt.tolist())
+    for _ in range(n_new):
+        arr = np.zeros((1, pad_to), np.int32)
+        arr[0, : len(toks)] = toks
+        logits, _ = tf.forward(params, jnp.asarray(arr), CFG)
+        toks.append(int(jnp.argmax(logits[0, len(toks) - 1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_reference_greedy():
+    params = tf.init_params(jax.random.PRNGKey(0), CFG)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, 8).astype(np.int32) for _ in range(3)]
+    engine = ServeEngine(params, CFG, batch_slots=2, max_seq=32)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    stats = engine.run()
+    assert stats.requests_completed == 3
+    for i, p in enumerate(prompts):
+        # find the request object (engine consumed them)
+        pass
+    # re-run with explicit capture to compare tokens
+    engine2 = ServeEngine(params, CFG, batch_slots=2, max_seq=32)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine2.submit(r)
+    engine2.run()
+    for r in reqs:
+        ref = _greedy_reference(params, r.prompt, 5, 32)
+        assert r.generated == ref, f"request {r.rid}: {r.generated} != {ref}"
+
+
+def test_engine_respects_max_new_tokens():
+    params = tf.init_params(jax.random.PRNGKey(1), CFG)
+    engine = ServeEngine(params, CFG, batch_slots=4, max_seq=24)
+    engine.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                          max_new_tokens=4))
+    stats = engine.run()
+    assert stats.tokens_generated == 4

@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests for the paper's system: the full Kairos flow
+(build -> index -> plan -> execute) and its invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reference as R
+from repro.core.algorithms import earliest_arrival, temporal_pagerank
+from repro.core.edgemap import plan_access
+from repro.core.selective import CostModel
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph
+
+
+def test_full_kairos_flow_selective_window():
+    """Load -> TGER build -> cost-model plan -> index-path EA == oracle."""
+    g = power_law_temporal_graph(200, 8000, seed=21)
+    idx = build_tger(g, degree_cutoff=64)
+    ts = np.asarray(g.t_start)
+    window = (int(np.quantile(ts, 0.97)), int(np.asarray(g.t_end).max()))
+    plan = plan_access(g, idx, window, CostModel())
+    assert plan.method == "index", "a 3% window on bursty data must choose TGER"
+    src = int(np.argmax(np.asarray(g.out_degree)))
+    got = np.asarray(
+        earliest_arrival(g, src, window, idx,
+                         access=plan.method, budget=plan.budget)
+    )
+    ref = R.earliest_arrival_ref(g, src, window)
+    assert (got == ref).all()
+
+
+def test_full_kairos_flow_broad_window():
+    g = power_law_temporal_graph(200, 8000, seed=22)
+    idx = build_tger(g, degree_cutoff=64)
+    ts = np.asarray(g.t_start)
+    window = (int(ts.min()), int(np.asarray(g.t_end).max()))
+    plan = plan_access(g, idx, window, CostModel())
+    assert plan.method == "scan", "a full-range window must scan"
+    src = int(np.asarray(g.src)[0])
+    got = np.asarray(earliest_arrival(g, src, window, access="scan"))
+    ref = R.earliest_arrival_ref(g, src, window)
+    assert (got == ref).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_ea_monotonicity_property(seed):
+    """Widening the window can only improve (lower) arrival times."""
+    rng = np.random.default_rng(seed)
+    n_v, n_e = 25, 150
+    src_a = rng.integers(0, n_v, n_e)
+    dst_a = rng.integers(0, n_v, n_e)
+    ts = rng.integers(0, 100, n_e)
+    te = ts + rng.integers(0, 10, n_e)
+    g = from_edges(src_a, dst_a, ts, te, n_vertices=n_v)
+    s = int(src_a[0])
+    narrow = np.asarray(earliest_arrival(g, s, (40, 90)))
+    wide = np.asarray(earliest_arrival(g, s, (40, 120)))
+    reachable = narrow < np.iinfo(np.int32).max
+    assert (wide[reachable] <= narrow[reachable]).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_pagerank_mass_conservation(seed):
+    rng = np.random.default_rng(seed)
+    n_v, n_e = 30, 200
+    g = from_edges(
+        rng.integers(0, n_v, n_e), rng.integers(0, n_v, n_e),
+        rng.integers(0, 100, n_e), None, n_vertices=n_v,
+        rng=np.random.default_rng(seed),
+    )
+    pr = np.asarray(temporal_pagerank(g, (0, 10_000), n_iters=80))
+    assert pr.sum() == pytest.approx(1.0, rel=1e-3)
+    assert (pr > 0).all()
+
+
+def test_ea_respects_strictness():
+    """Zero-wait chains allowed by SUCCEEDS, forbidden by STRICTLY."""
+    from repro.core.predicates import OrderingPredicateType as T
+
+    # 0 -(t 1..2)-> 1 -(t 2..3)-> 2 : second edge starts exactly at arrival
+    g = from_edges([0, 1], [1, 2], [1, 2], [2, 3], n_vertices=3)
+    weak = np.asarray(earliest_arrival(g, 0, (0, 10), pred=T.SUCCEEDS))
+    strict = np.asarray(earliest_arrival(g, 0, (0, 10), pred=T.STRICTLY_SUCCEEDS))
+    assert weak[2] == 3
+    assert strict[2] == np.iinfo(np.int32).max

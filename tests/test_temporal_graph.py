@@ -1,0 +1,66 @@
+"""T-CSR structural invariants + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.temporal_graph import from_edges, validate
+from repro.data.generators import power_law_temporal_graph, synthetic_temporal_graph
+
+
+def test_build_and_validate():
+    g = synthetic_temporal_graph(50, 400, seed=0)
+    validate(g)
+    assert g.n_vertices == 50 and g.n_edges == 400
+
+
+def test_in_view_is_permutation():
+    g = synthetic_temporal_graph(40, 300, seed=1)
+    perm = np.asarray(g.in_perm)
+    assert sorted(perm.tolist()) == list(range(g.n_edges))
+    # in-view sorted by (dst, t_start)
+    dst = np.asarray(g.dst)[perm]
+    ts = np.asarray(g.t_start)[perm]
+    key = dst.astype(np.int64) * (ts.max() + 1) + ts
+    assert (np.diff(key) >= 0).all()
+
+
+def test_degrees_match_edges():
+    g = power_law_temporal_graph(64, 1000, seed=2)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    out_deg = np.asarray(g.out_degree)
+    in_deg = np.asarray(g.in_degree)
+    assert (out_deg == np.bincount(src, minlength=64)).all()
+    assert (in_deg == np.bincount(dst, minlength=64)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_edges=st.integers(1, 200),
+    n_vertices=st.integers(2, 30),
+    seed=st.integers(0, 1000),
+)
+def test_from_edges_property(n_edges, n_vertices, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    ts = rng.integers(0, 1000, n_edges)
+    te = ts + rng.integers(0, 100, n_edges)
+    g = from_edges(src, dst, ts, te, n_vertices=n_vertices)
+    validate(g)
+    # edge multiset preserved
+    orig = sorted(zip(src.tolist(), dst.tolist(), ts.tolist(), te.tolist()))
+    stored = sorted(
+        zip(
+            np.asarray(g.src).tolist(), np.asarray(g.dst).tolist(),
+            np.asarray(g.t_start).tolist(), np.asarray(g.t_end).tolist(),
+        )
+    )
+    assert orig == stored
+
+
+def test_missing_end_times_sampled():
+    g = from_edges([0, 1], [1, 0], [5, 10], None, n_vertices=2)
+    te = np.asarray(g.t_end)
+    ts = np.asarray(g.t_start)
+    assert (te >= ts).all()

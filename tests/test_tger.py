@@ -1,0 +1,111 @@
+"""TGER time-first index: window ranges, per-vertex 3-sided queries,
+bounded binary search, cardinality estimator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.histogram import estimate_window
+from repro.core.tger import (
+    bounded_searchsorted,
+    build_tger,
+    gather_window_edges,
+    vertex_prefix,
+    vertex_range,
+    window_range,
+)
+from repro.data.generators import power_law_temporal_graph, synthetic_temporal_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_index():
+    g = power_law_temporal_graph(120, 4000, seed=3)
+    idx = build_tger(g, degree_cutoff=32, n_time_buckets=16)
+    return g, idx
+
+
+def test_window_range_exact(graph_and_index):
+    g, idx = graph_and_index
+    ts = np.asarray(g.t_start)
+    for qlo, qhi in [(0.0, 1.0), (0.5, 0.9), (0.9, 1.0), (0.99, 1.0)]:
+        lo_t = int(np.quantile(ts, qlo))
+        hi_t = int(np.quantile(ts, qhi))
+        lo, hi = window_range(idx, lo_t, hi_t)
+        expect = int(((ts >= lo_t) & (ts <= hi_t)).sum())
+        assert int(hi - lo) == expect
+
+
+def test_gather_window_edges_masks(graph_and_index):
+    g, idx = graph_and_index
+    ts = np.asarray(g.t_start)
+    lo_t = int(np.quantile(ts, 0.95))
+    hi_t = int(ts.max())
+    lo, hi = window_range(idx, lo_t, hi_t)
+    eids, pos = gather_window_edges(idx, lo, 1024)
+    valid = np.asarray(pos < hi)
+    got = np.asarray(eids)[valid]
+    ts_g = ts[got]
+    assert ((ts_g >= lo_t) & (ts_g <= hi_t)).all()
+    assert valid.sum() == int(hi - lo) or valid.sum() == 1024
+
+
+def test_vertex_range_matches_numpy(graph_and_index):
+    g, idx = graph_and_index
+    off = np.asarray(g.out_offsets)
+    ts = np.asarray(g.t_start)
+    degs = off[1:] - off[:-1]
+    vs = np.argsort(degs)[-5:]
+    for v in vs:
+        sl = ts[off[v]: off[v + 1]]
+        if sl.size == 0:
+            continue
+        lo_t, hi_t = int(np.quantile(sl, 0.3)), int(np.quantile(sl, 0.8))
+        lo, hi = vertex_range(g, int(v), lo_t, hi_t)
+        assert int(hi - lo) == int(((sl >= lo_t) & (sl <= hi_t)).sum())
+
+
+def test_vertex_prefix_strict_vs_nonstrict(graph_and_index):
+    g, _ = graph_and_index
+    off = np.asarray(g.out_offsets)
+    ts = np.asarray(g.t_start)
+    v = int(np.argmax(off[1:] - off[:-1]))
+    sl = ts[off[v]: off[v + 1]]
+    bound = int(np.median(sl))
+    _, hi = vertex_prefix(g, v, bound, strict=False)
+    _, hi_s = vertex_prefix(g, v, bound, strict=True)
+    assert int(hi) - int(off[v]) == int((sl <= bound).sum())
+    assert int(hi_s) - int(off[v]) == int((sl < bound).sum())
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.lists(st.integers(0, 100), min_size=1, max_size=60),
+    value=st.integers(-5, 105),
+    side=st.sampled_from(["left", "right"]),
+)
+def test_bounded_searchsorted_property(data, value, side):
+    arr = jnp.asarray(sorted(data), jnp.int32)
+    got = int(bounded_searchsorted(arr, 0, len(data), value, side=side))
+    assert got == int(np.searchsorted(np.asarray(arr), value, side=side))
+
+
+def test_estimator_within_tolerance(graph_and_index):
+    g, idx = graph_and_index
+    ts = np.asarray(g.t_start)
+    te = np.asarray(g.t_end)
+    for q in (0.8, 0.9, 0.99):
+        lo_t = int(np.quantile(ts, q))
+        hi_t = int(te.max())
+        est = float(estimate_window(idx.global_hist, lo_t, hi_t))
+        true = int(((ts >= lo_t) & (te <= hi_t)).sum())
+        assert abs(est - true) <= max(0.15 * g.n_edges * (1 - q) + 50, 60)
+
+
+def test_selective_build_cutoff():
+    g = power_law_temporal_graph(100, 3000, seed=5)
+    idx = build_tger(g, degree_cutoff=64)
+    degs = np.asarray(g.out_degree)
+    expect = set(np.nonzero(degs >= 64)[0].tolist())
+    got = set(np.asarray(idx.indexed_ids).tolist()) - {-1}
+    assert got == expect

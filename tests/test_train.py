@@ -1,0 +1,203 @@
+"""Training substrate: optimizers, clipping, compression, checkpointing,
+elastic planning, straggler monitoring."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (
+    CompressionConfig,
+    compress_gradients,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+    wire_bytes,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import StragglerMonitor, build_mesh_from_plan, plan_remesh
+from repro.train.optimizer import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    sgd,
+    state_axes,
+    warmup_cosine,
+)
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def _quadratic_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(params, batch):
+        del batch
+        return jnp.sum((params["w"] - target) ** 2), {}
+
+    return loss, {"w": jnp.zeros(3)}
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor", "sgd"])
+def test_optimizers_converge_on_quadratic(kind):
+    loss, params = _quadratic_problem()
+    kw = {"weight_decay": 0.0} if kind in ("adamw", "adafactor") else {}
+    opt = make_optimizer(kind, 0.1, **kw)
+    step = make_train_step(loss, opt, TrainConfig(max_grad_norm=100.0))
+    state = init_train_state(params, opt, TrainConfig())
+    for _ in range(300):
+        params, state, m = step(params, state, {})
+    assert float(m["loss"]) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0)
+    assert float(sched(100)) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(1e-2)
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4, 4))}
+    state = opt.init(params)
+    assert state["big"]["vr"].shape == (256,)
+    assert state["big"]["vc"].shape == (512,)
+    assert state["small"]["v"].shape == (4, 4)
+    axes = state_axes("adafactor", {"big": ("fsdp", "mlp"), "small": (None, None)}, params)
+    assert axes["big"] == {"vr": ("fsdp",), "vc": ("mlp",)}
+
+
+def test_microbatching_matches_full_batch():
+    loss = lambda p, b: (jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {})
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((4, 2)), jnp.float32)}
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+        "y": jnp.asarray(rng.standard_normal((8, 2)), jnp.float32),
+    }
+    opt = sgd(0.1, momentum=0.0)
+    s1 = make_train_step(loss, opt, TrainConfig(microbatches=1, max_grad_norm=1e9))
+    s4 = make_train_step(loss, opt, TrainConfig(microbatches=4, max_grad_norm=1e9))
+    st = init_train_state(params, opt, TrainConfig())
+    p1, _, _ = s1(params, st, batch)
+    p4, _, _ = s4(params, st, batch)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the SUM of compressed grads tracks the true sum."""
+    rng = np.random.default_rng(1)
+    grads = [{"w": jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)}
+             for _ in range(50)]
+    cfg = CompressionConfig(kind="int8")
+    err = init_error_feedback(grads[0])
+    total_c = jnp.zeros(64)
+    total_t = jnp.zeros(64)
+    for g in grads:
+        gc, err = compress_gradients(g, err, cfg)
+        total_c += gc["w"]
+        total_t += g["w"]
+    resid = float(jnp.abs(total_c + err["w"] - total_t).max())
+    assert resid < 1e-4
+
+
+def test_topk_keeps_fraction():
+    cfg = CompressionConfig(kind="topk", topk_ratio=0.1)
+    g = {"w": jnp.asarray(np.random.default_rng(2).standard_normal(1000), jnp.float32)}
+    err = init_error_feedback(g)
+    gc, _ = compress_gradients(g, err, cfg)
+    nz = int((gc["w"] != 0).sum())
+    assert nz <= 110
+
+
+def test_wire_bytes_model():
+    params = {"w": jnp.zeros(1000)}
+    assert wire_bytes(params, CompressionConfig("none")) == 2000
+    assert wire_bytes(params, CompressionConfig("int8")) == 1000
+    assert wire_bytes(params, CompressionConfig("topk", topk_ratio=0.01)) == 80
+
+
+# ---------------------------------------------------------------------------
+# checkpointing / fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(5), "nested": {"b": jnp.ones((2, 3))}}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree_util.tree_map(lambda x: x * step, tree))
+    assert mgr.all_steps() == [2, 3]  # keep=2 garbage-collected step 1
+    restored, step = mgr.restore(tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(5) * 3)
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]), np.ones((2, 3)) * 3)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale .tmp dir from a crashed writer must not be visible."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(tmp_path / "step_0000000009.tmp")
+    mgr.save(1, {"x": jnp.zeros(2)})
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, {"x": jnp.arange(10)})
+    mgr.wait()
+    restored, step = mgr.restore({"x": jnp.zeros(10, jnp.int32)})
+    assert step == 5
+
+
+# ---------------------------------------------------------------------------
+# elastic + stragglers
+# ---------------------------------------------------------------------------
+
+def test_plan_remesh_preserves_model_axis():
+    plan = plan_remesh(240, model_parallel=16)
+    assert plan.mesh_shape == (15, 16)
+    assert plan.n_devices == 240
+    with pytest.raises(RuntimeError):
+        plan_remesh(8, model_parallel=16)
+
+
+def test_build_mesh_from_plan_single_device():
+    plan = plan_remesh(1, model_parallel=1)
+    mesh = build_mesh_from_plan(plan)
+    assert mesh.devices.shape == (1, 1)
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(threshold=2.0, window=16, policy="flag")
+    for _ in range(10):
+        mon.step_start()
+        mon._t0 -= 0.01  # simulate 10ms steps
+        assert mon.step_end() is None
+    mon.step_start()
+    mon._t0 -= 0.2      # simulate a 200ms straggler step
+    assert mon.step_end() == "flag"
+    assert len(mon.flagged) == 1
