@@ -27,8 +27,8 @@ _PROG = textwrap.dedent(
     from repro.core.edgemap import INT_INF
 
     n_dev = %d
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
     g = synthetic_temporal_graph(20_000, 1_000_000, seed=3)
     ts = np.asarray(g.t_start)
     win = jnp.asarray([int(np.quantile(ts, 0.9)), int(np.asarray(g.t_end).max())],

@@ -14,6 +14,7 @@ from repro.core.edgemap import hybrid_budget
 from repro.core.selective import CostModel, decide_access
 from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph, synthetic_temporal_graph
+from repro.engine import plan_query
 
 
 def run(n_v=20_000, n_e=1_000_000,
@@ -67,5 +68,48 @@ def run(n_v=20_000, n_e=1_000_000,
     return results
 
 
+def run_plan_sweep(n_v=5_000, n_e=200_000,
+                   fracs=(0.01, 0.05, 0.2),
+                   backends=("xla_segment", "pallas_tiled"),
+                   methods=("scan", "index", "hybrid"),
+                   iters=3):
+    """Paper Fig. 6 per backend: the access-method crossover measured through
+    the unified engine — every (method, backend) plan on the same EA query,
+    so the cost-model constants can be calibrated per execution backend.
+    (pallas_tiled runs in interpret mode on CPU; absolute numbers are only
+    meaningful on TPU, the *relative* method crossover per backend is the
+    quantity of interest.)"""
+    g = power_law_temporal_graph(n_v, n_e, seed=2)
+    idx = build_tger(g, degree_cutoff=1024)
+    ts = np.asarray(g.t_start)
+    te_max = int(np.asarray(g.t_end).max())
+    src = int(np.argmax(np.asarray(g.out_degree)))
+    results = {}
+    for frac in fracs:
+        win = (int(np.quantile(ts, 1 - frac)), te_max)
+        base = None
+        for backend in backends:
+            for method in methods:
+                plan = plan_query(g, idx, win, access=method, backend=backend)
+                if backend == "pallas_tiled" and plan.backend != backend:
+                    continue  # planner fell back (non-scan method): skip dup
+                t = time_fn(
+                    lambda: earliest_arrival(g, src, win, idx, plan=plan),
+                    iters=iters,
+                )
+                if base is None:
+                    base = t
+                emit(
+                    f"fig6/plan/{backend}/{method}/sel{frac}", t,
+                    f"cache_key={plan.cache_key};norm_vs_first={t/max(base,1e-12):.3f}",
+                )
+                results[(backend, method, frac)] = t
+        # the planner's own pick for this window
+        auto = plan_query(g, idx, win, access="auto")
+        emit(f"fig6/plan/auto/sel{frac}", 0.0, f"decision={auto.method};budget={auto.budget}")
+    return results
+
+
 if __name__ == "__main__":
     run()
+    run_plan_sweep()

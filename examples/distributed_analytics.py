@@ -24,8 +24,8 @@ from repro.distributed import graph_engine as ge
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     print("mesh:", dict(zip(mesh.axis_names, mesh.devices.shape)))
     g = power_law_temporal_graph(500, 20_000, seed=11)
     ts = np.asarray(g.t_start)

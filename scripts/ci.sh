@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: exactly the command ROADMAP.md pins, from any cwd.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,1 @@
+"""Kairos reproduction: temporal graph analytics on JAX/Pallas."""

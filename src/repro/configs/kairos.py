@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec, Cell, register
 from repro.distributed import graph_engine as ge
+from repro.engine.plan import make_plan
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -88,16 +89,16 @@ class KairosFamily(ArchSpec):
             S = m["sources"]
             arr = _sds((S, V), I32)
             arr_shard = NamedSharding(mesh, P("model", None))
-            if m["access"] == "index":
-                fn = ge.make_ea_round_selective(mesh, V, m["budget_per_shard"])
-            elif m["access"] == "sparse":
-                fn = ge.make_ea_round_sparse(mesh, V, m["exchange_budget"])
-            elif m["access"] == "selsparse":
-                fn = ge.make_ea_round_selective_sparse(
-                    mesh, V, m["budget_per_shard"], m["exchange_budget"]
-                )
-            else:
-                fn = ge.make_ea_round(mesh, V)
+            # the cells' access strings map onto the two orthogonal plan
+            # flags of the unified round builder (DESIGN.md §1)
+            plan = make_plan(
+                "index" if m["access"] in ("index", "selsparse") else "scan",
+                budget=m.get("budget_per_shard", 0)
+                if m["access"] in ("index", "selsparse") else 0,
+                exchange_budget=m.get("exchange_budget", 0)
+                if m["access"] in ("sparse", "selsparse") else 0,
+            )
+            fn = ge.make_ea_round_plan(mesh, V, plan)
             args = (arr, *edge_args, window)
             shardings = (arr_shard, e_shard, e_shard, e_shard, e_shard, e_shard, rep)
             return fn, args, shardings, (0,)
@@ -136,10 +137,9 @@ class KairosFamily(ArchSpec):
         from repro.core.edgemap import INT_INF
         from repro.data.generators import synthetic_temporal_graph
 
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.distributed.compat import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
         g = synthetic_temporal_graph(80, 600, seed=seed)
         ts = np.asarray(g.t_start)
         win = jnp.asarray([int(np.quantile(ts, 0.3)), int(ts.max() + 10)], I32)

@@ -10,3 +10,4 @@ from repro.core.edgemap import (  # noqa: F401
     frontier_from_sources,
     plan_access,
 )
+from repro.engine import AccessPlan, plan_query  # noqa: F401

@@ -12,7 +12,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import INT_INF, frontier_from_sources, temporal_edge_map
+from repro.core.edgemap import (
+    INT_INF,
+    frontier_from_sources,
+    resolve_plan,
+    temporal_edge_map,
+)
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -28,11 +34,13 @@ def temporal_bfs(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
 ):
     """Returns (hops[V], arrival[V]); hops = INT_INF when unreachable."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
@@ -52,7 +60,7 @@ def temporal_bfs(
         rnd, (arrival, hops, frontier) = carry
         cand, _ = temporal_edge_map(
             g, (ta, tb), frontier, arrival, relax, "min",
-            tger=tger, access=access, budget=budget,
+            tger=tger, plan=plan,
         )
         new_arrival = jnp.minimum(arrival, cand)
         improved = new_arrival < arrival

@@ -17,7 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.algorithms.paths import earliest_arrival
-from repro.core.edgemap import INT_INF, index_view, scan_view, segment_combine
+from repro.core.edgemap import (
+    INT_INF,
+    resolve_plan,
+    segment_combine,
+    view_for_plan,
+)
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -25,7 +31,7 @@ from repro.core.tger import TGERIndex
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "access", "budget", "max_rounds", "n_buckets"),
+    static_argnames=("pred", "max_rounds", "n_buckets"),
 )
 def _betweenness_single(
     g: TemporalGraph,
@@ -33,8 +39,7 @@ def _betweenness_single(
     window,
     tger,
     pred: OrderingPredicateType,
-    access: str,
-    budget: int,
+    plan,
     max_rounds: int,
     n_buckets: int,
 ):
@@ -42,13 +47,11 @@ def _betweenness_single(
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     t = earliest_arrival(
         g, source, (ta, tb), tger,
-        pred=pred, access=access, budget=budget, max_rounds=max_rounds,
+        pred=pred, plan=plan, max_rounds=max_rounds,
     )
     reached = t < INT_INF
 
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     t_src = t[edges.src]
     opt = (
         edges.mask
@@ -100,14 +103,16 @@ def temporal_betweenness(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.STRICTLY_SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
     n_buckets: int = 64,
 ) -> jax.Array:
     """BC[v] = sum over sources of the dependency of v (Brandes)."""
+    plan = resolve_plan(plan, access, budget)
     fn = lambda s: _betweenness_single(
-        g, s, window, tger, pred, access, budget, max_rounds, n_buckets
+        g, s, window, tger, pred, plan, max_rounds, n_buckets
     )
     deltas = jax.vmap(fn)(jnp.asarray(sources))
     return jnp.sum(deltas, axis=0)

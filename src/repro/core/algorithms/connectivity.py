@@ -9,7 +9,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import index_view, scan_view, segment_combine
+from repro.core.edgemap import resolve_plan, segment_combine, view_for_plan
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -21,17 +22,17 @@ def temporal_cc(
     window: Tuple[jax.Array, jax.Array],
     tger: Optional[TGERIndex] = None,
     *,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """labels[V]: component id = min vertex id in the component (vertices
     with no valid incident edge are singletons)."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     labels0 = jnp.arange(V, dtype=jnp.int32)
     max_rounds = max_rounds or V + 1

@@ -8,7 +8,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import index_view, scan_view, segment_combine
+from repro.core.edgemap import resolve_plan, segment_combine, view_for_plan
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -21,16 +22,16 @@ def temporal_kcore(
     window: Tuple[jax.Array, jax.Array],
     tger: Optional[TGERIndex] = None,
     *,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """alive[V] bool: membership of the temporal k-core within the window."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     alive0 = jnp.ones(V, dtype=bool)
     max_rounds = max_rounds or V + 1
@@ -65,17 +66,17 @@ def temporal_coreness(
     tger: Optional[TGERIndex] = None,
     *,
     k_max: int = 64,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
 ) -> jax.Array:
     """core[v] = max k such that v belongs to the temporal k-core within the
     window (full decomposition).  Peeling reuses the (k-1)-core's alive set
     — the k-core is a subset — so total work is O(k_max * rounds * E')."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
 
     def peel_to(alive, k):

@@ -8,10 +8,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import index_view, scan_view, segment_combine
+from repro.core.edgemap import combine_for_plan, resolve_plan, view_for_plan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
+from repro.engine.plan import AccessPlan
 
 
 @functools.partial(
@@ -24,24 +25,27 @@ def temporal_pagerank(
     *,
     damping: float = 0.85,
     n_iters: int = 100,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
 ) -> jax.Array:
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
-    out_deg = segment_combine(valid.astype(jnp.float32), edges.src, V, "sum")
+    # degree reduce goes into src — native-order layout does not apply
+    out_deg = combine_for_plan(plan, valid.astype(jnp.float32), edges.src, V, "sum")
     inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
     dangling = out_deg == 0
+    use_layout = plan.method == "scan"
 
     pr0 = jnp.full(V, 1.0 / V, jnp.float32)
 
     def body(pr, _):
         contrib = pr[edges.src] * inv_deg[edges.src]
-        agg = segment_combine(contrib, edges.dst, V, "sum", mask=valid)
+        agg = combine_for_plan(plan, contrib, edges.dst, V, "sum", mask=valid,
+                               use_layout=use_layout)
         dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0)) / V
         pr_new = (1.0 - damping) / V + damping * (agg + dangling_mass)
         return pr_new, None

@@ -16,11 +16,12 @@ import jax.numpy as jnp
 from repro.core.edgemap import (
     INT_INF,
     frontier_from_sources,
-    index_view,
-    scan_view,
+    resolve_plan,
     segment_combine,
     temporal_edge_map,
+    view_for_plan,
 )
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex, vertex_range
@@ -58,6 +59,7 @@ def earliest_arrival(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
@@ -69,7 +71,11 @@ def earliest_arrival(
     vertex joins the frontier at most once); the default label-correcting
     variant (frontier = improved vertices) is the standard correct form and
     matches it on graphs where earliest arrivals are settled in one visit.
+
+    Access method + backend come from ``plan`` (repro.engine.plan_query);
+    ``access``/``budget`` are the deprecated string shim.
     """
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
@@ -89,7 +95,7 @@ def earliest_arrival(
         arrival, frontier, visited = state
         cand, _ = temporal_edge_map(
             g, (ta, tb), frontier, arrival, relax, "min",
-            tger=tger, access=access, budget=budget,
+            tger=tger, plan=plan,
         )
         new_arrival = jnp.minimum(arrival, cand)
         improved = new_arrival < arrival
@@ -128,12 +134,14 @@ def latest_departure(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """ld[v] = latest time one can depart v and still reach ``target`` within
     the window.  Symmetric to EA on the in-direction with segment_max."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     ld0 = jnp.full(V, INT_NEG_INF, jnp.int32).at[target].set(tb)
@@ -159,7 +167,7 @@ def latest_departure(
         ld, frontier = state
         cand, _ = temporal_edge_map(
             g, (ta, tb), frontier, ld, relax, "max",
-            direction="in", tger=tger, access=access, budget=budget,
+            direction="in", tger=tger, plan=plan,
         )
         new_ld = jnp.maximum(ld, cand)
         improved = new_ld > ld
@@ -184,6 +192,7 @@ def fastest(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
@@ -196,6 +205,7 @@ def fastest(
     (<= n_departures) earliest out-edge start times inside the window, read
     via the TGER per-vertex 3-sided range query; the EA ladder is vmapped
     (and sharded over `model` in the distributed engine)."""
+    plan = resolve_plan(plan, access, budget)
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     lo, hi = vertex_range(g, jnp.asarray(source), ta, tb)
     pos = lo + jnp.arange(n_departures, dtype=jnp.int32)
@@ -210,7 +220,7 @@ def fastest(
     def one(t_d):
         arr = earliest_arrival(
             g, source, (t_d, tb), tger,
-            pred=pred, access=access, budget=budget, max_rounds=max_rounds,
+            pred=pred, plan=plan, max_rounds=max_rounds,
         )
         return jnp.where(arr == INT_INF, INT_INF, arr - t_d)
 
@@ -235,6 +245,7 @@ def shortest_duration(
     tger: Optional[TGERIndex] = None,
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
@@ -250,6 +261,7 @@ def shortest_duration(
     bucket-resolution completeness.  This replaces Wu et al.'s per-vertex
     ragged Pareto lists, which do not vectorize.
     """
+    plan = resolve_plan(plan, access, budget)
     V, P = g.n_vertices, n_buckets
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     # bucket bounds: uniform grid over the window (inclusive of tb).
@@ -259,10 +271,7 @@ def shortest_duration(
     dur0 = jnp.full((V, P), jnp.inf, jnp.float32).at[source, :].set(0.0)
     frontier0 = frontier_from_sources(V, source)
 
-    if access == "index":
-        edges = index_view(g, tger, (ta, tb), budget)
-    else:
-        edges = scan_view(g)
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     base_valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     cost = (
         edges.weight if use_weights

@@ -24,10 +24,11 @@ import jax.numpy as jnp
 from repro.core.edgemap import (
     INT_INF,
     frontier_from_sources,
-    index_view,
-    scan_view,
+    resolve_plan,
     segment_combine,
+    view_for_plan,
 )
+from repro.engine.plan import AccessPlan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -40,16 +41,16 @@ def overlaps_reachability(
     window: Tuple[jax.Array, jax.Array],
     tger: Optional[TGERIndex] = None,
     *,
+    plan: Optional[AccessPlan] = None,
     access: str = "scan",
     budget: int = 0,
     max_rounds: int = 0,
 ):
     """Returns (reachable[V] bool, last_start[V], last_end[V])."""
+    plan = resolve_plan(plan, access, budget)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = (
-        index_view(g, tger, (ta, tb), budget) if access == "index" else scan_view(g)
-    )
+    edges = view_for_plan(g, tger, (ta, tb), plan)
     base_ok = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     max_rounds = max_rounds or V + 1
 

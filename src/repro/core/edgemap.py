@@ -5,28 +5,28 @@ Frontier representation: a dense boolean mask over vertices (CPU Ligra
 switches between sparse and dense frontiers; on TPU the dense form is the
 vectorizable one, and frontier emptiness is a cheap ``jnp.any``).
 
-Two access paths (selective indexing, paper §5):
-
-  * scan  — masked segment-reduce over all edges (the Temporal-Ligra [34]
-            baseline the paper compares against);
-  * index — TGER time-first gather of a static budget of window edges,
-            then the same masked segment-reduce over K << E candidates.
-
-Both paths are semantically identical (property-tested); they differ only
-in work, which is the paper's entire design point.
+Access paths (selective indexing, paper §5) are no longer chosen here by a
+bare string: the edgemap executes an :class:`repro.engine.AccessPlan`
+produced by ``repro.engine.plan_query`` — method (scan | index | hybrid),
+budgets, and execution backend (xla_segment | pallas_tiled) in one static
+record (DESIGN.md §1).  All paths are semantically identical
+(property-tested); they differ only in work, which is the paper's entire
+design point.  The legacy ``access=``/``budget=`` kwargs remain as a thin
+shim for this PR only.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
-from repro.core.selective import AccessDecision, CostModel, decide_access
+from repro.core.selective import AccessDecision, CostModel
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex, gather_window_edges, window_range
+from repro.engine.backends import combine_for_plan, segment_combine  # noqa: F401 (re-export)
+from repro.engine.plan import AccessPlan, make_plan
 
 INT_INF = jnp.iinfo(jnp.int32).max
 FLOAT_INF = jnp.float32(jnp.inf)
@@ -107,56 +107,51 @@ def hybrid_view(g: TemporalGraph, idx: TGERIndex, window,
 
 def hybrid_budget(g: TemporalGraph, idx: TGERIndex, window,
                   floor: int = 16) -> int:
-    """Static per-vertex budget: the max in-window start-count over indexed
-    vertices (exact, host-side O(H log deg)), rounded to a power of two.
-    Guarantees hybrid_view completeness for this window."""
-    import numpy as np
+    """Static per-vertex budget guaranteeing hybrid_view completeness.
+    Thin wrapper over the engine planner's vectorized implementation."""
+    from repro.engine.plan import per_vertex_window_budget
 
-    if idx.n_indexed == 0:
-        return floor
-    ts = np.asarray(g.t_start)
-    off = np.asarray(g.out_offsets)
-    ws, we = int(window[0]), int(window[1])
-    worst = floor
-    for v in np.asarray(idx.indexed_ids):
-        if v < 0:
-            continue
-        sl = ts[off[v]: off[v + 1]]
-        cnt = int(np.searchsorted(sl, we, side="right")
-                  - np.searchsorted(sl, ws, side="left"))
-        worst = max(worst, cnt)
-    return 1 << (worst - 1).bit_length() if worst > 1 else 1
+    return per_vertex_window_budget(
+        g, idx, (int(window[0]), int(window[1])), floor=floor
+    )
 
 
-def _identity(combine: str, dtype) -> jax.Array:
-    if combine == "min":
-        return jnp.array(INT_INF if jnp.issubdtype(dtype, jnp.integer) else jnp.inf, dtype)
-    if combine == "max":
-        return jnp.array(
-            jnp.iinfo(jnp.int32).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf,
-            dtype,
-        )
-    if combine == "sum":
-        return jnp.array(0, dtype)
-    raise ValueError(combine)
+# ---------------------------------------------------------------------------
+# Plan resolution + plan-directed view building
+# ---------------------------------------------------------------------------
+
+def resolve_plan(
+    plan: Optional[AccessPlan],
+    access: str = "scan",
+    budget: int = 0,
+) -> AccessPlan:
+    """Back-compat shim (one PR): lift loose ``access``/``budget`` kwargs
+    into an AccessPlan on the xla_segment backend.  Passing ``plan`` wins."""
+    if plan is not None:
+        return plan
+    if access == "hybrid":
+        return make_plan("hybrid", per_vertex_budget=budget)
+    if access == "index":
+        return make_plan("index", budget=budget)
+    return make_plan("scan")
 
 
-def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=None):
-    """Masked segment-reduce; invalid lanes contribute the identity."""
-    ident = _identity(combine, values.dtype)
-    if mask is not None:
-        m = mask
-        while m.ndim < values.ndim:
-            m = m[..., None]
-        values = jnp.where(m, values, ident)
-        # route invalid lanes to segment 0 (still identity-valued, harmless)
-        segment_ids = jnp.where(mask, segment_ids, 0)
-    fn = dict(
-        min=jax.ops.segment_min, max=jax.ops.segment_max, sum=jax.ops.segment_sum
-    )[combine]
-    # segment_min/max fill empty segments with the dtype's max/min (the
-    # identity), segment_sum with 0 — identity semantics hold without fixup.
-    return fn(values, segment_ids, num_segments=num_segments)
+def view_for_plan(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    window,
+    plan: AccessPlan,
+) -> EdgeView:
+    """Build the candidate-edge view the plan's method prescribes."""
+    if plan.method == "index":
+        if tger is None or plan.budget <= 0:
+            raise ValueError("index access requires a TGER and a positive budget")
+        return index_view(g, tger, window, plan.budget)
+    if plan.method == "hybrid":
+        if tger is None or plan.per_vertex_budget <= 0:
+            raise ValueError("hybrid access requires a TGER and a per-vertex budget")
+        return hybrid_view(g, tger, window, plan.per_vertex_budget)
+    return scan_view(g)
 
 
 RelaxFn = Callable[[EdgeView, jax.Array], Tuple[jax.Array, jax.Array]]
@@ -174,28 +169,26 @@ def temporal_edge_map(
     pred: Optional[OrderingPredicateType] = None,
     direction: str = "out",         # 'out': reduce into dst; 'in': reduce into src
     tger: Optional[TGERIndex] = None,
-    access: str = "scan",           # 'scan' | 'index'
-    budget: int = 0,
+    plan: Optional[AccessPlan] = None,
+    access: str = "scan",           # deprecated shim — prefer ``plan``
+    budget: int = 0,                # deprecated shim — prefer ``plan``
     check_window: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Apply one round of temporal edge relaxation.
+    """Apply one round of temporal edge relaxation under an AccessPlan.
 
     Returns (combined[V, ...], touched[V]) where ``touched`` marks segments
     that received at least one valid contribution.  The ordering predicate
     is evaluated inside ``relax`` (it needs algorithm state); ``pred`` is
     accepted for symmetry with Table 2 and handed to relax via closure by
     the algorithm implementations.
+
+    The plan's backend executes the main combine; the tiled Pallas path is
+    eligible when reducing into destinations over the graph's native edge
+    order (scan method, out direction) — otherwise execution falls back to
+    the masked segment-reduce.
     """
-    if access == "index":
-        if tger is None or budget <= 0:
-            raise ValueError("index access requires a TGER and a positive budget")
-        edges = index_view(g, tger, window, budget)
-    elif access == "hybrid":
-        if tger is None or budget <= 0:
-            raise ValueError("hybrid access requires a TGER and a per-vertex budget")
-        edges = hybrid_view(g, tger, window, budget)
-    else:
-        edges = scan_view(g)
+    plan = resolve_plan(plan, access, budget)
+    edges = view_for_plan(g, tger, window, plan)
 
     if direction == "out":
         from_v, to_v = edges.src, edges.dst
@@ -212,7 +205,12 @@ def temporal_edge_map(
     cand, extra = relax(edges, gathered)
     valid &= extra
 
-    out = segment_combine(cand, to_v, g.n_vertices, combine, mask=valid)
+    # layout eligibility is static: native dst order only
+    use_layout = plan.method == "scan" and direction == "out"
+    out = combine_for_plan(
+        plan, cand, to_v, g.n_vertices, combine, mask=valid,
+        use_layout=use_layout,
+    )
     touched = segment_combine(
         valid.astype(jnp.int32), to_v, g.n_vertices, "sum", mask=None
     ) > 0
@@ -241,21 +239,23 @@ def plan_access(
     model: CostModel = CostModel(),
     access: str = "auto",
 ) -> AccessDecision:
-    """Host-side selective-indexing decision for a whole algorithm run
-    (window is constant across rounds, so one decision serves all rounds)."""
-    if access in ("scan", "index"):
-        forced = access
-    else:
-        forced = None
-    if tger is None:
-        return AccessDecision("scan", 0, float(g.n_edges), 1.0, 0.0, 0.0)
-    return decide_access(tger, g.n_edges, (int(window[0]), int(window[1])), model, force=forced)
+    """Back-compat shim (one PR): the scan-vs-index decision record.
+    Superseded by ``repro.engine.plan_query`` (plans) and
+    ``repro.engine.decision_for`` (diagnostics)."""
+    from repro.engine.plan import decision_for
+
+    forced = access if access in ("scan", "index") else None
+    return decision_for(g, tger, window, model, force=forced)
 
 
 __all__ = [
     "EdgeView",
     "scan_view",
     "index_view",
+    "hybrid_view",
+    "hybrid_budget",
+    "view_for_plan",
+    "resolve_plan",
     "segment_combine",
     "temporal_edge_map",
     "vertex_map",

@@ -22,6 +22,11 @@ ladder" rung so each rung compiles exactly once.  A per-vertex-class split
 
 Cost constants ``c``/``c'`` are measured, not assumed — see
 ``calibrate_constants`` and benchmarks/bench_selective.py.
+
+This module holds the cost-model *primitives*; the one planning surface
+that turns them (plus hybrid budgets and backend choice) into an
+executable plan is ``repro.engine.plan_query`` (DESIGN.md §1).
+``decide_access`` remains the scan/index decision record it produces.
 """
 from __future__ import annotations
 

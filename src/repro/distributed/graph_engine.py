@@ -11,6 +11,22 @@ One relaxation round = local masked segment-reduce over the device's edge
 shard + a single ``pmin``/``psum`` over the edge axes.  This preserves the
 paper's anti-message-passing argument at scale: the per-round communication
 is one associative combine of the [V] state, not per-edge messages.
+
+Round construction is plan-driven (DESIGN.md §1): ``make_ea_round_plan``
+composes ONE earliest-arrival round from two orthogonal AccessPlan flags —
+
+  * gather:   ``plan.budget > 0`` — selective indexing at shard granularity:
+              edges are kept t_start-sorted per shard, each round
+              binary-searches the window and gathers a static per-shard
+              budget of candidates (memory traffic O(log E_loc + K) instead
+              of O(E_loc));
+  * exchange: ``plan.exchange_budget > 0`` — frontier-sparse wire exchange:
+              each shard all-gathers only its top-K improvements instead of
+              pmin'ing the full [S, V] state (wire traffic O(K) instead of
+              O(V); overflow improvements are recomputed next round, so the
+              fixpoint is unchanged — tested).
+
+The four legacy constructors are thin wrappers over this one builder.
 """
 from __future__ import annotations
 
@@ -22,12 +38,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.edgemap import INT_INF
+from repro.distributed.compat import shard_map
+from repro.engine.plan import AccessPlan, make_plan
 
 EDGE_AXES = ("pod", "data")
 
 
 def _edge_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in EDGE_AXES if a in mesh.axis_names)
+
+
+def _src_spec(mesh: Mesh) -> P:
+    return P("model" if "model" in mesh.axis_names else None, None)
 
 
 def shard_edges(mesh: Mesh, *arrays):
@@ -46,82 +68,152 @@ def shard_edges(mesh: Mesh, *arrays):
     return out
 
 
-def make_ea_round(mesh: Mesh, n_vertices: int, strict: bool = False):
-    """Builds one distributed earliest-arrival relaxation round.
+# ---------------------------------------------------------------------------
+# shared round primitives (shard-local; composed under one shard_map)
+# ---------------------------------------------------------------------------
+
+def _gather_shard_candidates(src, dst, ts, te, evalid, ta, tb, budget: int):
+    """Candidate selection on one edge shard.
+
+    budget == 0: the full shard, window-masked (scan).
+    budget  > 0: selective indexing — ts is locally t_start-sorted (shard
+    invariant, see ``sort_edges_by_time_per_shard``), so the window is a
+    binary search + static-budget gather.
+    """
+    if budget <= 0:
+        ok = evalid & (ts >= ta) & (te <= tb)
+        return src, dst, ts, te, ok
+    lo = jnp.searchsorted(ts, ta, side="left")
+    hi = jnp.searchsorted(ts, tb, side="right")
+    pos = jnp.minimum(lo + jnp.arange(budget), ts.shape[0] - 1)
+    in_win = (lo + jnp.arange(budget)) < hi
+    s, d, t1, t2, ev = src[pos], dst[pos], ts[pos], te[pos], evalid[pos]
+    ok = ev & in_win & (t2 <= tb)
+    return s, d, t1, t2, ok
+
+
+def _relax_partial(arrival, s, d, t1, t2, ok_base, n_vertices: int, strict: bool):
+    """Shard-local EA relax: per-source segment-min of candidate arrivals."""
+    arr_src = arrival[:, s]                             # [S_loc, K]
+    follows = (arr_src < t1) if strict else (arr_src <= t1)
+    ok = ok_base[None, :] & follows & (arr_src < INT_INF)
+    cand = jnp.where(ok, t2[None, :], INT_INF)
+    ids = jnp.where(ok, d[None, :], 0)
+    return jax.vmap(
+        lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
+    )(cand, ids)
+
+
+def _exchange_dense(arrival, partial, axes):
+    """Dense combine: one pmin of the full [S_loc, V] state."""
+    combined = jax.lax.pmin(partial, axis_name=axes)
+    return jnp.minimum(arrival, combined)
+
+
+def _exchange_topk(arrival, partial, axes, n_vertices: int, k: int):
+    """Frontier-sparse combine: all-gather only each shard's K best
+    improvements (vertex id, arrival) and apply the union with a local
+    scatter-min.  Improvements beyond K are recomputed from the unchanged
+    local edges next round, so the fixpoint converges to the dense answer."""
+    improved = partial < arrival                        # [S_loc, V]
+    keyed = jnp.where(improved, partial, INT_INF)
+    neg_top, idx = jax.lax.top_k(-keyed, k)             # [S_loc, K]
+    vals = -neg_top
+    g_idx = jax.lax.all_gather(idx, axis_name=axes, tiled=False)
+    g_val = jax.lax.all_gather(vals, axis_name=axes, tiled=False)
+    g_idx = g_idx.reshape(-1, *idx.shape)               # [P, S_loc, K]
+    g_val = g_val.reshape(-1, *vals.shape)
+
+    def apply_one(arr_row, idx_rows, val_rows):
+        upd = jax.ops.segment_min(
+            val_rows.reshape(-1), idx_rows.reshape(-1),
+            num_segments=n_vertices,
+        )
+        return jnp.minimum(arr_row, upd)
+
+    return jax.vmap(apply_one, in_axes=(0, 1, 1))(arrival, g_idx, g_val)
+
+
+# ---------------------------------------------------------------------------
+# THE earliest-arrival round builder
+# ---------------------------------------------------------------------------
+
+def make_ea_round_plan(mesh: Mesh, n_vertices: int, plan: Optional[AccessPlan] = None,
+                       strict: bool = False):
+    """Build one distributed earliest-arrival relaxation round from a plan.
 
     arrival: [S, V] (sources sharded over `model`), edge arrays: [E] sharded
     over ("pod","data"), edge_valid: [E] bool (pre-masked padding).
-    Returns new arrival after one global relax.
+    ``plan.budget`` > 0 requires per-shard t_start-sorted edges
+    (``sort_edges_by_time_per_shard``).  Returns new arrival after one
+    global relax.
     """
+    plan = plan if plan is not None else make_plan("scan")
+    if plan.method == "hybrid":
+        raise ValueError(
+            "hybrid (per-vertex) access has no shard-granular form; "
+            "use make_plan('index', budget=...) for the selective round"
+        )
     axes = _edge_axes(mesh)
-    model_in_mesh = "model" in mesh.axis_names
-    src_spec = P("model" if model_in_mesh else None, None)
+    budget = plan.budget
+    kx = min(plan.exchange_budget, n_vertices) if plan.exchange_budget else 0
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
-        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
-        out_specs=src_spec,
-        check_vma=False,
+        in_specs=(_src_spec(mesh), P(axes), P(axes), P(axes), P(axes), P(axes), P()),
+        out_specs=_src_spec(mesh),
+        check=False,
     )
     def ea_round(arrival, src, dst, ts, te, evalid, window):
         ta, tb = window[0], window[1]
-        arr_src = arrival[:, src]                       # [S_loc, E_loc]
-        follows = (arr_src < ts) if strict else (arr_src <= ts)
-        ok = (
-            evalid & (ts >= ta) & (te <= tb)
-        )[None, :] & follows & (arr_src < INT_INF)
-        cand = jnp.where(ok, te[None, :], INT_INF)
-        ids = jnp.where(ok, dst[None, :], 0)
-        partial = jax.vmap(
-            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
-        )(cand, ids)
-        combined = jax.lax.pmin(partial, axis_name=axes)
-        return jnp.minimum(arrival, combined)
+        s, d, t1, t2, ok = _gather_shard_candidates(
+            src, dst, ts, te, evalid, ta, tb, budget
+        )
+        partial = _relax_partial(arrival, s, d, t1, t2, ok, n_vertices, strict)
+        if kx:
+            return _exchange_topk(arrival, partial, axes, n_vertices, kx)
+        return _exchange_dense(arrival, partial, axes)
 
     return ea_round
 
 
+# ---------------------------------------------------------------------------
+# legacy constructors (thin wrappers, one PR of back-compat)
+# ---------------------------------------------------------------------------
+
+def make_ea_round(mesh: Mesh, n_vertices: int, strict: bool = False):
+    """Dense scan round (legacy name)."""
+    return make_ea_round_plan(mesh, n_vertices, make_plan("scan"), strict)
+
+
 def make_ea_round_selective(mesh: Mesh, n_vertices: int, budget_per_shard: int,
                             strict: bool = False):
-    """Distributed index-path round: each edge shard keeps its edges in
-    time-first (t_start-sorted) order, binary-searches the window bounds
-    locally, gathers its static per-shard budget of candidate edges, and
-    relaxes only those — per-device work O(log E_loc + K) instead of
-    O(E_loc), combined with the same single ``pmin``.  This is selective
-    indexing at shard granularity (DESIGN.md §2)."""
-    axes = _edge_axes(mesh)
-    model_in_mesh = "model" in mesh.axis_names
-    src_spec = P("model" if model_in_mesh else None, None)
-    K = budget_per_shard
-
-    @functools.partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
-        out_specs=src_spec,
-        check_vma=False,
+    """Selective-gather round (legacy name): per-shard budgeted time-first
+    gather, dense exchange."""
+    return make_ea_round_plan(
+        mesh, n_vertices, make_plan("index", budget=budget_per_shard), strict
     )
-    def ea_round_idx(arrival, src, dst, ts, te, evalid, window):
-        ta, tb = window[0], window[1]
-        # local time-first search: ts is locally sorted (shard invariant)
-        lo = jnp.searchsorted(ts, ta, side="left")
-        hi = jnp.searchsorted(ts, tb, side="right")
-        pos = jnp.minimum(lo + jnp.arange(K), ts.shape[0] - 1)
-        in_win = (lo + jnp.arange(K)) < hi
-        s, d_, t1, t2, ev = src[pos], dst[pos], ts[pos], te[pos], evalid[pos]
-        arr_src = arrival[:, s]                          # [S_loc, K]
-        follows = (arr_src < t1) if strict else (arr_src <= t1)
-        ok = (ev & in_win & (t2 <= tb))[None, :] & follows & (arr_src < INT_INF)
-        cand = jnp.where(ok, t2[None, :], INT_INF)
-        ids = jnp.where(ok, d_[None, :], 0)
-        partial = jax.vmap(
-            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
-        )(cand, ids)
-        combined = jax.lax.pmin(partial, axis_name=axes)
-        return jnp.minimum(arrival, combined)
 
-    return ea_round_idx
+
+def make_ea_round_sparse(mesh: Mesh, n_vertices: int, exchange_budget: int,
+                         strict: bool = False):
+    """Frontier-sparse exchange round (legacy name): full scan, top-K wire."""
+    return make_ea_round_plan(
+        mesh, n_vertices, make_plan("scan", exchange_budget=exchange_budget), strict
+    )
+
+
+def make_ea_round_selective_sparse(mesh: Mesh, n_vertices: int,
+                                   budget_per_shard: int, exchange_budget: int,
+                                   strict: bool = False):
+    """Selective gather + sparse exchange composed (legacy name)."""
+    return make_ea_round_plan(
+        mesh, n_vertices,
+        make_plan("index", budget=budget_per_shard,
+                  exchange_budget=exchange_budget),
+        strict,
+    )
 
 
 def sort_edges_by_time_per_shard(mesh: Mesh, src, dst, ts, te):
@@ -157,11 +249,11 @@ def make_pagerank_round(mesh: Mesh, n_vertices: int, damping: float = 0.85):
     axes = _edge_axes(mesh)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P(), P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     def pr_round(pr, src, dst, ts, te, evalid, inv_out_deg, window):
         ta, tb = window[0], window[1]
@@ -175,139 +267,16 @@ def make_pagerank_round(mesh: Mesh, n_vertices: int, damping: float = 0.85):
     return pr_round
 
 
-def make_ea_round_sparse(mesh: Mesh, n_vertices: int, exchange_budget: int,
-                         strict: bool = False):
-    """Frontier-sparse exchange round (beyond-paper, EXPERIMENTS.md §Perf).
-
-    The dense round pmin's the full [S, V] state every round (V-sized wire
-    payload regardless of how few vertices changed).  Here each shard
-    relaxes locally, selects its K best *improvements* (vertex id, arrival)
-    — K a static budget — and all-gathers only those pairs; every shard
-    then applies the union with a local scatter-min.
-
-    Correctness: improvements not exchanged this round (budget overflow) are
-    recomputed from the unchanged local edges next round; each round commits
-    at least the K smallest outstanding arrivals per shard, so the fixpoint
-    loop converges to the same answer as the dense round (tested).  Mirrors
-    Ligra's dense->sparse frontier switch, applied to the wire.
-    """
-    axes = _edge_axes(mesh)
-    model_in_mesh = "model" in mesh.axis_names
-    src_spec = P("model" if model_in_mesh else None, None)
-    K = min(exchange_budget, n_vertices)
-
-    @functools.partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
-        out_specs=src_spec,
-        check_vma=False,
-    )
-    def ea_round_sparse(arrival, src, dst, ts, te, evalid, window):
-        ta, tb = window[0], window[1]
-        arr_src = arrival[:, src]                       # [S_loc, E_loc]
-        follows = (arr_src < ts) if strict else (arr_src <= ts)
-        ok = (
-            evalid & (ts >= ta) & (te <= tb)
-        )[None, :] & follows & (arr_src < INT_INF)
-        cand = jnp.where(ok, te[None, :], INT_INF)
-        ids = jnp.where(ok, dst[None, :], 0)
-        partial = jax.vmap(
-            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
-        )(cand, ids)
-        improved = partial < arrival                    # [S_loc, V]
-        # K smallest improved arrivals per source (ties to INT_INF when not
-        # improved -> naturally excluded)
-        keyed = jnp.where(improved, partial, INT_INF)
-        neg_top, idx = jax.lax.top_k(-keyed, K)         # [S_loc, K]
-        vals = -neg_top
-        # exchange only the (idx, vals) pairs across the edge axes
-        g_idx = jax.lax.all_gather(idx, axis_name=axes, tiled=False)   # [P, S_loc, K]
-        g_val = jax.lax.all_gather(vals, axis_name=axes, tiled=False)
-        n_sh = g_idx.shape[0] if g_idx.ndim == 3 else 1
-        g_idx = g_idx.reshape(n_sh, *idx.shape)
-        g_val = g_val.reshape(n_sh, *vals.shape)
-
-        def apply_one(arr_row, idx_rows, val_rows):
-            flat_i = idx_rows.reshape(-1)
-            flat_v = val_rows.reshape(-1)
-            upd = jax.ops.segment_min(flat_v, flat_i, num_segments=n_vertices)
-            return jnp.minimum(arr_row, upd)
-
-        new = jax.vmap(apply_one, in_axes=(0, 1, 1))(
-            arrival, g_idx, g_val
-        )
-        return new
-
-    return ea_round_sparse
-
-
-def make_ea_round_selective_sparse(mesh: Mesh, n_vertices: int,
-                                   budget_per_shard: int, exchange_budget: int,
-                                   strict: bool = False):
-    """Selective indexing + frontier-sparse exchange composed: the TGER
-    gather bounds per-round *memory* traffic (only window edges touched) and
-    the top-K improvement exchange bounds per-round *wire* traffic.  This is
-    the fully optimized kairos round (EXPERIMENTS.md §Perf iteration 2)."""
-    axes = _edge_axes(mesh)
-    model_in_mesh = "model" in mesh.axis_names
-    src_spec = P("model" if model_in_mesh else None, None)
-    Kb = budget_per_shard
-    Kx = min(exchange_budget, n_vertices)
-
-    @functools.partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(src_spec, P(axes), P(axes), P(axes), P(axes), P(axes), P()),
-        out_specs=src_spec,
-        check_vma=False,
-    )
-    def ea_round(arrival, src, dst, ts, te, evalid, window):
-        ta, tb = window[0], window[1]
-        lo = jnp.searchsorted(ts, ta, side="left")
-        hi = jnp.searchsorted(ts, tb, side="right")
-        pos = jnp.minimum(lo + jnp.arange(Kb), ts.shape[0] - 1)
-        in_win = (lo + jnp.arange(Kb)) < hi
-        s, d_, t1, t2, ev = src[pos], dst[pos], ts[pos], te[pos], evalid[pos]
-        arr_src = arrival[:, s]
-        follows = (arr_src < t1) if strict else (arr_src <= t1)
-        ok = (ev & in_win & (t2 <= tb))[None, :] & follows & (arr_src < INT_INF)
-        cand = jnp.where(ok, t2[None, :], INT_INF)
-        ids = jnp.where(ok, d_[None, :], 0)
-        partial = jax.vmap(
-            lambda c, i: jax.ops.segment_min(c, i, num_segments=n_vertices)
-        )(cand, ids)
-        improved = partial < arrival
-        keyed = jnp.where(improved, partial, INT_INF)
-        neg_top, idx = jax.lax.top_k(-keyed, Kx)
-        vals = -neg_top
-        g_idx = jax.lax.all_gather(idx, axis_name=axes, tiled=False)
-        g_val = jax.lax.all_gather(vals, axis_name=axes, tiled=False)
-        g_idx = g_idx.reshape(-1, *idx.shape)
-        g_val = g_val.reshape(-1, *vals.shape)
-
-        def apply_one(arr_row, idx_rows, val_rows):
-            upd = jax.ops.segment_min(
-                val_rows.reshape(-1), idx_rows.reshape(-1),
-                num_segments=n_vertices,
-            )
-            return jnp.minimum(arr_row, upd)
-
-        return jax.vmap(apply_one, in_axes=(0, 1, 1))(arrival, g_idx, g_val)
-
-    return ea_round
-
-
 def make_cc_round(mesh: Mesh, n_vertices: int):
     """One distributed hash-min label-propagation round (temporal CC)."""
     axes = _edge_axes(mesh)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(), P(axes), P(axes), P(axes), P(axes), P(axes), P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     def cc_round(labels, src, dst, ts, te, evalid, window):
         ta, tb = window[0], window[1]
@@ -337,11 +306,25 @@ def run_distributed_ea(
     window,
     max_rounds: int = 64,
     strict: bool = False,
+    plan: Optional[AccessPlan] = None,
+    edges_time_sorted: bool = False,
 ):
     """Fixpoint loop around the distributed round (host loop: round count is
-    small — graph diameter — and each round is one jitted SPMD program)."""
+    small — graph diameter — and each round is one jitted SPMD program).
+    ``plan`` selects gather/exchange behavior; default dense scan.
+
+    A plan with ``budget > 0`` gathers via per-shard binary search, which is
+    only correct on edge shards that are t_start-sorted within each shard
+    (``sort_edges_by_time_per_shard``); callers must assert that invariant
+    explicitly via ``edges_time_sorted=True`` — unsorted shards would return
+    silently wrong arrivals otherwise."""
+    if plan is not None and plan.budget > 0 and not edges_time_sorted:
+        raise ValueError(
+            "plan.budget > 0 requires per-shard t_start-sorted edges: pass "
+            "sort_edges_by_time_per_shard(...) output and edges_time_sorted=True"
+        )
     n_vertices = arrival0.shape[-1]
-    round_fn = jax.jit(make_ea_round(mesh, n_vertices, strict))
+    round_fn = jax.jit(make_ea_round_plan(mesh, n_vertices, plan, strict))
     src, dst, ts, te = edge_arrays
     arrival = arrival0
     for _ in range(max_rounds):

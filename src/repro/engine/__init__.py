@@ -1,0 +1,41 @@
+"""The access-plan engine: one planner, pluggable execution backends.
+
+    plan = plan_query(g, tger, window, access="auto", backend="pallas_tiled")
+    arrival = earliest_arrival(g, src, window, tger, plan=plan)
+
+See DESIGN.md §1 for the layering (planner -> plan -> backend) and §2 for
+the static-shape budget ladder the plan encodes.
+"""
+from repro.engine.plan import (  # noqa: F401
+    AccessPlan,
+    BACKENDS,
+    METHODS,
+    decision_for,
+    make_plan,
+    per_vertex_window_budget,
+    plan_query,
+)
+from repro.engine.backends import (  # noqa: F401
+    ExecutionBackend,
+    PallasTiledBackend,
+    XlaSegmentBackend,
+    combine_for_plan,
+    get_backend,
+    segment_combine,
+)
+
+__all__ = [
+    "AccessPlan",
+    "plan_query",
+    "make_plan",
+    "decision_for",
+    "per_vertex_window_budget",
+    "METHODS",
+    "BACKENDS",
+    "ExecutionBackend",
+    "XlaSegmentBackend",
+    "PallasTiledBackend",
+    "get_backend",
+    "combine_for_plan",
+    "segment_combine",
+]

@@ -1,0 +1,197 @@
+"""ExecutionBackend: how a plan's combines actually execute (DESIGN.md §1).
+
+Two implementations of the one protocol:
+
+  * ``xla_segment``  — masked ``jax.ops.segment_{min,max,sum}`` (XLA lowers
+    these to scatter; fine on CPU/GPU, serializing on TPU);
+  * ``pallas_tiled`` — destination-tile fused kernels
+    (kernels/layout.py + kernels/temporal_edgemap.py + kernels/segment_spmm.py):
+    the scatter becomes a VMEM-local compare-select tree (min) or a one-hot
+    MXU matmul (sum).  Runs in interpret mode on CPU; ``interpret=False``
+    on TPU.
+
+The pallas backend accelerates what the tile layout covers — int32 min and
+f32 sum combines over the graph's native destination order (scan method,
+out direction).  Everything else transparently falls back to xla_segment,
+so a plan's backend choice is a performance hint, never a correctness
+constraint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.plan import AccessPlan
+
+INT_INF = jnp.iinfo(jnp.int32).max
+
+
+def _identity(combine: str, dtype) -> jax.Array:
+    if combine == "min":
+        return jnp.array(INT_INF if jnp.issubdtype(dtype, jnp.integer) else jnp.inf, dtype)
+    if combine == "max":
+        return jnp.array(
+            jnp.iinfo(jnp.int32).min if jnp.issubdtype(dtype, jnp.integer) else -jnp.inf,
+            dtype,
+        )
+    if combine == "sum":
+        return jnp.array(0, dtype)
+    raise ValueError(combine)
+
+
+def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=None):
+    """Masked segment-reduce; invalid lanes contribute the identity."""
+    ident = _identity(combine, values.dtype)
+    if mask is not None:
+        m = mask
+        while m.ndim < values.ndim:
+            m = m[..., None]
+        values = jnp.where(m, values, ident)
+        # route invalid lanes to segment 0 (still identity-valued, harmless)
+        segment_ids = jnp.where(mask, segment_ids, 0)
+    fn = dict(
+        min=jax.ops.segment_min, max=jax.ops.segment_max, sum=jax.ops.segment_sum
+    )[combine]
+    # segment_min/max fill empty segments with the dtype's max/min (the
+    # identity), segment_sum with 0 — identity semantics hold without fixup.
+    return fn(values, segment_ids, num_segments=num_segments)
+
+
+class ExecutionBackend(Protocol):
+    """Backend protocol: one method — execute a (masked) segment combine."""
+
+    name: str
+
+    def combine(self, plan: Optional[AccessPlan], values, segment_ids,
+                num_segments: int, op: str, mask=None):
+        ...
+
+
+class XlaSegmentBackend:
+    """Today's masked segment-reduce, unchanged."""
+
+    name = "xla_segment"
+
+    def combine(self, plan, values, segment_ids, num_segments, op, mask=None):
+        del plan
+        return segment_combine(values, segment_ids, num_segments, op, mask=mask)
+
+
+class PallasTiledBackend:
+    """Destination-tile fused kernels, selected by the plan's layout.
+
+    ``combine`` expects ``segment_ids`` in the same edge order the layout
+    was built from (the graph's native order; callers gate on that).
+    """
+
+    name = "pallas_tiled"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    # -- eligibility (static, trace-time) -----------------------------------
+    def _supports(self, plan, values, num_segments, op) -> bool:
+        if plan is None or plan.layout_perm.shape[0] == 0:
+            return False
+        if plan.n_edges and values.shape[0] != plan.n_edges:
+            return False
+        if num_segments > plan.n_tiles * plan.tile_v:
+            return False
+        if op == "min":
+            return values.ndim == 1 and values.dtype == jnp.int32
+        if op == "sum":
+            return (
+                values.ndim in (1, 2)
+                and jnp.issubdtype(values.dtype, jnp.floating)
+            )
+        return False
+
+    def _gathered(self, plan, segment_ids):
+        perm = plan.layout_perm
+        safe = jnp.maximum(perm, 0)
+        seg_g = jnp.where(perm >= 0, jnp.asarray(segment_ids)[safe], 0)
+        dst_local = seg_g - (seg_g // plan.tile_v) * plan.tile_v
+        return safe, perm >= 0, dst_local
+
+    def combine(self, plan, values, segment_ids, num_segments, op, mask=None):
+        if not self._supports(plan, values, num_segments, op):
+            return segment_combine(values, segment_ids, num_segments, op, mask=mask)
+        if op == "min":
+            return self._combine_min(plan, values, segment_ids, num_segments, mask)
+        return self._combine_sum(plan, values, segment_ids, num_segments, mask)
+
+    def _combine_min(self, plan, values, segment_ids, num_segments, mask):
+        from repro.kernels.temporal_edgemap import segment_min_tiles
+
+        cand = values if mask is None else jnp.where(mask, values, INT_INF)
+        safe, in_perm, dst_local = self._gathered(plan, segment_ids)
+        cand_g = jnp.where(in_perm, cand[safe], INT_INF)
+        tiles = segment_min_tiles(
+            dst_local, cand_g, plan.layout_block_tile, plan.n_tiles,
+            tile_v=plan.tile_v, block_e=plan.block_e,
+            interpret=self.interpret,
+        )
+        return tiles.reshape(-1)[:num_segments]
+
+    def _combine_sum(self, plan, values, segment_ids, num_segments, mask):
+        from repro.kernels.segment_spmm import segment_spmm_tiles
+
+        squeeze = values.ndim == 1
+        msgs = values[:, None] if squeeze else values
+        safe, in_perm, dst_local = self._gathered(plan, segment_ids)
+        msg_g = msgs[safe]
+        valid = in_perm if mask is None else in_perm & mask[safe]
+        tiles = segment_spmm_tiles(
+            dst_local, msg_g, valid.astype(jnp.int32),
+            plan.layout_block_tile, plan.n_tiles,
+            tile_v=plan.tile_v, block_e=plan.block_e,
+            interpret=self.interpret,
+        )
+        out = tiles.reshape(-1, msgs.shape[-1])[:num_segments]
+        return out[:, 0] if squeeze else out
+
+
+_BACKENDS = {
+    "xla_segment": XlaSegmentBackend(),
+    "pallas_tiled": PallasTiledBackend(interpret=True),
+}
+
+
+def get_backend(name: str) -> ExecutionBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; have {sorted(_BACKENDS)}")
+
+
+def combine_for_plan(
+    plan: Optional[AccessPlan],
+    values,
+    segment_ids,
+    num_segments: int,
+    op: str,
+    mask=None,
+    *,
+    use_layout: bool = False,
+):
+    """Plan-directed combine.  ``use_layout=True`` asserts the caller's
+    ``segment_ids`` are in the edge order the plan's layout was built from
+    (scan view, reduce-into-destination); only then may the tiled kernels
+    run.  All other combines take the xla path."""
+    if plan is not None and use_layout and plan.backend == "pallas_tiled":
+        return get_backend("pallas_tiled").combine(
+            plan, values, segment_ids, num_segments, op, mask=mask
+        )
+    return segment_combine(values, segment_ids, num_segments, op, mask=mask)
+
+
+__all__ = [
+    "ExecutionBackend",
+    "XlaSegmentBackend",
+    "PallasTiledBackend",
+    "segment_combine",
+    "get_backend",
+    "combine_for_plan",
+]

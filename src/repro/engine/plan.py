@@ -1,0 +1,288 @@
+"""AccessPlan: the one planning surface for every access path (DESIGN.md §1).
+
+The paper's selective indexing (§5) picks the cheapest access method per
+query; before this layer existed the choice was a bare string threaded by
+hand through every algorithm, and the decision logic was split across
+``core/selective.decide_access``, ``core/edgemap.plan_access`` and
+``core/edgemap.hybrid_budget``.  ``plan_query`` absorbs all three: it is
+the single host-side planner that turns (graph, TGER, window) into an
+:class:`AccessPlan` — method + budgets + execution backend — which the
+edgemap, all algorithms, and the distributed round builder consume.
+
+``AccessPlan`` is a registered-dataclass pytree: the method/budget/backend
+fields are static metadata (they specialize the jitted program — exactly
+one compilation per budget-ladder rung), while the Pallas tile-layout
+arrays are ordinary pytree leaves so plans flow through ``jax.jit``
+unhindered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selective import AccessDecision, CostModel, decide_access
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex
+
+METHODS = ("scan", "index", "hybrid")
+BACKENDS = ("xla_segment", "pallas_tiled")
+
+DEFAULT_TILE_V = 512
+DEFAULT_BLOCK_E = 1024
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AccessPlan:
+    """One algorithm run's access decision, produced host-side.
+
+    Dynamic leaves carry the (per-graph, build-once) destination-tile
+    layout used by the ``pallas_tiled`` backend; they are zero-length
+    placeholders on the ``xla_segment`` backend.  Everything else is static
+    so jitted programs specialize per plan shape.
+    """
+
+    # -- dynamic (pytree leaves) --------------------------------------------
+    layout_perm: jax.Array        # i32[Ep] dst-tile-grouped edge ids (-1 pad)
+    layout_block_tile: jax.Array  # i32[NB] output tile owned by each block
+    # -- static (pytree metadata) -------------------------------------------
+    method: str = dataclasses.field(metadata=dict(static=True))        # scan|index|hybrid
+    backend: str = dataclasses.field(metadata=dict(static=True))       # xla_segment|pallas_tiled
+    budget: int = dataclasses.field(metadata=dict(static=True))        # global gather budget (index)
+    per_vertex_budget: int = dataclasses.field(metadata=dict(static=True))  # hybrid heavy-vertex budget
+    exchange_budget: int = dataclasses.field(metadata=dict(static=True))    # distributed top-K wire budget (0 = dense)
+    tile_v: int = dataclasses.field(metadata=dict(static=True))
+    block_e: int = dataclasses.field(metadata=dict(static=True))
+    n_tiles: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))  # layout domain (0 = no layout)
+    cache_key: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def view_budget(self) -> int:
+        """The budget the edge-view builder needs for this method."""
+        return self.per_vertex_budget if self.method == "hybrid" else self.budget
+
+
+def _cache_key(method: str, backend: str, budget: int, pvb: int,
+               exchange: int, tile_v: int, block_e: int) -> str:
+    return f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
+
+
+def _empty_i32() -> jax.Array:
+    # NB: never cached — a zero-size constant minted inside a jit trace is a
+    # tracer, and holding it across traces leaks it.
+    return jnp.zeros((0,), jnp.int32)
+
+
+def make_plan(
+    method: str = "scan",
+    backend: str = "xla_segment",
+    *,
+    budget: int = 0,
+    per_vertex_budget: int = 0,
+    exchange_budget: int = 0,
+    layout=None,
+    n_edges: int = 0,
+    tile_v: int = DEFAULT_TILE_V,
+    block_e: int = DEFAULT_BLOCK_E,
+) -> AccessPlan:
+    """Direct plan constructor (the planner-free path: legacy shims, the
+    distributed engine's per-shard plans, tests)."""
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if layout is not None:
+        perm = jnp.asarray(layout.perm)
+        block_tile = jnp.asarray(layout.block_tile)
+        tile_v, block_e, n_tiles = layout.tile_v, layout.block_e, layout.n_tiles
+    else:
+        perm = _empty_i32()
+        block_tile = _empty_i32()
+        n_tiles = 0
+        if backend == "pallas_tiled":
+            raise ValueError("pallas_tiled backend requires a TileLayout")
+    return AccessPlan(
+        layout_perm=perm,
+        layout_block_tile=block_tile,
+        method=method,
+        backend=backend,
+        budget=int(budget),
+        per_vertex_budget=int(per_vertex_budget),
+        exchange_budget=int(exchange_budget),
+        tile_v=int(tile_v),
+        block_e=int(block_e),
+        n_tiles=int(n_tiles),
+        n_edges=int(n_edges),
+        cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
+                             int(exchange_budget), int(tile_v), int(block_e)),
+    )
+
+
+def per_vertex_window_budget(
+    g: TemporalGraph,
+    idx: TGERIndex,
+    window: Tuple[int, int],
+    floor: int = 16,
+) -> int:
+    """Static per-vertex budget for the hybrid view: the max in-window
+    start-count over indexed vertices, rounded to a power of two.
+    Guarantees hybrid_view completeness for this window.
+
+    Exact and fully vectorized: each indexed vertex's T-CSR slice is
+    start-sorted, so slices concatenate into one globally sorted array of
+    composite keys (slot << 33 | t_start - INT32_MIN) and all 2H window
+    bounds resolve in a single batched ``np.searchsorted``, O(E_heavy +
+    H log E_heavy) host work instead of the former O(H) Python loop.
+    """
+    if idx.n_indexed == 0:
+        return floor
+    ts = np.asarray(g.t_start).astype(np.int64)
+    off = np.asarray(g.out_offsets).astype(np.int64)
+    hv = np.asarray(idx.indexed_ids)
+    hv = hv[hv >= 0].astype(np.int64)
+    if hv.size == 0:
+        return floor
+    lo, hi = off[hv], off[hv + 1]
+    lens = hi - lo
+    total = int(lens.sum())
+    ws, we = int(window[0]), int(window[1])
+    if total == 0:
+        worst = floor
+    else:
+        # flat edge positions of every heavy slice, slice-major
+        starts = np.cumsum(lens) - lens
+        flat = np.repeat(lo - starts, lens) + np.arange(total)
+        rank = np.repeat(np.arange(hv.size, dtype=np.int64), lens)
+        base = np.int64(np.iinfo(np.int32).min)
+        keys = (rank << 33) + (ts[flat] - base)
+        slots = np.arange(hv.size, dtype=np.int64) << 33
+        queries = np.concatenate([slots + (ws - base), slots + (we + 1 - base)])
+        bounds = np.searchsorted(keys, queries, side="left")
+        counts = bounds[hv.size:] - bounds[:hv.size]
+        worst = max(floor, int(counts.max()))
+    return 1 << (worst - 1).bit_length() if worst > 1 else 1
+
+
+# identity-keyed layout cache: the tile layout depends only on (dst array,
+# tile_v, block_e) and is O(E log E) host work — build once per graph, not
+# once per plan_query call.  The cached strong ref to dst pins its id().
+_LAYOUT_CACHE: dict = {}
+_LAYOUT_CACHE_MAX = 16
+
+
+def _layout_for(g: TemporalGraph, tile_v: int, block_e: int):
+    from repro.kernels.layout import build_tile_layout
+
+    key = (id(g.dst), int(g.n_edges), int(g.n_vertices), tile_v, block_e)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None and hit[0] is g.dst:
+        return hit[1]
+    layout = build_tile_layout(np.asarray(g.dst), g.n_vertices, tile_v, block_e)
+    # device-put the layout arrays once; make_plan's jnp.asarray is then a
+    # no-op and every plan for this graph shares the same buffers.
+    layout = dataclasses.replace(
+        layout, perm=jnp.asarray(layout.perm),
+        block_tile=jnp.asarray(layout.block_tile),
+    )
+    if len(_LAYOUT_CACHE) >= _LAYOUT_CACHE_MAX:
+        _LAYOUT_CACHE.pop(next(iter(_LAYOUT_CACHE)))
+    _LAYOUT_CACHE[key] = (g.dst, layout)
+    return layout
+
+
+def plan_query(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    window,
+    *,
+    model: CostModel = CostModel(),
+    access: str = "auto",
+    backend: str = "xla_segment",
+    exchange_budget: int = 0,
+    hybrid_floor: int = 16,
+    tile_v: int = DEFAULT_TILE_V,
+    block_e: int = DEFAULT_BLOCK_E,
+) -> AccessPlan:
+    """THE planner: one host-side decision per algorithm run (the window is
+    constant across rounds, so one plan serves every round).
+
+    ``access``:
+      * ``"auto"`` — paper Eq. 3 at call granularity via the SAT histogram
+        estimate (scan vs index; hybrid is opt-in because its win is the
+        skewed-hub regime the caller knows about);
+      * ``"scan"`` / ``"index"`` / ``"hybrid"`` — forced.
+
+    ``backend`` selects execution: ``xla_segment`` (masked segment-reduce)
+    or ``pallas_tiled`` (destination-tile fused kernels; requires the scan
+    method because the tile layout is a per-graph static grouping — the
+    planner falls back to xla_segment otherwise, recorded in the plan).
+    """
+    if access not in ("auto",) + METHODS:
+        raise ValueError(f"access must be auto|{'|'.join(METHODS)}, got {access!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+    win = (int(window[0]), int(window[1]))
+    n_edges = g.n_edges
+
+    budget = 0
+    per_vertex = 0
+    if tger is None:
+        method = "scan"
+        if access in ("index", "hybrid"):
+            raise ValueError(f"access={access!r} requires a TGER index")
+    elif access == "hybrid":
+        method = "hybrid"
+        per_vertex = per_vertex_window_budget(g, tger, win, floor=hybrid_floor)
+    else:
+        dec = decide_access(
+            tger, n_edges, win, model,
+            force=None if access == "auto" else access,
+        )
+        method = dec.method
+        if method == "index":
+            budget = dec.budget
+
+    if backend == "pallas_tiled" and method != "scan":
+        backend = "xla_segment"  # tile layout is per-graph static: scan only
+
+    layout = _layout_for(g, tile_v, block_e) if backend == "pallas_tiled" else None
+    return make_plan(
+        method, backend,
+        budget=budget, per_vertex_budget=per_vertex,
+        exchange_budget=int(exchange_budget),
+        layout=layout, n_edges=n_edges if layout is not None else 0,
+        tile_v=tile_v, block_e=block_e,
+    )
+
+
+def decision_for(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    window,
+    model: CostModel = CostModel(),
+    force: Optional[str] = None,
+) -> AccessDecision:
+    """Diagnostic view of the planner's scan-vs-index decision (the legacy
+    ``AccessDecision`` record, kept for benchmarks and the examples)."""
+    if tger is None:
+        return AccessDecision("scan", 0, float(g.n_edges), 1.0, 0.0, 0.0)
+    return decide_access(
+        tger, g.n_edges, (int(window[0]), int(window[1])), model, force=force
+    )
+
+
+__all__ = [
+    "AccessPlan",
+    "make_plan",
+    "plan_query",
+    "decision_for",
+    "per_vertex_window_budget",
+    "METHODS",
+    "BACKENDS",
+]

@@ -25,6 +25,20 @@ from jax.experimental.pallas import tpu as pltpu
 INT_INF = jnp.iinfo(jnp.int32).max
 
 
+def _tile_min_reduce(dst_loc, cand, tile_v: int, block_e: int, chunk: int):
+    """Chunked compare-select tree: per-tile minima of ``cand`` grouped by
+    ``dst_loc`` (local ids in [0, tile_v)) — the scatter-free segment-min."""
+    acc = jnp.full((tile_v,), INT_INF, jnp.int32)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, tile_v), 1)
+    for c in range(block_e // chunk):  # static unroll: [chunk, tile_v] VMEM tiles
+        d = jax.lax.dynamic_slice(dst_loc, (c * chunk,), (chunk,))
+        v = jax.lax.dynamic_slice(cand, (c * chunk,), (chunk,))
+        hit = d[:, None] == col_ids
+        vals = jnp.where(hit, v[:, None], INT_INF)
+        acc = jnp.minimum(acc, jnp.min(vals, axis=0))
+    return acc
+
+
 def _relax_min_kernel(
     # scalar prefetch
     block_tile_ref,      # i32[NB]   (unused in body; drives out index_map)
@@ -56,16 +70,7 @@ def _relax_min_kernel(
         & follows & (arr < INT_INF)
     )
     cand = jnp.where(ok, te, INT_INF)
-    dst_loc = dst_loc_ref[0, :]
-
-    acc = jnp.full((tile_v,), INT_INF, jnp.int32)
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, tile_v), 1)
-    for c in range(block_e // chunk):  # static unroll: [chunk, tile_v] VMEM tiles
-        d = jax.lax.dynamic_slice(dst_loc, (c * chunk,), (chunk,))
-        v = jax.lax.dynamic_slice(cand, (c * chunk,), (chunk,))
-        hit = d[:, None] == col_ids
-        vals = jnp.where(hit, v[:, None], INT_INF)
-        acc = jnp.minimum(acc, jnp.min(vals, axis=0))
+    acc = _tile_min_reduce(dst_loc_ref[0, :], cand, tile_v, block_e, chunk)
     out_ref[0, :] = jnp.minimum(out_ref[0, :], acc)
 
 
@@ -118,4 +123,69 @@ def temporal_relax_min_tiles(
         block_tile, jnp.asarray(window, jnp.int32),
         reshape(dst_local), reshape(arr_src), reshape(t_start),
         reshape(t_end), reshape(valid), init,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generic tile segment-min: the min-combine half of the fused kernel, exposed
+# so the engine's pallas_tiled backend can reduce *arbitrary* relax candidates
+# (predicate already applied by the edgemap) — not just the EA relax.
+# ---------------------------------------------------------------------------
+
+def _segment_min_kernel(
+    # scalar prefetch
+    block_tile_ref,      # i32[NB]   (drives the out index_map)
+    # VMEM blocks
+    dst_loc_ref,         # i32[1, block_e]  dst - tile_base, in [0, tile_v)
+    cand_ref,            # i32[1, block_e]  candidate values (INT_INF = masked)
+    init_ref,            # i32[1, tile_v]   aliased to out
+    out_ref,             # i32[1, tile_v]
+    *,
+    tile_v: int,
+    block_e: int,
+    chunk: int,
+):
+    del block_tile_ref, init_ref  # aliasing: out_ref holds the accumulator
+    acc = _tile_min_reduce(dst_loc_ref[0, :], cand_ref[0, :], tile_v, block_e, chunk)
+    out_ref[0, :] = jnp.minimum(out_ref[0, :], acc)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_tiles", "tile_v", "block_e", "chunk", "interpret")
+)
+def segment_min_tiles(
+    dst_local,      # i32[NB*block_e] grouped by tile (layout order)
+    cand,           # i32[NB*block_e] candidates, INT_INF where masked
+    block_tile,     # i32[NB]
+    n_tiles: int,
+    *,
+    tile_v: int = 512,
+    block_e: int = 1024,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns out[n_tiles, tile_v] per-tile minima (INT_INF elsewhere)."""
+    nb = block_tile.shape[0]
+    init = jnp.full((n_tiles, tile_v), INT_INF, jnp.int32)
+
+    edge_spec = pl.BlockSpec((1, block_e), lambda i, bt: (i, 0))
+    tile_spec = pl.BlockSpec((1, tile_v), lambda i, bt: (bt[i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[edge_spec] * 2 + [tile_spec],
+        out_specs=tile_spec,
+    )
+    kernel = functools.partial(
+        _segment_min_kernel, tile_v=tile_v, block_e=block_e, chunk=chunk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_v), jnp.int32),
+        input_output_aliases={3: 0},  # init (arg 3 incl. prefetch) -> out
+        interpret=interpret,
+    )(
+        block_tile,
+        dst_local.reshape(nb, block_e), cand.reshape(nb, block_e), init,
     )

@@ -7,22 +7,17 @@ two lines.
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _compat_make_mesh(shape, axes)
 
 
 # TPU v5e hardware model (roofline constants; see EXPERIMENTS.md §Roofline)

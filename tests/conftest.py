@@ -1,7 +1,75 @@
+
 import os
 import sys
+import types
 
 # CPU-only test environment; smoke tests must see exactly 1 device (the
 # dry-run — and only the dry-run — forces 512).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# hypothesis guard: the property tests are a dev-extra concern (see
+# pyproject.toml [project.optional-dependencies].dev).  When hypothesis is
+# absent, install a minimal shim so the 7 property-test modules still import
+# and their @given tests skip instead of killing collection.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # NB: deliberately zero-arg (no functools.wraps) — pytest would
+            # otherwise read the wrapped signature and demand fixtures for
+            # the hypothesis-driven parameters.
+            def wrapper():
+                pytest.skip("hypothesis not installed (dev extra)")
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    class _Settings:
+        """Accepts any configuration; as a decorator it is the identity."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+    class _Strategy:
+        """Chainable placeholder: supports the combinator surface the test
+        modules touch at import time (map/filter/flatmap)."""
+
+        def map(self, _fn):
+            return self
+
+        def filter(self, _fn):
+            return self
+
+        def flatmap(self, _fn):
+            return self
+
+    def _strategy(*_args, **_kwargs):
+        return _Strategy()
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in (
+        "integers", "floats", "booleans", "lists", "tuples",
+        "sampled_from", "just", "one_of", "text",
+    ):
+        setattr(_st, _name, _strategy)
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
+    _hyp.assume = lambda *_a, **_k: True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -20,9 +20,9 @@ def test_logical_spec_no_mesh_is_fully_specified():
 def test_divisibility_fallback():
     import jax
 
-    mesh = jax.make_mesh(
-        (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1,), ("model",))
     # 9 heads on a model axis of size 1 -> trivially divisible
     spec = logical_spec((9,), ("heads",), mesh=mesh)
     assert spec == P("model")
@@ -31,9 +31,9 @@ def test_divisibility_fallback():
 def test_missing_mesh_axes_dropped():
     import jax
 
-    mesh = jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     spec = logical_spec((8, 4), ("batch", "heads"), mesh=mesh)
     # "pod" and "model" absent from mesh -> reduced/replicated
     assert spec == P("data", None)
@@ -56,8 +56,8 @@ _SUBPROCESS_PROG = textwrap.dedent(
     from repro.core.algorithms import earliest_arrival
     from repro.core.edgemap import INT_INF
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     g = power_law_temporal_graph(90, 2500, seed=13)
     ts = np.asarray(g.t_start)
     win = jnp.asarray([int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max())], jnp.int32)

@@ -60,8 +60,8 @@ _PROG = textwrap.dedent(
         return params, state, losses
 
     # phase 1: 4x2 mesh, 10 steps, checkpoint
-    mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+    mesh8 = make_mesh((4, 2), ("data", "model"))
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     state = init_train_state(params, optimizer, tcfg)
     p_sh, s_sh = shardings_for(mesh8, params, state)

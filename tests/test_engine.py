@@ -1,0 +1,330 @@
+"""AccessPlan engine: planner decisions, backend parity matrix, and the
+unified distributed round vs the legacy variants it replaces.
+
+The parity matrix is the engine's core correctness property: every access
+method (scan | index | hybrid) on every backend (xla_segment |
+pallas_tiled-interpret) must produce bit-identical earliest-arrival and
+(numerically identical) PageRank results.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import earliest_arrival, temporal_pagerank
+from repro.core.edgemap import hybrid_budget, resolve_plan, temporal_edge_map
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph
+from repro.engine import make_plan, per_vertex_window_budget, plan_query
+
+
+def _random_graph(seed, n_v=60, n_e=800, t_max=200):
+    rng = np.random.default_rng(seed)
+    return from_edges(
+        rng.integers(0, n_v, n_e), rng.integers(0, n_v, n_e),
+        rng.integers(0, t_max, n_e), None, n_vertices=n_v,
+        rng=np.random.default_rng(seed),
+    )
+
+
+def _plans_for(g, idx, win, covering_budget):
+    """The full method x backend matrix for one (graph, window)."""
+    kb = per_vertex_window_budget(g, idx, win)
+    return {
+        "scan/xla": make_plan("scan"),
+        "index/xla": make_plan("index", budget=covering_budget),
+        "hybrid/xla": make_plan("hybrid", per_vertex_budget=kb),
+        "scan/pallas": plan_query(
+            g, idx, win, access="scan", backend="pallas_tiled",
+            tile_v=64, block_e=128,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_planner_auto_selective_window():
+    g = power_law_temporal_graph(200, 8000, seed=3)
+    idx = build_tger(g, degree_cutoff=64)
+    ts = np.asarray(g.t_start)
+    narrow = (int(np.quantile(ts, 0.995)), int(np.asarray(g.t_end).max()))
+    broad = (int(ts.min()), int(np.asarray(g.t_end).max()))
+    assert plan_query(g, idx, narrow).method == "index"
+    assert plan_query(g, idx, broad).method == "scan"
+    # no index -> always scan
+    assert plan_query(g, None, narrow).method == "scan"
+
+
+def test_planner_forced_and_fallbacks():
+    g = power_law_temporal_graph(100, 2000, seed=5)
+    idx = build_tger(g, degree_cutoff=64)
+    win = (0, int(np.asarray(g.t_end).max()))
+    p = plan_query(g, idx, win, access="hybrid")
+    assert p.method == "hybrid" and p.per_vertex_budget > 0
+    # pallas backend requires the scan method: planner falls back, recorded
+    p2 = plan_query(g, idx, win, access="hybrid", backend="pallas_tiled")
+    assert p2.backend == "xla_segment"
+    p3 = plan_query(g, idx, win, access="scan", backend="pallas_tiled")
+    assert p3.backend == "pallas_tiled" and p3.layout_perm.shape[0] > 0
+    with pytest.raises(ValueError):
+        plan_query(g, None, win, access="index")
+    with pytest.raises(ValueError):
+        plan_query(g, idx, win, backend="nope")
+
+
+def test_resolve_plan_legacy_shim():
+    p = resolve_plan(None, "index", 128)
+    assert p.method == "index" and p.budget == 128
+    p = resolve_plan(None, "hybrid", 32)
+    assert p.method == "hybrid" and p.per_vertex_budget == 32
+    explicit = make_plan("scan")
+    assert resolve_plan(explicit, "index", 128) is explicit
+
+
+def test_vectorized_budget_matches_reference_loop():
+    """The batched-searchsorted budget == the exact per-vertex loop."""
+    for seed in range(6):
+        g = _random_graph(seed, n_v=40, n_e=500)
+        idx = build_tger(g, degree_cutoff=12)
+        ts = np.asarray(g.t_start)
+        off = np.asarray(g.out_offsets)
+        for q in (0.0, 0.5, 0.95):
+            win = (int(np.quantile(ts, q)), int(np.asarray(g.t_end).max()))
+            worst = 16
+            for v in np.asarray(idx.indexed_ids):
+                if v < 0:
+                    continue
+                sl = ts[off[v]: off[v + 1]]
+                cnt = int(
+                    np.searchsorted(sl, win[1], side="right")
+                    - np.searchsorted(sl, win[0], side="left")
+                )
+                worst = max(worst, cnt)
+            expect = 1 << (worst - 1).bit_length() if worst > 1 else 1
+            assert per_vertex_window_budget(g, idx, win) == expect
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: every method x backend agrees
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_parity_matrix_earliest_arrival(seed):
+    g = _random_graph(seed)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max()))
+    in_win = int(((ts >= win[0]) & (ts <= win[1])).sum())
+    budget = max(64, 1 << in_win.bit_length())
+    src = int(np.random.default_rng(seed).integers(0, g.n_vertices))
+
+    results = {
+        name: np.asarray(earliest_arrival(g, src, win, idx, plan=plan))
+        for name, plan in _plans_for(g, idx, win, budget).items()
+    }
+    ref = results.pop("scan/xla")
+    for name, got in results.items():
+        assert (got == ref).all(), f"{name} diverges from scan/xla"
+
+
+@pytest.mark.parametrize("seed", [1, 11])
+def test_parity_matrix_pagerank(seed):
+    g = _random_graph(seed)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.3)), int(np.asarray(g.t_end).max()))
+    in_win = int(((ts >= win[0]) & (ts <= win[1])).sum())
+    budget = max(64, 1 << in_win.bit_length())
+
+    results = {
+        name: np.asarray(temporal_pagerank(g, win, idx, n_iters=25, plan=plan))
+        for name, plan in _plans_for(g, idx, win, budget).items()
+    }
+    ref = results.pop("scan/xla")
+    for name, got in results.items():
+        np.testing.assert_allclose(
+            got, ref, rtol=1e-5, atol=1e-7,
+            err_msg=f"{name} diverges from scan/xla",
+        )
+
+
+def test_pallas_backend_inside_edgemap_min():
+    """temporal_edge_map routes min-combines through the tiled kernel and
+    matches the xla backend bit-for-bit (the acceptance property)."""
+    from repro.core.predicates import OrderingPredicateType as T, edge_follows
+
+    g = _random_graph(42, n_v=130, n_e=1500)
+    idx = build_tger(g, degree_cutoff=8)
+    ts = np.asarray(g.t_start)
+    win = (int(np.quantile(ts, 0.2)), int(np.asarray(g.t_end).max()))
+    rng = np.random.default_rng(0)
+    state = jnp.asarray(rng.integers(0, 200, g.n_vertices), jnp.int32)
+    frontier = jnp.asarray(rng.random(g.n_vertices) < 0.6)
+
+    def relax(edges, s):
+        return edges.t_end, edge_follows(T.SUCCEEDS, s, edges.t_start, edges.t_end)
+
+    p_pal = plan_query(g, idx, win, access="scan", backend="pallas_tiled",
+                       tile_v=64, block_e=128)
+    out_x, touched_x = temporal_edge_map(
+        g, win, frontier, state, relax, "min", plan=make_plan("scan")
+    )
+    out_p, touched_p = temporal_edge_map(
+        g, win, frontier, state, relax, "min", plan=p_pal
+    )
+    assert (np.asarray(out_x) == np.asarray(out_p)).all()
+    assert (np.asarray(touched_x) == np.asarray(touched_p)).all()
+
+
+# ---------------------------------------------------------------------------
+# unified distributed round vs the legacy variants it replaces
+# ---------------------------------------------------------------------------
+
+def test_legacy_wrappers_trace_identically_to_plan_builder():
+    """The four legacy constructors are THIN wrappers: each must trace to
+    exactly the same jaxpr as ``make_ea_round_plan`` with the equivalent
+    plan (no XLA compile needed — this is a program-identity check)."""
+    import jax
+
+    from repro.distributed import graph_engine as ge
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    g = _random_graph(5, n_v=30, n_e=200)
+    V, E = g.n_vertices, g.n_edges
+    arr0 = jnp.zeros((2, V), jnp.int32)
+    e_i32 = jnp.zeros(E, jnp.int32)
+    e_bool = jnp.zeros(E, bool)
+    win = jnp.zeros(2, jnp.int32)
+    args = (arr0, e_i32, e_i32, e_i32, e_i32, e_bool, win)
+
+    pairs = [
+        (ge.make_ea_round(mesh, V),
+         ge.make_ea_round_plan(mesh, V, make_plan("scan"))),
+        (ge.make_ea_round_selective(mesh, V, 128),
+         ge.make_ea_round_plan(mesh, V, make_plan("index", budget=128))),
+        (ge.make_ea_round_sparse(mesh, V, 16),
+         ge.make_ea_round_plan(mesh, V, make_plan("scan", exchange_budget=16))),
+        (ge.make_ea_round_selective_sparse(mesh, V, 128, 16),
+         ge.make_ea_round_plan(
+             mesh, V, make_plan("index", budget=128, exchange_budget=16))),
+    ]
+    for i, (legacy_fn, plan_fn) in enumerate(pairs):
+        legacy_jaxpr = str(jax.make_jaxpr(legacy_fn)(*args))
+        plan_jaxpr = str(jax.make_jaxpr(plan_fn)(*args))
+        assert legacy_jaxpr == plan_jaxpr, f"wrapper {i} is not a thin wrapper"
+
+
+def test_distributed_plan_guards():
+    """Hybrid plans are rejected at shard granularity, and a gather plan
+    without the sorted-shards assertion is refused instead of silently
+    returning wrong arrivals."""
+    from repro.distributed import graph_engine as ge
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="hybrid"):
+        ge.make_ea_round_plan(mesh, 10, make_plan("hybrid", per_vertex_budget=8))
+    arr0 = jnp.zeros((1, 10), jnp.int32)
+    e = jnp.zeros(4, jnp.int32)
+    with pytest.raises(ValueError, match="sorted"):
+        ge.run_distributed_ea(
+            mesh, arr0, (e, e, e, e), jnp.ones(4, bool), jnp.zeros(2, jnp.int32),
+            plan=make_plan("index", budget=64),
+        )
+
+
+def test_layout_cache_reused_across_plans():
+    from repro.engine import plan as plan_mod
+
+    g = _random_graph(2, n_v=50, n_e=400)
+    idx = build_tger(g, degree_cutoff=8)
+    win = (0, 10_000)
+    p1 = plan_query(g, idx, win, access="scan", backend="pallas_tiled",
+                    tile_v=64, block_e=128)
+    p2 = plan_query(g, idx, (5, 9_000), access="scan", backend="pallas_tiled",
+                    tile_v=64, block_e=128)
+    assert p1.layout_perm is p2.layout_perm  # same cached TileLayout arrays
+    key = (id(g.dst), g.n_edges, g.n_vertices, 64, 128)
+    assert key in plan_mod._LAYOUT_CACHE
+
+
+_SUBPROCESS_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.data.generators import power_law_temporal_graph
+    from repro.distributed import graph_engine as ge
+    from repro.distributed.compat import make_mesh
+    from repro.engine.plan import make_plan
+    from repro.core.algorithms import earliest_arrival
+    from repro.core.edgemap import INT_INF
+
+    mesh = make_mesh((2, 2), ("data", "model"))
+    g = power_law_temporal_graph(90, 2500, seed=17)
+    ts = np.asarray(g.t_start)
+    win = jnp.asarray([int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max())], jnp.int32)
+    sources = jnp.asarray([0, 1, 2, 3])
+    arr0 = jnp.full((4, g.n_vertices), INT_INF, jnp.int32)
+    arr0 = arr0.at[jnp.arange(4), sources].set(win[0])
+    ref = np.stack([np.asarray(earliest_arrival(g, int(s), (int(win[0]), int(win[1]))))
+                    for s in sources])
+
+    edges = ge.shard_edges(mesh, g.src, g.dst, g.t_start, g.t_end)
+    evalid = ge.shard_edges(mesh, jnp.ones(g.n_edges, bool))[0]
+    ssrc, sdst, sts, ste, svalid = ge.sort_edges_by_time_per_shard(
+        mesh, g.src, g.dst, g.t_start, g.t_end)
+
+    def fixpoint(round_fn, arrays, valid):
+        arr = arr0
+        fn = jax.jit(round_fn)
+        for _ in range(60):
+            new = fn(arr, *arrays, valid, win)
+            if bool(jnp.all(new == arr)):
+                break
+            arr = new
+        return np.asarray(arr)
+
+    plans = {
+        "scan": make_plan("scan"),
+        "selective": make_plan("index", budget=1024),
+        "sparse": make_plan("scan", exchange_budget=32),
+        "selsparse": make_plan("index", budget=1024, exchange_budget=32),
+    }
+    out = {}
+    for name, plan in plans.items():
+        arrays = (ssrc, sdst, sts, ste) if plan.budget else tuple(edges)
+        valid = svalid if plan.budget else evalid
+        got = fixpoint(ge.make_ea_round_plan(mesh, g.n_vertices, plan), arrays, valid)
+        out[name] = bool((got == ref).all())
+    print(json.dumps(out))
+    """
+)
+
+
+def test_unified_round_all_plan_variants_4dev_subprocess():
+    """All four (gather x exchange) plan combinations reach the
+    single-device EA fixpoint on a real multi-device mesh."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROG],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    bad = [k for k, ok in res.items() if not ok]
+    assert not bad, f"plan variants diverge from single-device EA: {bad}"
