@@ -37,7 +37,8 @@ _PROG = textwrap.dedent(
     arr0 = arr0.at[jnp.arange(4), jnp.arange(4)].set(win[0])
     edges = ge.shard_edges(mesh, g.src, g.dst, g.t_start, g.t_end)
     evalid = ge.shard_edges(mesh, jnp.ones(g.n_edges, bool))[0]
-    rnd = jax.jit(ge.make_ea_round(mesh, g.n_vertices))
+    from repro.engine.plan import make_plan
+    rnd = jax.jit(ge.make_ea_round_plan(mesh, g.n_vertices, make_plan("scan")))
     out = rnd(arr0, *edges, evalid, win)
     jax.block_until_ready(out)
     t0 = time.perf_counter()

@@ -14,7 +14,7 @@ from repro.core.edgemap import hybrid_budget
 from repro.core.selective import CostModel, decide_access
 from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph, synthetic_temporal_graph
-from repro.engine import plan_query
+from repro.engine import make_plan, plan_query
 
 
 def run(n_v=20_000, n_e=1_000_000,
@@ -33,12 +33,12 @@ def run(n_v=20_000, n_e=1_000_000,
             win = (lo, te_max)
             dec = decide_access(idx, g.n_edges, win, CostModel())
             t_scan = time_fn(
-                lambda: earliest_arrival(g, src, win, access="scan"), iters=3
+                lambda: earliest_arrival(g, src, win), iters=3
             )
             if dec.budget < g.n_edges:
+                idx_plan = make_plan("index", budget=dec.budget)
                 t_idx = time_fn(
-                    lambda: earliest_arrival(g, src, win, idx,
-                                             access="index", budget=dec.budget),
+                    lambda: earliest_arrival(g, src, win, idx, plan=idx_plan),
                     iters=3,
                 )
             else:
@@ -54,9 +54,9 @@ def run(n_v=20_000, n_e=1_000_000,
             if gname == "powerlaw" and frac <= 0.1:
                 kb = hybrid_budget(g, idx, win)
                 work = idx.n_light_edges + idx.n_indexed * kb
+                hyb_plan = make_plan("hybrid", per_vertex_budget=kb)
                 t_hyb = time_fn(
-                    lambda: earliest_arrival(g, src, win, idx,
-                                             access="hybrid", budget=kb),
+                    lambda: earliest_arrival(g, src, win, idx, plan=hyb_plan),
                     iters=3,
                 )
                 emit(

@@ -14,7 +14,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: table4,fig7,fig8,fig9,plans,estimator,roofline")
+                    help="comma list: table4,fig7,fig8,fig9,plans,sweep,estimator,roofline")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -46,6 +46,13 @@ def main() -> None:
             bench_selective.run_plan_sweep(n_v=2_000, n_e=50_000, fracs=(0.01, 0.2))
         else:
             bench_selective.run_plan_sweep()
+
+    if want("sweep"):
+        from benchmarks import bench_sweep
+        if args.quick:
+            bench_sweep.run(n_v=2_000, n_e=50_000, counts=(4, 8), iters=2)
+        else:
+            bench_sweep.run()
 
     if want("estimator"):
         from benchmarks import bench_estimator

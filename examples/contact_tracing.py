@@ -11,7 +11,8 @@ window narrows.
 """
 import numpy as np
 
-from repro.core import build_tger, plan_access
+from repro.core import build_tger, decision_for
+from repro.engine import make_plan
 from repro.core.algorithms import earliest_arrival, temporal_betweenness
 from repro.core.selective import CostModel
 from repro.data.generators import power_law_temporal_graph
@@ -31,16 +32,15 @@ def main():
     for frac, label in [(1.0, "full history"), (0.05, "last 5% of time")]:
         lo = int(np.quantile(ts, 1 - frac))
         window = (lo, t_max)
-        plan = plan_access(g, idx, window, CostModel())
+        dec = decision_for(g, idx, window, CostModel())
+        plan = make_plan(dec.method,
+                         budget=dec.budget if dec.method == "index" else 0)
         arr = np.asarray(
-            earliest_arrival(
-                g, patient_zero, window, idx,
-                access=plan.method, budget=max(plan.budget, 64),
-            )
+            earliest_arrival(g, patient_zero, window, idx, plan=plan)
         )
         exposed = (arr < INT_INF).sum()
         print(f"[{label}] access={plan.method:5s} "
-              f"(sel {plan.selectivity:.3f})  exposed={exposed} people")
+              f"(sel {dec.selectivity:.3f})  exposed={exposed} people")
 
     # super-spreader ranking over the recent window
     lo = int(np.quantile(ts, 0.8))

@@ -45,7 +45,9 @@ def main():
     ssrc, sdst, sts, ste, svalid = ge.sort_edges_by_time_per_shard(
         mesh, g.src, g.dst, g.t_start, g.t_end
     )
-    sel = jax.jit(ge.make_ea_round_selective(mesh, g.n_vertices, budget_per_shard=4096))
+    from repro.engine.plan import make_plan
+    sel = jax.jit(ge.make_ea_round_plan(mesh, g.n_vertices,
+                                        make_plan("index", budget=4096)))
     arr = arr0
     for _ in range(64):
         new = sel(arr, ssrc, sdst, sts, ste, svalid, win)

@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import build_tger, plan_access
+from repro.core import build_tger, decision_for
 from repro.core.algorithms import (
     earliest_arrival,
     temporal_cc,
@@ -32,9 +32,9 @@ def main():
 
     # cost-model access plan for a query window
     window = (0, 12)
-    plan = plan_access(g, idx, window)
-    print(f"window {window}: access={plan.method} "
-          f"(selectivity {plan.selectivity:.2f}, budget {plan.budget})")
+    dec = decision_for(g, idx, window)
+    print(f"window {window}: access={dec.method} "
+          f"(selectivity {dec.selectivity:.2f}, budget {dec.budget})")
 
     # earliest arrival from vertex a (Algorithm 2)
     arr = np.asarray(earliest_arrival(g, 0, window))

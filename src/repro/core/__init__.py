@@ -6,8 +6,8 @@ from repro.core.tger import TGERIndex, build_tger  # noqa: F401
 from repro.core.selective import CostModel, decide_access  # noqa: F401
 from repro.core.edgemap import (  # noqa: F401
     temporal_edge_map,
+    temporal_edge_map_batched,
     vertex_map,
     frontier_from_sources,
-    plan_access,
 )
-from repro.engine import AccessPlan, plan_query  # noqa: F401
+from repro.engine import AccessPlan, decision_for, plan_query  # noqa: F401

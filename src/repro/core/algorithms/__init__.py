@@ -1,5 +1,6 @@
 from repro.core.algorithms.paths import (  # noqa: F401
     earliest_arrival,
+    earliest_arrival_batched,
     earliest_arrival_multi,
     latest_departure,
     fastest,
@@ -8,6 +9,12 @@ from repro.core.algorithms.paths import (  # noqa: F401
 from repro.core.algorithms.bfs import temporal_bfs  # noqa: F401
 from repro.core.algorithms.connectivity import temporal_cc  # noqa: F401
 from repro.core.algorithms.kcore import temporal_kcore, temporal_coreness  # noqa: F401
-from repro.core.algorithms.pagerank import temporal_pagerank  # noqa: F401
+from repro.core.algorithms.pagerank import (  # noqa: F401
+    temporal_pagerank,
+    temporal_pagerank_batched,
+)
 from repro.core.algorithms.centrality import temporal_betweenness  # noqa: F401
-from repro.core.algorithms.reachability import overlaps_reachability  # noqa: F401
+from repro.core.algorithms.reachability import (  # noqa: F401
+    overlaps_reachability,
+    overlaps_reachability_batched,
+)

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.edgemap import (
     INT_INF,
+    ensure_plan,
     frontier_from_sources,
-    resolve_plan,
     temporal_edge_map,
 )
 from repro.engine.plan import AccessPlan
@@ -25,7 +25,7 @@ from repro.core.tger import TGERIndex
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pred", "access", "budget", "max_rounds")
+    jax.jit, static_argnames=("pred", "max_rounds")
 )
 def temporal_bfs(
     g: TemporalGraph,
@@ -35,12 +35,10 @@ def temporal_bfs(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
 ):
     """Returns (hops[V], arrival[V]); hops = INT_INF when unreachable."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)

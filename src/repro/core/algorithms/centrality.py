@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.algorithms.paths import earliest_arrival
 from repro.core.edgemap import (
     INT_INF,
-    resolve_plan,
+    ensure_plan,
     segment_combine,
     view_for_plan,
 )
@@ -104,13 +104,11 @@ def temporal_betweenness(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.STRICTLY_SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
     n_buckets: int = 64,
 ) -> jax.Array:
     """BC[v] = sum over sources of the dependency of v (Brandes)."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     fn = lambda s: _betweenness_single(
         g, s, window, tger, pred, plan, max_rounds, n_buckets
     )

@@ -9,27 +9,25 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import resolve_plan, segment_combine, view_for_plan
+from repro.core.edgemap import ensure_plan, segment_combine, view_for_plan
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
 
-@functools.partial(jax.jit, static_argnames=("access", "budget", "max_rounds"))
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
 def temporal_cc(
     g: TemporalGraph,
     window: Tuple[jax.Array, jax.Array],
     tger: Optional[TGERIndex] = None,
     *,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """labels[V]: component id = min vertex id in the component (vertices
     with no valid incident edge are singletons)."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     edges = view_for_plan(g, tger, (ta, tb), plan)

@@ -8,14 +8,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import resolve_plan, segment_combine, view_for_plan
+from repro.core.edgemap import ensure_plan, segment_combine, view_for_plan
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
 
-@functools.partial(jax.jit, static_argnames=("access", "budget", "max_rounds"))
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
 def temporal_kcore(
     g: TemporalGraph,
     k,
@@ -23,12 +23,10 @@ def temporal_kcore(
     tger: Optional[TGERIndex] = None,
     *,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """alive[V] bool: membership of the temporal k-core within the window."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     edges = view_for_plan(g, tger, (ta, tb), plan)
@@ -59,7 +57,7 @@ def temporal_kcore(
     return alive
 
 
-@functools.partial(jax.jit, static_argnames=("access", "budget", "k_max"))
+@functools.partial(jax.jit, static_argnames=("k_max",))
 def temporal_coreness(
     g: TemporalGraph,
     window: Tuple[jax.Array, jax.Array],
@@ -67,13 +65,11 @@ def temporal_coreness(
     *,
     k_max: int = 64,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
 ) -> jax.Array:
     """core[v] = max k such that v belongs to the temporal k-core within the
     window (full decomposition).  Peeling reuses the (k-1)-core's alive set
     — the k-core is a subset — so total work is O(k_max * rounds * E')."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     edges = view_for_plan(g, tger, (ta, tb), plan)

@@ -8,7 +8,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import combine_for_plan, resolve_plan, view_for_plan
+from repro.core.edgemap import (
+    combine_windows_for_plan,
+    ensure_plan,
+    union_window,
+    view_for_plan,
+)
 from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -16,7 +21,7 @@ from repro.engine.plan import AccessPlan
 
 
 @functools.partial(
-    jax.jit, static_argnames=("access", "budget", "n_iters")
+    jax.jit, static_argnames=("n_iters",)
 )
 def temporal_pagerank(
     g: TemporalGraph,
@@ -26,27 +31,61 @@ def temporal_pagerank(
     damping: float = 0.85,
     n_iters: int = 100,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
 ) -> jax.Array:
-    plan = resolve_plan(plan, access, budget)
+    """The W=1 slice of the batched sweep (one power-iteration body to
+    maintain; the batched path's window mask reduces to the single-window
+    validity mask)."""
+    ta = jnp.asarray(window[0], jnp.int32)
+    tb = jnp.asarray(window[1], jnp.int32)
+    windows = jnp.stack([ta, tb])[None, :]
+    return temporal_pagerank_batched(
+        g, windows, tger, damping=damping, n_iters=n_iters, plan=plan
+    )[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iters",)
+)
+def temporal_pagerank_batched(
+    g: TemporalGraph,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    damping: float = 0.85,
+    n_iters: int = 100,
+    plan: Optional[AccessPlan] = None,
+) -> jax.Array:
+    """Batched multi-window PageRank (DESIGN.md §6): pr[w, v] over all W
+    windows from ONE union-window edge view — per-window validity masks and
+    a [W, ·] batched sum combine per power iteration, no per-window
+    re-gather.  Degrees (and hence dangling sets) are per-window."""
+    plan = ensure_plan(plan)
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    W = windows.shape[0]
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    valid = jax.vmap(
+        lambda w: edges.mask & in_window(edges.t_start, edges.t_end, w[0], w[1])
+    )(windows)                                              # [W, K]
     # degree reduce goes into src — native-order layout does not apply
-    out_deg = combine_for_plan(plan, valid.astype(jnp.float32), edges.src, V, "sum")
+    out_deg = combine_windows_for_plan(
+        plan, valid.astype(jnp.float32), edges.src, V, "sum"
+    )                                                       # [W, V]
     inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
     dangling = out_deg == 0
     use_layout = plan.method == "scan"
 
-    pr0 = jnp.full(V, 1.0 / V, jnp.float32)
+    pr0 = jnp.full((W, V), 1.0 / V, jnp.float32)
 
     def body(pr, _):
-        contrib = pr[edges.src] * inv_deg[edges.src]
-        agg = combine_for_plan(plan, contrib, edges.dst, V, "sum", mask=valid,
-                               use_layout=use_layout)
-        dangling_mass = jnp.sum(jnp.where(dangling, pr, 0.0)) / V
+        contrib = pr[:, edges.src] * inv_deg[:, edges.src]  # [W, K]
+        agg = combine_windows_for_plan(
+            plan, contrib, edges.dst, V, "sum", masks=valid,
+            use_layout=use_layout,
+        )
+        dangling_mass = (
+            jnp.sum(jnp.where(dangling, pr, 0.0), axis=1, keepdims=True) / V
+        )
         pr_new = (1.0 - damping) / V + damping * (agg + dangling_mass)
         return pr_new, None
 

@@ -15,10 +15,12 @@ import jax.numpy as jnp
 
 from repro.core.edgemap import (
     INT_INF,
+    edge_map_over_view_batched,
+    ensure_plan,
     frontier_from_sources,
-    resolve_plan,
     segment_combine,
     temporal_edge_map,
+    union_window,
     view_for_plan,
 )
 from repro.engine.plan import AccessPlan
@@ -50,7 +52,7 @@ def _while_rounds(cond_state_fn, body_fn, init, max_rounds: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "access", "budget", "max_rounds", "visit_once"),
+    static_argnames=("pred", "max_rounds", "visit_once"),
 )
 def earliest_arrival(
     g: TemporalGraph,
@@ -60,8 +62,6 @@ def earliest_arrival(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
     visit_once: bool = False,
 ) -> jax.Array:
@@ -72,10 +72,9 @@ def earliest_arrival(
     variant (frontier = improved vertices) is the standard correct form and
     matches it on graphs where earliest arrivals are settled in one visit.
 
-    Access method + backend come from ``plan`` (repro.engine.plan_query);
-    ``access``/``budget`` are the deprecated string shim.
+    Access method + backend come from ``plan`` (repro.engine.plan_query).
     """
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
@@ -120,12 +119,76 @@ def earliest_arrival_multi(g, sources, window, tger=None, **kw):
     return jax.vmap(fn)(jnp.asarray(sources))
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("pred", "max_rounds", "visit_once"),
+)
+def earliest_arrival_batched(
+    g: TemporalGraph,
+    source,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+    visit_once: bool = False,
+) -> jax.Array:
+    """Batched multi-window EA (DESIGN.md §6): arrival[w, v] = earliest
+    arrival from ``source`` to v within windows[w], for all W windows in ONE
+    sweep.  The edge view is built once over the union window and hoisted
+    out of the fixpoint loop — each window pays only a mask + its slice of
+    the batched combine, amortizing the traversal the way GoFFish's
+    subgraph-per-interval model does across time-series intervals.  Row w is
+    bit-identical to ``earliest_arrival(g, source, windows[w], ...)`` under
+    the same (union-budgeted) plan.  W is static (one compilation per sweep
+    width); converged windows ride the remaining rounds as no-ops."""
+    plan = ensure_plan(plan)
+    V = g.n_vertices
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    W = windows.shape[0]
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+
+    arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(windows[:, 0])
+    frontier0 = jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
+    visited0 = frontier0
+    max_rounds = max_rounds or V + 1
+
+    def relax(e, arr_src):
+        ok = edge_follows(pred, arr_src, e.t_start, e.t_end)
+        return e.t_end, ok
+
+    def cond_state(state):
+        _, frontier, _ = state
+        return jnp.any(frontier)
+
+    def body(state):
+        arrival, frontier, visited = state
+        cand, _ = edge_map_over_view_batched(
+            edges, windows, frontier, arrival, relax, "min",
+            plan=plan, n_vertices=V, compute_touched=False,
+        )
+        new_arrival = jnp.minimum(arrival, cand)
+        improved = new_arrival < arrival
+        if visit_once:
+            new_frontier = improved & ~visited
+            visited = visited | improved
+        else:
+            new_frontier = improved
+        return new_arrival, new_frontier, visited
+
+    arrival, _, _ = _while_rounds(
+        cond_state, body, (arrival0, frontier0, visited0), max_rounds
+    )
+    return arrival
+
+
 # ---------------------------------------------------------------------------
 # Latest Departure
 # ---------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("pred", "access", "budget", "max_rounds")
+    jax.jit, static_argnames=("pred", "max_rounds")
 )
 def latest_departure(
     g: TemporalGraph,
@@ -135,13 +198,11 @@ def latest_departure(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
 ) -> jax.Array:
     """ld[v] = latest time one can depart v and still reach ``target`` within
     the window.  Symmetric to EA on the in-direction with segment_max."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V = g.n_vertices
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     ld0 = jnp.full(V, INT_NEG_INF, jnp.int32).at[target].set(tb)
@@ -183,7 +244,7 @@ def latest_departure(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "access", "budget", "max_rounds", "n_departures"),
+    static_argnames=("pred", "max_rounds", "n_departures"),
 )
 def fastest(
     g: TemporalGraph,
@@ -193,8 +254,6 @@ def fastest(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
     n_departures: int = 32,
 ) -> jax.Array:
@@ -205,7 +264,7 @@ def fastest(
     (<= n_departures) earliest out-edge start times inside the window, read
     via the TGER per-vertex 3-sided range query; the EA ladder is vmapped
     (and sharded over `model` in the distributed engine)."""
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     lo, hi = vertex_range(g, jnp.asarray(source), ta, tb)
     pos = lo + jnp.arange(n_departures, dtype=jnp.int32)
@@ -236,7 +295,7 @@ def fastest(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "access", "budget", "max_rounds", "n_buckets", "use_weights"),
+    static_argnames=("pred", "max_rounds", "n_buckets", "use_weights"),
 )
 def shortest_duration(
     g: TemporalGraph,
@@ -246,8 +305,6 @@ def shortest_duration(
     *,
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
     max_rounds: int = 0,
     n_buckets: int = 64,
     use_weights: bool = False,
@@ -261,7 +318,7 @@ def shortest_duration(
     bucket-resolution completeness.  This replaces Wu et al.'s per-vertex
     ragged Pareto lists, which do not vectorize.
     """
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     V, P = g.n_vertices, n_buckets
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     # bucket bounds: uniform grid over the window (inclusive of tb).
@@ -319,6 +376,7 @@ def shortest_duration(
 __all__ = [
     "earliest_arrival",
     "earliest_arrival_multi",
+    "earliest_arrival_batched",
     "latest_departure",
     "fastest",
     "shortest_duration",

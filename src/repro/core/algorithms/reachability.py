@@ -23,9 +23,10 @@ import jax.numpy as jnp
 
 from repro.core.edgemap import (
     INT_INF,
+    ensure_plan,
     frontier_from_sources,
-    resolve_plan,
     segment_combine,
+    union_window,
     view_for_plan,
 )
 from repro.engine.plan import AccessPlan
@@ -34,25 +35,12 @@ from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
 
-@functools.partial(jax.jit, static_argnames=("access", "budget", "max_rounds"))
-def overlaps_reachability(
-    g: TemporalGraph,
-    source,
-    window: Tuple[jax.Array, jax.Array],
-    tger: Optional[TGERIndex] = None,
-    *,
-    plan: Optional[AccessPlan] = None,
-    access: str = "scan",
-    budget: int = 0,
-    max_rounds: int = 0,
-):
-    """Returns (reachable[V] bool, last_start[V], last_end[V])."""
-    plan = resolve_plan(plan, access, budget)
-    V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
+def _solve_window(edges, window, source, n_vertices: int, max_rounds: int):
+    """The one overlaps fixpoint over a prebuilt edge view: shared by the
+    single-window run and (vmapped over windows) the batched sweep."""
+    V = n_vertices
+    ta, tb = window[0], window[1]
     base_ok = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
-    max_rounds = max_rounds or V + 1
 
     # state: (last_end, last_start); source seeds with (ta, ta) — its first
     # edge only needs ts >= ta, te >= ta, which the window implies.
@@ -86,4 +74,50 @@ def overlaps_reachability(
         cond, body, (jnp.int32(0), end0, start0, frontier0)
     )
     reachable = s_end < INT_INF
-    return reachable, jnp.where(reachable, s_start, 0), jnp.where(reachable, s_end, 0)
+    return (
+        reachable,
+        jnp.where(reachable, s_start, 0),
+        jnp.where(reachable, s_end, 0),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def overlaps_reachability(
+    g: TemporalGraph,
+    source,
+    window: Tuple[jax.Array, jax.Array],
+    tger: Optional[TGERIndex] = None,
+    *,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+):
+    """Returns (reachable[V] bool, last_start[V], last_end[V])."""
+    plan = ensure_plan(plan)
+    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    edges = view_for_plan(g, tger, (ta, tb), plan)
+    return _solve_window(
+        edges, (ta, tb), source, g.n_vertices, max_rounds or g.n_vertices + 1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def overlaps_reachability_batched(
+    g: TemporalGraph,
+    source,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+):
+    """Batched multi-window overlaps reachability (DESIGN.md §6): ONE edge
+    view over the union window, per-window fixpoints vmapped over it.
+    Returns (reachable[W, V], last_start[W, V], last_end[W, V]), row w
+    identical to the single-window run on windows[w]."""
+    plan = ensure_plan(plan)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    mr = max_rounds or g.n_vertices + 1
+    return jax.vmap(
+        lambda w: _solve_window(edges, (w[0], w[1]), source, g.n_vertices, mr)
+    )(windows)

@@ -11,8 +11,12 @@ produced by ``repro.engine.plan_query`` — method (scan | index | hybrid),
 budgets, and execution backend (xla_segment | pallas_tiled) in one static
 record (DESIGN.md §1).  All paths are semantically identical
 (property-tested); they differ only in work, which is the paper's entire
-design point.  The legacy ``access=``/``budget=`` kwargs remain as a thin
-shim for this PR only.
+design point.
+
+Batched multi-window execution (DESIGN.md §6): ``temporal_edge_map_batched``
+serves W query windows from ONE edge view built over their union window —
+the gather is paid once, each window contributes only a validity mask, and
+the combine emits [W, V] in one plan-directed batched reduction.
 """
 from __future__ import annotations
 
@@ -22,10 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
-from repro.core.selective import AccessDecision, CostModel
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex, gather_window_edges, window_range
-from repro.engine.backends import combine_for_plan, segment_combine  # noqa: F401 (re-export)
+from repro.engine.backends import (  # noqa: F401 (re-export)
+    combine_for_plan,
+    combine_windows_for_plan,
+    segment_combine,
+    segment_combine_windows,
+)
 from repro.engine.plan import AccessPlan, make_plan
 
 INT_INF = jnp.iinfo(jnp.int32).max
@@ -117,23 +125,12 @@ def hybrid_budget(g: TemporalGraph, idx: TGERIndex, window,
 
 
 # ---------------------------------------------------------------------------
-# Plan resolution + plan-directed view building
+# Plan-directed view building
 # ---------------------------------------------------------------------------
 
-def resolve_plan(
-    plan: Optional[AccessPlan],
-    access: str = "scan",
-    budget: int = 0,
-) -> AccessPlan:
-    """Back-compat shim (one PR): lift loose ``access``/``budget`` kwargs
-    into an AccessPlan on the xla_segment backend.  Passing ``plan`` wins."""
-    if plan is not None:
-        return plan
-    if access == "hybrid":
-        return make_plan("hybrid", per_vertex_budget=budget)
-    if access == "index":
-        return make_plan("index", budget=budget)
-    return make_plan("scan")
+def ensure_plan(plan: Optional[AccessPlan]) -> AccessPlan:
+    """``plan=None`` means the default full-scan plan on xla_segment."""
+    return plan if plan is not None else make_plan("scan")
 
 
 def view_for_plan(
@@ -158,6 +155,59 @@ RelaxFn = Callable[[EdgeView, jax.Array], Tuple[jax.Array, jax.Array]]
 # relax(edges, src_state_gathered) -> (candidate_values[K,...], extra_valid[K])
 
 
+def _endpoints(edges: EdgeView, direction: str):
+    if direction == "out":
+        return edges.src, edges.dst
+    if direction == "in":
+        return edges.dst, edges.src
+    raise ValueError(direction)
+
+
+def union_window(windows) -> Tuple[jax.Array, jax.Array]:
+    """The hull [min t0, max t1] of a [W, 2] window batch — the one window a
+    batched sweep's shared edge view must cover."""
+    w = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    return jnp.min(w[:, 0]), jnp.max(w[:, 1])
+
+
+def edge_map_over_view(
+    edges: EdgeView,
+    window: Tuple[jax.Array, jax.Array],
+    frontier: jax.Array,            # bool[V]
+    src_state,                      # pytree of [V, ...] arrays gathered at source side
+    relax: RelaxFn,
+    combine: str,
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    direction: str = "out",
+    check_window: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One relaxation round over a PREBUILT edge view (the round core shared
+    by the single-window and batched edgemaps; sweeps that hoist the view
+    out of their fixpoint loop call this directly)."""
+    from_v, to_v = _endpoints(edges, direction)
+
+    valid = edges.mask & frontier[from_v]
+    if check_window:
+        valid &= in_window(edges.t_start, edges.t_end, window[0], window[1])
+
+    gathered = jax.tree_util.tree_map(lambda a: a[from_v], src_state)
+    cand, extra = relax(edges, gathered)
+    valid &= extra
+
+    # layout eligibility is static: native dst order only
+    use_layout = plan.method == "scan" and direction == "out"
+    out = combine_for_plan(
+        plan, cand, to_v, n_vertices, combine, mask=valid,
+        use_layout=use_layout,
+    )
+    touched = segment_combine(
+        valid.astype(jnp.int32), to_v, n_vertices, "sum", mask=None
+    ) > 0
+    return out, touched
+
+
 def temporal_edge_map(
     g: TemporalGraph,
     window: Tuple[jax.Array, jax.Array],
@@ -170,8 +220,6 @@ def temporal_edge_map(
     direction: str = "out",         # 'out': reduce into dst; 'in': reduce into src
     tger: Optional[TGERIndex] = None,
     plan: Optional[AccessPlan] = None,
-    access: str = "scan",           # deprecated shim — prefer ``plan``
-    budget: int = 0,                # deprecated shim — prefer ``plan``
     check_window: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
     """Apply one round of temporal edge relaxation under an AccessPlan.
@@ -187,34 +235,89 @@ def temporal_edge_map(
     order (scan method, out direction) — otherwise execution falls back to
     the masked segment-reduce.
     """
-    plan = resolve_plan(plan, access, budget)
+    plan = ensure_plan(plan)
     edges = view_for_plan(g, tger, window, plan)
+    return edge_map_over_view(
+        edges, window, frontier, src_state, relax, combine,
+        plan=plan, n_vertices=g.n_vertices,
+        direction=direction, check_window=check_window,
+    )
 
-    if direction == "out":
-        from_v, to_v = edges.src, edges.dst
-    elif direction == "in":
-        from_v, to_v = edges.dst, edges.src
-    else:
-        raise ValueError(direction)
 
-    valid = edges.mask & frontier[from_v]
-    if check_window:
-        valid &= in_window(edges.t_start, edges.t_end, window[0], window[1])
+def edge_map_over_view_batched(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[W, 2]
+    frontiers: jax.Array,           # bool[W, V]
+    src_state,                      # pytree of [W, V, ...] per-window state
+    relax: RelaxFn,
+    combine: str,
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    direction: str = "out",
+    check_window: bool = True,
+    compute_touched: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One batched relaxation round over a PREBUILT (union-window) view:
+    per-window masking is vmapped over the shared candidate edges and the
+    combine executes once as a [W, ·] batched reduction — no per-window
+    re-gather (DESIGN.md §6).  ``compute_touched=False`` skips the W extra
+    segment-sums when the caller derives its frontier from the combined
+    values (the batched fixpoint loops do) and returns ``touched=None``."""
+    from_v, to_v = _endpoints(edges, direction)
 
-    gathered = jax.tree_util.tree_map(lambda a: a[from_v], src_state)
-    cand, extra = relax(edges, gathered)
-    valid &= extra
+    def per_window(window, frontier, state):
+        valid = edges.mask & frontier[from_v]
+        if check_window:
+            valid &= in_window(edges.t_start, edges.t_end, window[0], window[1])
+        gathered = jax.tree_util.tree_map(lambda a: a[from_v], state)
+        cand, extra = relax(edges, gathered)
+        return cand, valid & extra
 
-    # layout eligibility is static: native dst order only
+    cand, valid = jax.vmap(per_window)(
+        jnp.asarray(windows, jnp.int32), frontiers, src_state
+    )
+
     use_layout = plan.method == "scan" and direction == "out"
-    out = combine_for_plan(
-        plan, cand, to_v, g.n_vertices, combine, mask=valid,
+    out = combine_windows_for_plan(
+        plan, cand, to_v, n_vertices, combine, masks=valid,
         use_layout=use_layout,
     )
-    touched = segment_combine(
-        valid.astype(jnp.int32), to_v, g.n_vertices, "sum", mask=None
-    ) > 0
+    if not compute_touched:
+        return out, None
+    touched = jax.vmap(
+        lambda v: segment_combine(v.astype(jnp.int32), to_v, n_vertices, "sum")
+    )(valid) > 0
     return out, touched
+
+
+def temporal_edge_map_batched(
+    g: TemporalGraph,
+    windows,                        # i32[W, 2] query windows
+    frontiers: jax.Array,           # bool[W, V]
+    src_state,                      # pytree of [W, V, ...]
+    relax: RelaxFn,
+    combine: str,
+    *,
+    pred: Optional[OrderingPredicateType] = None,
+    direction: str = "out",
+    tger: Optional[TGERIndex] = None,
+    plan: Optional[AccessPlan] = None,
+    check_window: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched multi-window TemporalEdgeMap: ONE edge view built over the
+    union window serves all W windows; returns (combined[W, V, ...],
+    touched[W, V]).  Plans produced by ``plan_query(..., windows=[...])``
+    budget for the union, so each window's valid edges are a masked subset
+    of the one gathered candidate set."""
+    plan = ensure_plan(plan)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    return edge_map_over_view_batched(
+        edges, windows, frontiers, src_state, relax, combine,
+        plan=plan, n_vertices=g.n_vertices,
+        direction=direction, check_window=check_window,
+    )
 
 
 def vertex_map(frontier: jax.Array, fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
@@ -232,22 +335,6 @@ def frontier_nonempty(frontier: jax.Array) -> jax.Array:
     return jnp.any(frontier)
 
 
-def plan_access(
-    g: TemporalGraph,
-    tger: Optional[TGERIndex],
-    window,
-    model: CostModel = CostModel(),
-    access: str = "auto",
-) -> AccessDecision:
-    """Back-compat shim (one PR): the scan-vs-index decision record.
-    Superseded by ``repro.engine.plan_query`` (plans) and
-    ``repro.engine.decision_for`` (diagnostics)."""
-    from repro.engine.plan import decision_for
-
-    forced = access if access in ("scan", "index") else None
-    return decision_for(g, tger, window, model, force=forced)
-
-
 __all__ = [
     "EdgeView",
     "scan_view",
@@ -255,12 +342,16 @@ __all__ = [
     "hybrid_view",
     "hybrid_budget",
     "view_for_plan",
-    "resolve_plan",
+    "ensure_plan",
+    "union_window",
     "segment_combine",
+    "segment_combine_windows",
     "temporal_edge_map",
+    "temporal_edge_map_batched",
+    "edge_map_over_view",
+    "edge_map_over_view_batched",
     "vertex_map",
     "frontier_from_sources",
     "frontier_nonempty",
-    "plan_access",
     "INT_INF",
 ]

@@ -26,7 +26,8 @@ composes ONE earliest-arrival round from two orthogonal AccessPlan flags —
               O(V); overflow improvements are recomputed next round, so the
               fixpoint is unchanged — tested).
 
-The four legacy constructors are thin wrappers over this one builder.
+Every scan/selective/sparse combination is expressed as a plan; there is
+exactly one round builder.
 """
 from __future__ import annotations
 
@@ -176,44 +177,6 @@ def make_ea_round_plan(mesh: Mesh, n_vertices: int, plan: Optional[AccessPlan] =
         return _exchange_dense(arrival, partial, axes)
 
     return ea_round
-
-
-# ---------------------------------------------------------------------------
-# legacy constructors (thin wrappers, one PR of back-compat)
-# ---------------------------------------------------------------------------
-
-def make_ea_round(mesh: Mesh, n_vertices: int, strict: bool = False):
-    """Dense scan round (legacy name)."""
-    return make_ea_round_plan(mesh, n_vertices, make_plan("scan"), strict)
-
-
-def make_ea_round_selective(mesh: Mesh, n_vertices: int, budget_per_shard: int,
-                            strict: bool = False):
-    """Selective-gather round (legacy name): per-shard budgeted time-first
-    gather, dense exchange."""
-    return make_ea_round_plan(
-        mesh, n_vertices, make_plan("index", budget=budget_per_shard), strict
-    )
-
-
-def make_ea_round_sparse(mesh: Mesh, n_vertices: int, exchange_budget: int,
-                         strict: bool = False):
-    """Frontier-sparse exchange round (legacy name): full scan, top-K wire."""
-    return make_ea_round_plan(
-        mesh, n_vertices, make_plan("scan", exchange_budget=exchange_budget), strict
-    )
-
-
-def make_ea_round_selective_sparse(mesh: Mesh, n_vertices: int,
-                                   budget_per_shard: int, exchange_budget: int,
-                                   strict: bool = False):
-    """Selective gather + sparse exchange composed (legacy name)."""
-    return make_ea_round_plan(
-        mesh, n_vertices,
-        make_plan("index", budget=budget_per_shard,
-                  exchange_budget=exchange_budget),
-        strict,
-    )
 
 
 def sort_edges_by_time_per_shard(mesh: Mesh, src, dst, ts, te):

@@ -59,13 +59,33 @@ def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=N
     return fn(values, segment_ids, num_segments=num_segments)
 
 
+def segment_combine_windows(values, segment_ids, num_segments: int,
+                            combine: str, masks=None):
+    """Batched masked segment-reduce over a shared edge set (DESIGN.md §6):
+    ``values`` is [W, K, ...] (one candidate row per query window), ``masks``
+    [W, K]; ``segment_ids`` [K] is shared across windows.  Returns
+    [W, num_segments, ...] — W reductions over ONE gathered edge set."""
+    if masks is None:
+        return jax.vmap(
+            lambda v: segment_combine(v, segment_ids, num_segments, combine)
+        )(values)
+    return jax.vmap(
+        lambda v, m: segment_combine(v, segment_ids, num_segments, combine, mask=m)
+    )(values, masks)
+
+
 class ExecutionBackend(Protocol):
-    """Backend protocol: one method — execute a (masked) segment combine."""
+    """Backend protocol: execute a (masked) segment combine, single-window
+    or batched over a window axis sharing one edge set."""
 
     name: str
 
     def combine(self, plan: Optional[AccessPlan], values, segment_ids,
                 num_segments: int, op: str, mask=None):
+        ...
+
+    def combine_windows(self, plan: Optional[AccessPlan], values, segment_ids,
+                        num_segments: int, op: str, masks=None):
         ...
 
 
@@ -77,6 +97,12 @@ class XlaSegmentBackend:
     def combine(self, plan, values, segment_ids, num_segments, op, mask=None):
         del plan
         return segment_combine(values, segment_ids, num_segments, op, mask=mask)
+
+    def combine_windows(self, plan, values, segment_ids, num_segments, op,
+                        masks=None):
+        del plan
+        return segment_combine_windows(values, segment_ids, num_segments, op,
+                                       masks=masks)
 
 
 class PallasTiledBackend:
@@ -122,6 +148,20 @@ class PallasTiledBackend:
             return self._combine_min(plan, values, segment_ids, num_segments, mask)
         return self._combine_sum(plan, values, segment_ids, num_segments, mask)
 
+    def combine_windows(self, plan, values, segment_ids, num_segments, op,
+                        masks=None):
+        """Batched combine over a window axis: the layout gather happens once,
+        then the tiled kernel runs per window under ``lax.map`` (one trace,
+        W sequential kernel launches — the kernel itself is not re-batched)."""
+        if not self._supports(plan, values[0], num_segments, op):
+            return segment_combine_windows(values, segment_ids, num_segments,
+                                           op, masks=masks)
+        if op == "min":
+            return self._combine_min_windows(
+                plan, values, segment_ids, num_segments, masks)
+        return self._combine_sum_windows(
+            plan, values, segment_ids, num_segments, masks)
+
     def _combine_min(self, plan, values, segment_ids, num_segments, mask):
         from repro.kernels.temporal_edgemap import segment_min_tiles
 
@@ -151,6 +191,51 @@ class PallasTiledBackend:
         )
         out = tiles.reshape(-1, msgs.shape[-1])[:num_segments]
         return out[:, 0] if squeeze else out
+
+    # -- batched-window variants (shared layout gather, per-window kernel) ---
+    def _combine_min_windows(self, plan, values, segment_ids, num_segments,
+                             masks):
+        from repro.kernels.temporal_edgemap import segment_min_tiles
+
+        cand = values if masks is None else jnp.where(masks, values, INT_INF)
+        safe, in_perm, dst_local = self._gathered(plan, segment_ids)
+        cand_g = jnp.where(in_perm[None, :], cand[:, safe], INT_INF)  # [W, Ep]
+
+        def one(c):
+            tiles = segment_min_tiles(
+                dst_local, c, plan.layout_block_tile, plan.n_tiles,
+                tile_v=plan.tile_v, block_e=plan.block_e,
+                interpret=self.interpret,
+            )
+            return tiles.reshape(-1)[:num_segments]
+
+        return jax.lax.map(one, cand_g)
+
+    def _combine_sum_windows(self, plan, values, segment_ids, num_segments,
+                             masks):
+        from repro.kernels.segment_spmm import segment_spmm_tiles
+
+        squeeze = values.ndim == 2
+        msgs = values[..., None] if squeeze else values      # [W, K, F]
+        safe, in_perm, dst_local = self._gathered(plan, segment_ids)
+        msg_g = msgs[:, safe, :]                             # [W, Ep, F]
+        if masks is None:
+            valid = jnp.broadcast_to(in_perm, (msgs.shape[0], in_perm.shape[0]))
+        else:
+            valid = in_perm[None, :] & masks[:, safe]
+
+        def one(args):
+            m, v = args
+            tiles = segment_spmm_tiles(
+                dst_local, m, v.astype(jnp.int32),
+                plan.layout_block_tile, plan.n_tiles,
+                tile_v=plan.tile_v, block_e=plan.block_e,
+                interpret=self.interpret,
+            )
+            return tiles.reshape(-1, m.shape[-1])[:num_segments]
+
+        out = jax.lax.map(one, (msg_g, valid))
+        return out[..., 0] if squeeze else out
 
 
 _BACKENDS = {
@@ -187,11 +272,34 @@ def combine_for_plan(
     return segment_combine(values, segment_ids, num_segments, op, mask=mask)
 
 
+def combine_windows_for_plan(
+    plan: Optional[AccessPlan],
+    values,           # [W, K, ...]
+    segment_ids,      # [K] shared across windows
+    num_segments: int,
+    op: str,
+    masks=None,       # [W, K]
+    *,
+    use_layout: bool = False,
+):
+    """Batched plan-directed combine (DESIGN.md §6): W per-window reductions
+    over ONE shared candidate edge set, returning [W, num_segments, ...].
+    Same layout-eligibility contract as :func:`combine_for_plan`."""
+    if plan is not None and use_layout and plan.backend == "pallas_tiled":
+        return get_backend("pallas_tiled").combine_windows(
+            plan, values, segment_ids, num_segments, op, masks=masks
+        )
+    return segment_combine_windows(values, segment_ids, num_segments, op,
+                                   masks=masks)
+
+
 __all__ = [
     "ExecutionBackend",
     "XlaSegmentBackend",
     "PallasTiledBackend",
     "segment_combine",
+    "segment_combine_windows",
     "get_backend",
     "combine_for_plan",
+    "combine_windows_for_plan",
 ]

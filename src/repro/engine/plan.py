@@ -2,12 +2,12 @@
 
 The paper's selective indexing (§5) picks the cheapest access method per
 query; before this layer existed the choice was a bare string threaded by
-hand through every algorithm, and the decision logic was split across
-``core/selective.decide_access``, ``core/edgemap.plan_access`` and
-``core/edgemap.hybrid_budget``.  ``plan_query`` absorbs all three: it is
-the single host-side planner that turns (graph, TGER, window) into an
-:class:`AccessPlan` — method + budgets + execution backend — which the
-edgemap, all algorithms, and the distributed round builder consume.
+hand through every algorithm, with the decision logic split across the
+selective cost model and the edgemap.  ``plan_query`` is the single
+host-side planner that turns (graph, TGER, window — or a batch of
+windows) into an :class:`AccessPlan` — method + budgets + execution
+backend — which the edgemap, all algorithms, and the distributed round
+builder consume.
 
 ``AccessPlan`` is a registered-dataclass pytree: the method/budget/backend
 fields are static metadata (they specialize the jitted program — exactly
@@ -60,6 +60,7 @@ class AccessPlan:
     n_tiles: int = dataclasses.field(metadata=dict(static=True))
     n_edges: int = dataclasses.field(metadata=dict(static=True))  # layout domain (0 = no layout)
     cache_key: str = dataclasses.field(metadata=dict(static=True))
+    n_windows: int = dataclasses.field(default=0, metadata=dict(static=True))  # batched sweep width (0 = single window)
 
     @property
     def view_budget(self) -> int:
@@ -68,8 +69,10 @@ class AccessPlan:
 
 
 def _cache_key(method: str, backend: str, budget: int, pvb: int,
-               exchange: int, tile_v: int, block_e: int) -> str:
-    return f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
+               exchange: int, tile_v: int, block_e: int,
+               n_windows: int = 0) -> str:
+    key = f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
+    return f"{key}/w{n_windows}" if n_windows else key
 
 
 def _empty_i32() -> jax.Array:
@@ -89,6 +92,7 @@ def make_plan(
     n_edges: int = 0,
     tile_v: int = DEFAULT_TILE_V,
     block_e: int = DEFAULT_BLOCK_E,
+    n_windows: int = 0,
 ) -> AccessPlan:
     """Direct plan constructor (the planner-free path: legacy shims, the
     distributed engine's per-shard plans, tests)."""
@@ -119,7 +123,9 @@ def make_plan(
         n_tiles=int(n_tiles),
         n_edges=int(n_edges),
         cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
-                             int(exchange_budget), int(tile_v), int(block_e)),
+                             int(exchange_budget), int(tile_v), int(block_e),
+                             int(n_windows)),
+        n_windows=int(n_windows),
     )
 
 
@@ -198,8 +204,9 @@ def _layout_for(g: TemporalGraph, tile_v: int, block_e: int):
 def plan_query(
     g: TemporalGraph,
     tger: Optional[TGERIndex],
-    window,
+    window=None,
     *,
+    windows=None,
     model: CostModel = CostModel(),
     access: str = "auto",
     backend: str = "xla_segment",
@@ -221,13 +228,39 @@ def plan_query(
     or ``pallas_tiled`` (destination-tile fused kernels; requires the scan
     method because the tile layout is a per-graph static grouping — the
     planner falls back to xla_segment otherwise, recorded in the plan).
+
+    ``windows=[(t0, t1), ...]`` plans a **batched multi-window sweep**
+    (DESIGN.md §6): one plan over the union window whose budgets are the
+    max over the union's and every member window's budget rung, so the one
+    gathered union edge set covers each window and the batched [W, V]
+    execution is row-equivalent to W independent single-window runs.  The
+    plan records ``n_windows`` so jitted sweeps specialize per W; the
+    auto/forced access decision is made on the union window (the quantity
+    the single shared traversal actually pays for).
     """
     if access not in ("auto",) + METHODS:
         raise ValueError(f"access must be auto|{'|'.join(METHODS)}, got {access!r}")
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
 
-    win = (int(window[0]), int(window[1]))
+    n_windows = 0
+    if windows is not None:
+        if window is not None:
+            raise ValueError(
+                "pass either window=... or windows=[...], not both "
+                "(a single window is not implicitly added to the batch)"
+            )
+        wins = [(int(w[0]), int(w[1])) for w in windows]
+        if not wins:
+            raise ValueError("windows must be a non-empty sequence of (t0, t1)")
+        n_windows = len(wins)
+        win = (min(w[0] for w in wins), max(w[1] for w in wins))  # union
+        member_wins = wins
+    else:
+        if window is None:
+            raise ValueError("plan_query needs window=... or windows=[...]")
+        win = (int(window[0]), int(window[1]))
+        member_wins = []
     n_edges = g.n_edges
 
     budget = 0
@@ -239,6 +272,13 @@ def plan_query(
     elif access == "hybrid":
         method = "hybrid"
         per_vertex = per_vertex_window_budget(g, tger, win, floor=hybrid_floor)
+        # the union count dominates every member window's count (window
+        # inclusion), but take the explicit max so the plan invariant
+        # "union budget >= each per-window budget" holds by construction.
+        for w in member_wins:
+            per_vertex = max(
+                per_vertex, per_vertex_window_budget(g, tger, w, floor=hybrid_floor)
+            )
     else:
         dec = decide_access(
             tger, n_edges, win, model,
@@ -246,7 +286,13 @@ def plan_query(
         )
         method = dec.method
         if method == "index":
+            # per-window budget ladder: the union gather must cover every
+            # member window, so the plan's rung is the max over the union's
+            # and each window's own rung.
             budget = dec.budget
+            for w in member_wins:
+                wdec = decide_access(tger, n_edges, w, model, force="index")
+                budget = max(budget, wdec.budget)
 
     if backend == "pallas_tiled" and method != "scan":
         backend = "xla_segment"  # tile layout is per-graph static: scan only
@@ -258,6 +304,7 @@ def plan_query(
         exchange_budget=int(exchange_budget),
         layout=layout, n_edges=n_edges if layout is not None else 0,
         tile_v=tile_v, block_e=block_e,
+        n_windows=n_windows,
     )
 
 

@@ -1,1 +1,6 @@
-
+from repro.serve.window_sweep import (  # noqa: F401
+    ALGORITHMS,
+    sliding_windows,
+    sweep,
+    sweep_looped,
+)

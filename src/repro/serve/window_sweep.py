@@ -1,0 +1,127 @@
+"""Multi-window query serving: one plan, one traversal, W answers.
+
+The serving workload Kairos's selective indexing exists for is *temporal
+window queries* — "earliest arrival over each of the last 24 sliding
+windows", "reachability per day this month".  Answering those one window at
+a time pays W full passes over the edge set; this module is the batched
+path (DESIGN.md §6): ``sweep`` plans ONCE over the union window
+(`plan_query(windows=...)`), builds one shared edge view, and executes the
+whole sweep as a single jitted [W, V] program via the batched algorithm
+variants.  ``sweep_looped`` is the reference W-independent-runs execution
+(used by tests for row-parity and by ``benchmarks/run.py --only sweep`` for
+the amortization comparison).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import (
+    earliest_arrival,
+    earliest_arrival_batched,
+    overlaps_reachability,
+    overlaps_reachability_batched,
+    temporal_pagerank,
+    temporal_pagerank_batched,
+)
+from repro.core.temporal_graph import TemporalGraph
+from repro.core.tger import TGERIndex
+from repro.engine.plan import AccessPlan, plan_query
+
+ALGORITHMS = ("earliest_arrival", "reachability", "pagerank")
+
+
+def sliding_windows(t_end: int, width: int, stride: int, count: int) -> np.ndarray:
+    """The serving shape: ``count`` windows of ``width`` ending at
+    ``t_end``, sliding back by ``stride`` — windows[0] is the most recent.
+    Returns i32[count, 2]."""
+    if count <= 0 or width <= 0 or stride <= 0:
+        raise ValueError("count, width and stride must be positive")
+    ends = t_end - stride * np.arange(count, dtype=np.int64)
+    wins = np.stack([ends - width, ends], axis=1)
+    return wins.astype(np.int32)
+
+
+def _dispatch(algorithm: str, batched: bool):
+    table = {
+        ("earliest_arrival", True): earliest_arrival_batched,
+        ("reachability", True): overlaps_reachability_batched,
+        ("pagerank", True): temporal_pagerank_batched,
+        ("earliest_arrival", False): earliest_arrival,
+        ("reachability", False): overlaps_reachability,
+        ("pagerank", False): temporal_pagerank,
+    }
+    try:
+        return table[(algorithm, batched)]
+    except KeyError:
+        raise ValueError(
+            f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
+
+
+def sweep(
+    g: TemporalGraph,
+    source,
+    windows,
+    tger: Optional[TGERIndex] = None,
+    *,
+    algorithm: str = "earliest_arrival",
+    access: str = "auto",
+    backend: str = "xla_segment",
+    plan: Optional[AccessPlan] = None,
+    **kwargs,
+):
+    """Answer one query over W windows in a single batched execution.
+
+    Returns [W, V] (earliest_arrival / pagerank) or a tuple of [W, V]
+    arrays (reachability).  ``plan`` defaults to
+    ``plan_query(..., windows=windows)`` — the union-window plan whose
+    budgets cover every member window; pass an explicit plan to pin the
+    method/backend.  ``source`` is ignored by pagerank.
+    """
+    windows = np.asarray(windows, np.int32).reshape(-1, 2)
+    if plan is None:
+        plan = plan_query(g, tger, windows=windows, access=access,
+                          backend=backend)
+    fn = _dispatch(algorithm, batched=True)
+    if algorithm == "pagerank":
+        return fn(g, windows, tger, plan=plan, **kwargs)
+    return fn(g, source, windows, tger, plan=plan, **kwargs)
+
+
+def sweep_looped(
+    g: TemporalGraph,
+    source,
+    windows,
+    tger: Optional[TGERIndex] = None,
+    *,
+    algorithm: str = "earliest_arrival",
+    access: str = "auto",
+    backend: str = "xla_segment",
+    plan: Optional[AccessPlan] = None,
+    **kwargs,
+):
+    """Reference execution: W independent single-window runs under the SAME
+    union plan (so batched-vs-looped differ only in amortization, not in
+    budgets).  Returns the same [W, ...] stacking as :func:`sweep`."""
+    windows = np.asarray(windows, np.int32).reshape(-1, 2)
+    if plan is None:
+        plan = plan_query(g, tger, windows=windows, access=access,
+                          backend=backend)
+    fn = _dispatch(algorithm, batched=False)
+    rows = []
+    for w in windows:
+        win = (int(w[0]), int(w[1]))
+        if algorithm == "pagerank":
+            rows.append(fn(g, win, tger, plan=plan, **kwargs))
+        else:
+            rows.append(fn(g, source, win, tger, plan=plan, **kwargs))
+    if algorithm == "reachability":
+        return tuple(
+            jax.numpy.stack([r[i] for r in rows]) for i in range(3)
+        )
+    return jax.numpy.stack(rows)
+
+
+__all__ = ["sweep", "sweep_looped", "sliding_windows", "ALGORITHMS"]

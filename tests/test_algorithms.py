@@ -20,6 +20,7 @@ from repro.core.onepass import earliest_arrival_onepass
 from repro.core.predicates import OrderingPredicateType as T
 from repro.core.tger import build_tger
 from repro.data.generators import synthetic_temporal_graph
+from repro.engine import make_plan
 
 SEEDS = [3, 17]
 
@@ -135,8 +136,8 @@ def test_index_path_algorithms_match_scan():
         (earliest_arrival, {}),
         (temporal_bfs, {}),
     ]:
-        a = fn(g, src, win, access="scan", **kw)
-        b = fn(g, src, win, idx, access="index", budget=budget, **kw)
+        a = fn(g, src, win, plan=make_plan("scan"), **kw)
+        b = fn(g, src, win, idx, plan=make_plan("index", budget=budget), **kw)
         a = a if isinstance(a, tuple) else (a,)
         b = b if isinstance(b, tuple) else (b,)
         for x, y in zip(a, b):

@@ -75,8 +75,9 @@ _SUBPROCESS_PROG = textwrap.dedent(
     # selective (index-path) round equivalence on sorted-per-shard edges
     ssrc, sdst, sts, ste, svalid = ge.sort_edges_by_time_per_shard(
         mesh, g.src, g.dst, g.t_start, g.t_end)
-    sel_round = jax.jit(ge.make_ea_round_selective(mesh, g.n_vertices,
-                                                   budget_per_shard=1024))
+    from repro.engine.plan import make_plan
+    sel_round = jax.jit(ge.make_ea_round_plan(mesh, g.n_vertices,
+                                              make_plan("index", budget=1024)))
     arr = arr0
     for _ in range(60):
         new = sel_round(arr, ssrc, sdst, sts, ste, svalid, win)

@@ -9,11 +9,11 @@ from repro.core.edgemap import (
     INT_INF,
     frontier_from_sources,
     index_view,
-    plan_access,
     scan_view,
     segment_combine,
     temporal_edge_map,
 )
+from repro.engine import decision_for, make_plan
 from repro.core.predicates import OrderingPredicateType as T, edge_follows
 from repro.core.selective import CostModel
 from repro.core.temporal_graph import from_edges
@@ -43,13 +43,13 @@ def test_scan_index_equivalence(seed, qlo):
         return edges.t_end, edge_follows(T.SUCCEEDS, s, edges.t_start, edges.t_end)
 
     out_scan, _ = temporal_edge_map(
-        g, win, frontier, state, relax, "min", access="scan"
+        g, win, frontier, state, relax, "min", plan=make_plan("scan")
     )
     lo_hi = int(((ts >= win[0]) & (ts <= win[1])).sum())
     budget = max(64, 1 << (lo_hi).bit_length())
     out_idx, _ = temporal_edge_map(
         g, win, frontier, state, relax, "min",
-        tger=idx, access="index", budget=budget,
+        tger=idx, plan=make_plan("index", budget=budget),
     )
     assert (np.asarray(out_scan) == np.asarray(out_idx)).all()
 
@@ -91,8 +91,8 @@ def test_frontier_and_planning():
     f = frontier_from_sources(25, [3, 7])
     assert int(f.sum()) == 2
     ts = np.asarray(g.t_start)
-    dec = plan_access(g, idx, (int(np.quantile(ts, 0.99)), int(ts.max() + 100)),
-                      CostModel())
+    dec = decision_for(g, idx, (int(np.quantile(ts, 0.99)), int(ts.max() + 100)),
+                       CostModel())
     assert dec.method in ("index", "scan")
-    dec2 = plan_access(g, None, (0, 100))
+    dec2 = decision_for(g, None, (0, 100))
     assert dec2.method == "scan"

@@ -1,10 +1,13 @@
-"""AccessPlan engine: planner decisions, backend parity matrix, and the
-unified distributed round vs the legacy variants it replaces.
+"""AccessPlan engine: planner decisions, the full algorithm x backend parity
+matrix, batched multi-window execution, and the unified distributed round.
 
 The parity matrix is the engine's core correctness property: every access
 method (scan | index | hybrid) on every backend (xla_segment |
-pallas_tiled-interpret) must produce bit-identical earliest-arrival and
-(numerically identical) PageRank results.
+pallas_tiled-interpret) must produce identical results for all seven
+algorithm modules — bit-identical for integer/bool outputs, numerically
+identical (reduction order may differ across edge views) for float ones.
+Batched [W, V] sweeps must be row-identical to W independent single-window
+runs under the same union plan.
 """
 import json
 import os
@@ -16,8 +19,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.algorithms import earliest_arrival, temporal_pagerank
-from repro.core.edgemap import hybrid_budget, resolve_plan, temporal_edge_map
+from repro.core.algorithms import (
+    earliest_arrival,
+    earliest_arrival_batched,
+    overlaps_reachability,
+    overlaps_reachability_batched,
+    temporal_betweenness,
+    temporal_bfs,
+    temporal_cc,
+    temporal_kcore,
+    temporal_pagerank,
+    temporal_pagerank_batched,
+)
+from repro.core import edgemap as edgemap_mod
+from repro.core.edgemap import temporal_edge_map
 from repro.core.temporal_graph import from_edges
 from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph
@@ -33,17 +48,46 @@ def _random_graph(seed, n_v=60, n_e=800, t_max=200):
     )
 
 
-def _plans_for(g, idx, win, covering_budget):
-    """The full method x backend matrix for one (graph, window)."""
+def _covering_budget(g, win):
+    ts = np.asarray(g.t_start)
+    in_win = int(((ts >= win[0]) & (ts <= win[1])).sum())
+    return max(64, 1 << in_win.bit_length())
+
+
+def _plans_for(g, idx, win, covering_budget, windows=None):
+    """The full method x backend matrix for one (graph, window) — or, when
+    ``windows`` is given, for one batched sweep (every plan carries the
+    consistent n_windows/cache_key the planner would produce).
+
+    xla cells are built directly; the scan/pallas cell goes through the
+    planner (it owns the tile layout); the index/hybrid pallas cells ARE the
+    xla cells by the planner's documented fallback (tile layout is scan-only
+    — asserted in test_planner_forced_and_fallbacks), so the matrix builds
+    them as the plans the fallback produces.
+    """
+    n_windows = 0 if windows is None else len(windows)
     kb = per_vertex_window_budget(g, idx, win)
-    return {
-        "scan/xla": make_plan("scan"),
-        "index/xla": make_plan("index", budget=covering_budget),
-        "hybrid/xla": make_plan("hybrid", per_vertex_budget=kb),
-        "scan/pallas": plan_query(
+    if windows is None:
+        scan_pallas = plan_query(
             g, idx, win, access="scan", backend="pallas_tiled",
             tile_v=64, block_e=128,
-        ),
+        )
+    else:
+        scan_pallas = plan_query(
+            g, idx, windows=windows, access="scan", backend="pallas_tiled",
+            tile_v=64, block_e=128,
+        )
+    return {
+        "scan/xla": make_plan("scan", n_windows=n_windows),
+        "index/xla": make_plan("index", budget=covering_budget,
+                               n_windows=n_windows),
+        "hybrid/xla": make_plan("hybrid", per_vertex_budget=kb,
+                                n_windows=n_windows),
+        "scan/pallas": scan_pallas,
+        "index/pallas->xla": make_plan("index", budget=covering_budget,
+                                       n_windows=n_windows),
+        "hybrid/pallas->xla": make_plan("hybrid", per_vertex_budget=kb,
+                                        n_windows=n_windows),
     }
 
 
@@ -78,15 +122,32 @@ def test_planner_forced_and_fallbacks():
         plan_query(g, None, win, access="index")
     with pytest.raises(ValueError):
         plan_query(g, idx, win, backend="nope")
+    with pytest.raises(ValueError):
+        plan_query(g, idx)  # neither window nor windows
 
 
-def test_resolve_plan_legacy_shim():
-    p = resolve_plan(None, "index", 128)
-    assert p.method == "index" and p.budget == 128
-    p = resolve_plan(None, "hybrid", 32)
-    assert p.method == "hybrid" and p.per_vertex_budget == 32
-    explicit = make_plan("scan")
-    assert resolve_plan(explicit, "index", 128) is explicit
+def test_planner_union_windows():
+    """A windows=[...] plan covers the union: budget >= every member
+    window's own forced-index budget, n_windows recorded, union auto
+    decision."""
+    g = power_law_temporal_graph(200, 8000, seed=3)
+    idx = build_tger(g, degree_cutoff=64)
+    ts = np.asarray(g.t_start)
+    t_max = int(np.asarray(g.t_end).max())
+    wins = [
+        (int(np.quantile(ts, q)), t_max) for q in (0.90, 0.95, 0.99, 0.995)
+    ]
+    p = plan_query(g, idx, windows=wins, access="index")
+    assert p.n_windows == len(wins)
+    assert p.cache_key.endswith(f"/w{len(wins)}")
+    for w in wins:
+        pw = plan_query(g, idx, w, access="index")
+        assert p.budget >= pw.budget
+    # hybrid union budget covers every member window too
+    ph = plan_query(g, idx, windows=wins, access="hybrid")
+    for w in wins:
+        assert ph.per_vertex_budget >= plan_query(
+            g, idx, w, access="hybrid").per_vertex_budget
 
 
 def test_vectorized_budget_matches_reference_loop():
@@ -113,48 +174,204 @@ def test_vectorized_budget_matches_reference_loop():
 
 
 # ---------------------------------------------------------------------------
-# parity matrix: every method x backend agrees
+# parity matrix: all seven algorithms x every method x backend cell
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("seed", [0, 7, 23])
-def test_parity_matrix_earliest_arrival(seed):
-    g = _random_graph(seed)
-    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+def _run_earliest_arrival(g, idx, win, src, plan):
+    return [np.asarray(earliest_arrival(g, src, win, idx, plan=plan))]
+
+
+def _run_bfs(g, idx, win, src, plan):
+    hops, arr = temporal_bfs(g, src, win, idx, plan=plan)
+    return [np.asarray(hops), np.asarray(arr)]
+
+
+def _run_cc(g, idx, win, src, plan):
+    return [np.asarray(temporal_cc(g, win, idx, plan=plan))]
+
+
+def _run_kcore(g, idx, win, src, plan):
+    return [np.asarray(temporal_kcore(g, 3, win, idx, plan=plan))]
+
+
+def _run_pagerank(g, idx, win, src, plan):
+    return [np.asarray(temporal_pagerank(g, win, idx, n_iters=25, plan=plan))]
+
+
+def _run_betweenness(g, idx, win, src, plan):
+    return [np.asarray(
+        temporal_betweenness(g, [src], win, idx, plan=plan, n_buckets=32)
+    )]
+
+
+def _run_reachability(g, idx, win, src, plan):
+    return [np.asarray(a) for a in
+            overlaps_reachability(g, src, win, idx, plan=plan)]
+
+
+# the seven algorithm modules (paths, bfs, connectivity, kcore, pagerank,
+# centrality, reachability), one representative each; float outputs compare
+# allclose (reduction order differs across edge views), the rest bit-exact.
+PARITY_ALGORITHMS = {
+    "earliest_arrival": (_run_earliest_arrival, False),
+    "bfs": (_run_bfs, False),
+    "cc": (_run_cc, False),
+    "kcore": (_run_kcore, False),
+    "pagerank": (_run_pagerank, True),
+    "betweenness": (_run_betweenness, True),
+    "reachability": (_run_reachability, False),
+}
+
+
+@pytest.mark.parametrize("alg", sorted(PARITY_ALGORITHMS))
+def test_parity_matrix(alg):
+    runner, is_float = PARITY_ALGORITHMS[alg]
+    for seed in (0, 23):
+        g = _random_graph(seed)
+        idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+        ts = np.asarray(g.t_start)
+        win = (int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max()))
+        src = int(np.random.default_rng(seed).integers(0, g.n_vertices))
+        plans = _plans_for(g, idx, win, _covering_budget(g, win))
+        ref = runner(g, idx, win, src, plans.pop("scan/xla"))
+        for name, plan in plans.items():
+            got = runner(g, idx, win, src, plan)
+            for r, o in zip(ref, got):
+                if is_float:
+                    np.testing.assert_allclose(
+                        o, r, rtol=1e-5, atol=1e-7,
+                        err_msg=f"{alg}:{name} diverges from scan/xla",
+                    )
+                else:
+                    assert (o == r).all(), f"{alg}:{name} diverges from scan/xla"
+
+
+# ---------------------------------------------------------------------------
+# batched multi-window execution
+# ---------------------------------------------------------------------------
+
+def _test_windows(g, count=5):
     ts = np.asarray(g.t_start)
-    win = (int(np.quantile(ts, 0.4)), int(np.asarray(g.t_end).max()))
-    in_win = int(((ts >= win[0]) & (ts <= win[1])).sum())
-    budget = max(64, 1 << in_win.bit_length())
-    src = int(np.random.default_rng(seed).integers(0, g.n_vertices))
-
-    results = {
-        name: np.asarray(earliest_arrival(g, src, win, idx, plan=plan))
-        for name, plan in _plans_for(g, idx, win, budget).items()
-    }
-    ref = results.pop("scan/xla")
-    for name, got in results.items():
-        assert (got == ref).all(), f"{name} diverges from scan/xla"
+    t_max = int(np.asarray(g.t_end).max())
+    qs = np.linspace(0.0, 0.8, count)
+    return np.asarray(
+        [(int(np.quantile(ts, q)), t_max - 10 * i)
+         for i, q in enumerate(qs)], np.int32,
+    )
 
 
-@pytest.mark.parametrize("seed", [1, 11])
-def test_parity_matrix_pagerank(seed):
-    g = _random_graph(seed)
+def test_batched_windows_rowwise_parity_all_plans():
+    """[W, V] batched EA == W single-window runs, bit-identical, for every
+    method x backend cell under the same union-budgeted plan (W >= 4)."""
+    g = _random_graph(7)
     idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
-    ts = np.asarray(g.t_start)
-    win = (int(np.quantile(ts, 0.3)), int(np.asarray(g.t_end).max()))
-    in_win = int(((ts >= win[0]) & (ts <= win[1])).sum())
-    budget = max(64, 1 << in_win.bit_length())
+    wins = _test_windows(g, count=5)
+    union = (int(wins[:, 0].min()), int(wins[:, 1].max()))
+    src = 3
+    plans = _plans_for(g, idx, union, _covering_budget(g, union), windows=wins)
+    for name, plan in plans.items():
+        assert plan.n_windows == len(wins)
+        assert plan.cache_key.endswith(f"/w{len(wins)}")
+        got = np.asarray(earliest_arrival_batched(g, src, wins, idx, plan=plan))
+        assert got.shape == (len(wins), g.n_vertices)
+        for i, w in enumerate(wins):
+            single = np.asarray(
+                earliest_arrival(g, src, (int(w[0]), int(w[1])), idx, plan=plan)
+            )
+            assert (got[i] == single).all(), f"{name} row {i} diverges"
 
-    results = {
-        name: np.asarray(temporal_pagerank(g, win, idx, n_iters=25, plan=plan))
-        for name, plan in _plans_for(g, idx, win, budget).items()
-    }
-    ref = results.pop("scan/xla")
-    for name, got in results.items():
-        np.testing.assert_allclose(
-            got, ref, rtol=1e-5, atol=1e-7,
-            err_msg=f"{name} diverges from scan/xla",
-        )
 
+def test_batched_windows_pagerank_and_reachability():
+    g = _random_graph(11)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    wins = _test_windows(g, count=4)
+    pr_b = np.asarray(temporal_pagerank_batched(g, wins, idx, n_iters=20))
+    for i, w in enumerate(wins):
+        pr_s = np.asarray(
+            temporal_pagerank(g, (int(w[0]), int(w[1])), idx, n_iters=20))
+        np.testing.assert_allclose(pr_b[i], pr_s, rtol=1e-5, atol=1e-7)
+    r_b = overlaps_reachability_batched(g, 2, wins, idx)
+    for i, w in enumerate(wins):
+        r_s = overlaps_reachability(g, 2, (int(w[0]), int(w[1])), idx)
+        for a, b in zip(r_b, r_s):
+            assert (np.asarray(a)[i] == np.asarray(b)).all()
+
+
+def test_batched_windows_pallas_scan_parity():
+    """Batched sweep on the pallas_tiled backend == xla backend, bit-exact
+    for EA and allclose for the f32 sum combine (pagerank)."""
+    g = _random_graph(13, n_v=90, n_e=1200)
+    idx = build_tger(g, degree_cutoff=8)
+    wins = _test_windows(g, count=4)
+    plan_p = plan_query(g, idx, windows=wins, access="scan",
+                        backend="pallas_tiled", tile_v=64, block_e=128)
+    plan_x = make_plan("scan", n_windows=len(wins))
+    ea_p = np.asarray(earliest_arrival_batched(g, 0, wins, idx, plan=plan_p))
+    ea_x = np.asarray(earliest_arrival_batched(g, 0, wins, idx, plan=plan_x))
+    assert (ea_p == ea_x).all()
+    pr_p = np.asarray(
+        temporal_pagerank_batched(g, wins, idx, n_iters=15, plan=plan_p))
+    pr_x = np.asarray(
+        temporal_pagerank_batched(g, wins, idx, n_iters=15, plan=plan_x))
+    np.testing.assert_allclose(pr_p, pr_x, rtol=1e-5, atol=1e-7)
+
+
+def test_batched_sweep_gathers_once(monkeypatch):
+    """The acceptance property: a batched index-method sweep builds its edge
+    view (the one budgeted gather over the union window) exactly ONCE for
+    the whole [W, V] program — trace-counted on the view builder.  Graph
+    shape is unique to this test so the jit cache cannot satisfy the call
+    without tracing."""
+    calls = {"n": 0}
+    orig = edgemap_mod.index_view
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(edgemap_mod, "index_view", counting)
+    g = _random_graph(97, n_v=61, n_e=777)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    wins = _test_windows(g, count=6)
+    union = (int(wins[:, 0].min()), int(wins[:, 1].max()))
+    plan = make_plan("index", budget=_covering_budget(g, union),
+                     n_windows=len(wins))
+    out = earliest_arrival_batched(g, 5, wins, idx, plan=plan)
+    assert out.shape == (6, 61)
+    assert calls["n"] == 1, (
+        f"batched sweep built the edge view {calls['n']} times; "
+        "must gather the union window exactly once"
+    )
+
+
+def test_serve_sweep_entry_point():
+    from repro.serve import sliding_windows, sweep, sweep_looped
+
+    g = _random_graph(29)
+    idx = build_tger(g, degree_cutoff=8, n_time_buckets=8)
+    t_max = int(np.asarray(g.t_end).max())
+    wins = sliding_windows(t_max, width=120, stride=15, count=4)
+    assert wins.shape == (4, 2)
+    for alg in ("earliest_arrival", "pagerank"):
+        kw = dict(n_iters=10) if alg == "pagerank" else {}
+        b = sweep(g, 1, wins, idx, algorithm=alg, **kw)
+        l = sweep_looped(g, 1, wins, idx, algorithm=alg, **kw)
+        if alg == "pagerank":
+            np.testing.assert_allclose(np.asarray(b), np.asarray(l),
+                                       rtol=1e-5, atol=1e-7)
+        else:
+            assert (np.asarray(b) == np.asarray(l)).all()
+    rb = sweep(g, 1, wins, idx, algorithm="reachability")
+    rl = sweep_looped(g, 1, wins, idx, algorithm="reachability")
+    for a, b in zip(rb, rl):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    with pytest.raises(ValueError):
+        sweep(g, 1, wins, idx, algorithm="nope")
+
+
+# ---------------------------------------------------------------------------
+# pallas backend inside the edgemap
+# ---------------------------------------------------------------------------
 
 def test_pallas_backend_inside_edgemap_min():
     """temporal_edge_map routes min-combines through the tiled kernel and
@@ -185,43 +402,8 @@ def test_pallas_backend_inside_edgemap_min():
 
 
 # ---------------------------------------------------------------------------
-# unified distributed round vs the legacy variants it replaces
+# unified distributed round
 # ---------------------------------------------------------------------------
-
-def test_legacy_wrappers_trace_identically_to_plan_builder():
-    """The four legacy constructors are THIN wrappers: each must trace to
-    exactly the same jaxpr as ``make_ea_round_plan`` with the equivalent
-    plan (no XLA compile needed — this is a program-identity check)."""
-    import jax
-
-    from repro.distributed import graph_engine as ge
-    from repro.distributed.compat import make_mesh
-
-    mesh = make_mesh((1, 1), ("data", "model"))
-    g = _random_graph(5, n_v=30, n_e=200)
-    V, E = g.n_vertices, g.n_edges
-    arr0 = jnp.zeros((2, V), jnp.int32)
-    e_i32 = jnp.zeros(E, jnp.int32)
-    e_bool = jnp.zeros(E, bool)
-    win = jnp.zeros(2, jnp.int32)
-    args = (arr0, e_i32, e_i32, e_i32, e_i32, e_bool, win)
-
-    pairs = [
-        (ge.make_ea_round(mesh, V),
-         ge.make_ea_round_plan(mesh, V, make_plan("scan"))),
-        (ge.make_ea_round_selective(mesh, V, 128),
-         ge.make_ea_round_plan(mesh, V, make_plan("index", budget=128))),
-        (ge.make_ea_round_sparse(mesh, V, 16),
-         ge.make_ea_round_plan(mesh, V, make_plan("scan", exchange_budget=16))),
-        (ge.make_ea_round_selective_sparse(mesh, V, 128, 16),
-         ge.make_ea_round_plan(
-             mesh, V, make_plan("index", budget=128, exchange_budget=16))),
-    ]
-    for i, (legacy_fn, plan_fn) in enumerate(pairs):
-        legacy_jaxpr = str(jax.make_jaxpr(legacy_fn)(*args))
-        plan_jaxpr = str(jax.make_jaxpr(plan_fn)(*args))
-        assert legacy_jaxpr == plan_jaxpr, f"wrapper {i} is not a thin wrapper"
-
 
 def test_distributed_plan_guards():
     """Hybrid plans are rejected at shard granularity, and a gather plan
@@ -239,6 +421,26 @@ def test_distributed_plan_guards():
         ge.run_distributed_ea(
             mesh, arr0, (e, e, e, e), jnp.ones(4, bool), jnp.zeros(2, jnp.int32),
             plan=make_plan("index", budget=64),
+        )
+
+
+def test_legacy_wrappers_are_gone():
+    """The one-PR back-compat surface is removed: the four distributed
+    wrapper constructors and the edgemap access=/budget= shims no longer
+    exist."""
+    from repro.core import edgemap
+    from repro.distributed import graph_engine as ge
+
+    for name in ("make_ea_round", "make_ea_round_selective",
+                 "make_ea_round_sparse", "make_ea_round_selective_sparse"):
+        assert not hasattr(ge, name)
+    for name in ("resolve_plan", "plan_access"):
+        assert not hasattr(edgemap, name)
+    with pytest.raises(TypeError):
+        temporal_edge_map(
+            _random_graph(1, n_v=5, n_e=10), (0, 10),
+            jnp.ones(5, bool), jnp.zeros(5, jnp.int32),
+            lambda e, s: (e.t_end, e.mask), "min", access="scan",
         )
 
 

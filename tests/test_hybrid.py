@@ -10,6 +10,7 @@ from repro.core.predicates import in_window
 from repro.core.temporal_graph import from_edges
 from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph
+from repro.engine import make_plan
 
 
 @pytest.fixture(scope="module")
@@ -57,8 +58,9 @@ def test_hybrid_ea_matches_scan(gi, q):
     win = (int(np.quantile(ts, q)), int(np.asarray(g.t_end).max()))
     kb = hybrid_budget(g, idx, win)
     src = int(np.argmax(np.asarray(g.out_degree)))
-    a = np.asarray(earliest_arrival(g, src, win, access="scan"))
-    b = np.asarray(earliest_arrival(g, src, win, idx, access="hybrid", budget=kb))
+    a = np.asarray(earliest_arrival(g, src, win))
+    b = np.asarray(earliest_arrival(
+        g, src, win, idx, plan=make_plan("hybrid", per_vertex_budget=kb)))
     assert (a == b).all()
 
 
@@ -77,8 +79,9 @@ def test_hybrid_property_random_graphs(seed):
     win = (int(np.quantile(ts, 0.5)), int(np.asarray(g.t_end).max()))
     kb = hybrid_budget(g, idx, win)
     s = int(rng.integers(0, n_v))
-    a = np.asarray(earliest_arrival(g, s, win, access="scan"))
-    b = np.asarray(earliest_arrival(g, s, win, idx, access="hybrid", budget=kb))
+    a = np.asarray(earliest_arrival(g, s, win))
+    b = np.asarray(earliest_arrival(
+        g, s, win, idx, plan=make_plan("hybrid", per_vertex_budget=kb)))
     assert (a == b).all()
 
 

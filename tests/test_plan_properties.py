@@ -1,0 +1,193 @@
+"""Planner invariants, property-tested (hypothesis; the conftest shim skips
+these when the dev extra is absent):
+
+  * budgets are monotone in window width (wider window => bigger rung);
+  * a ``windows=[...]`` union plan budgets at least as much as every member
+    window's own plan (the covering property batched sweeps rely on);
+  * AccessPlan round-trips through ``jax.tree_util`` and ``jax.jit``
+    unchanged — static metadata in the treedef, layout leaves as leaves.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selective import CostModel, decide_access
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import build_tger
+from repro.engine import make_plan, plan_query
+from repro.engine.plan import METHODS
+
+_GRAPH_CACHE = {}
+
+
+def _graph(seed, n_v=40, n_e=500, t_max=1000):
+    if seed not in _GRAPH_CACHE:
+        rng = np.random.default_rng(seed)
+        g = from_edges(
+            rng.integers(0, n_v, n_e), rng.integers(0, n_v, n_e),
+            rng.integers(0, t_max, n_e), None, n_vertices=n_v,
+            rng=np.random.default_rng(seed),
+        )
+        _GRAPH_CACHE[seed] = (g, build_tger(g, degree_cutoff=8,
+                                            n_time_buckets=8))
+    return _GRAPH_CACHE[seed]
+
+
+def _plans_equal(a, b):
+    static = (
+        "method", "backend", "budget", "per_vertex_budget", "exchange_budget",
+        "tile_v", "block_e", "n_tiles", "n_edges", "cache_key", "n_windows",
+    )
+    for f in static:
+        if getattr(a, f) != getattr(b, f):
+            return False
+    return (
+        np.array_equal(np.asarray(a.layout_perm), np.asarray(b.layout_perm))
+        and np.array_equal(np.asarray(a.layout_block_tile),
+                           np.asarray(b.layout_block_tile))
+    )
+
+
+# ---------------------------------------------------------------------------
+# budget monotonicity in window width
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 20),
+    lo=st.integers(0, 900),
+    width=st.integers(1, 500),
+    extra=st.integers(0, 400),
+)
+def test_index_budget_monotone_in_window_width(seed, lo, width, extra):
+    """Widening a window (both directions) can only grow the forced-index
+    budget rung: the SAT estimate is a monotone rectangle query and
+    ``budget_for`` is monotone in the estimate."""
+    g, idx = _graph(seed)
+    narrow = (lo, lo + width)
+    wide = (max(lo - extra, 0), lo + width + extra)
+    b_narrow = decide_access(idx, g.n_edges, narrow, CostModel(),
+                             force="index").budget
+    b_wide = decide_access(idx, g.n_edges, wide, CostModel(),
+                           force="index").budget
+    assert b_wide >= b_narrow
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 20),
+    lo=st.integers(0, 900),
+    width=st.integers(1, 500),
+    extra=st.integers(0, 400),
+)
+def test_hybrid_budget_monotone_in_window_width(seed, lo, width, extra):
+    g, idx = _graph(seed)
+    narrow = (lo, lo + width)
+    wide = (max(lo - extra, 0), lo + width + extra)
+    p_narrow = plan_query(g, idx, narrow, access="hybrid")
+    p_wide = plan_query(g, idx, wide, access="hybrid")
+    assert p_wide.per_vertex_budget >= p_narrow.per_vertex_budget
+
+
+# ---------------------------------------------------------------------------
+# union-window plans cover every member window
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 20),
+    bounds=st.lists(
+        st.tuples(st.integers(0, 1000), st.integers(1, 400)),
+        min_size=2, max_size=6,
+    ),
+    access=st.sampled_from(["index", "hybrid"]),
+)
+def test_union_plan_budget_covers_member_windows(seed, bounds, access):
+    g, idx = _graph(seed)
+    wins = [(lo, lo + w) for lo, w in bounds]
+    union_plan = plan_query(g, idx, windows=wins, access=access)
+    assert union_plan.n_windows == len(wins)
+    for w in wins:
+        member = plan_query(g, idx, w, access=access)
+        # a forced-index plan degenerates to scan when its rung reaches E —
+        # a scan union plan covers every member window by definition.
+        if union_plan.method != "scan":
+            assert union_plan.budget >= member.budget
+        assert union_plan.per_vertex_budget >= member.per_vertex_budget
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    method=st.sampled_from(list(METHODS)),
+    budget=st.integers(0, 1 << 20),
+    pvb=st.integers(0, 1 << 12),
+    exchange=st.integers(0, 256),
+    n_windows=st.integers(0, 64),
+)
+def test_plan_pytree_roundtrip(method, budget, pvb, exchange, n_windows):
+    plan = make_plan(
+        method, budget=budget, per_vertex_budget=pvb,
+        exchange_budget=exchange, n_windows=n_windows,
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert _plans_equal(plan, back)
+    # static fields live in the treedef: two plans differing only in statics
+    # must NOT share a treedef (that is the one-compilation-per-rung rule)
+    other = make_plan(method, budget=budget + 1, per_vertex_budget=pvb,
+                      exchange_budget=exchange, n_windows=n_windows)
+    _, treedef2 = jax.tree_util.tree_flatten(other)
+    assert treedef2 != treedef
+
+
+def test_plan_roundtrips_through_jit_with_layout():
+    """A plan with a real Pallas layout passes through jax.jit as a pytree
+    argument and return value, leaves and statics intact."""
+    rng = np.random.default_rng(0)
+    g = from_edges(
+        rng.integers(0, 50, 600), rng.integers(0, 50, 600),
+        rng.integers(0, 500, 600), None, n_vertices=50,
+        rng=np.random.default_rng(0),
+    )
+    idx = build_tger(g, degree_cutoff=8)
+    plan = plan_query(g, idx, (0, 500), access="scan",
+                      backend="pallas_tiled", tile_v=64, block_e=128)
+
+    @jax.jit
+    def ident(p):
+        return p
+
+    back = ident(plan)
+    assert _plans_equal(plan, back)
+    assert back.backend == "pallas_tiled" and back.n_tiles == plan.n_tiles
+
+
+def test_plan_pytree_roundtrip_smoke_without_hypothesis():
+    """Deterministic slice of the property so the invariant is exercised
+    even when hypothesis is absent (conftest shim skips @given tests)."""
+    for method, budget, pvb, nw in [
+        ("scan", 0, 0, 0), ("index", 256, 0, 4), ("hybrid", 0, 32, 7),
+    ]:
+        plan = make_plan(method, budget=budget, per_vertex_budget=pvb,
+                         n_windows=nw)
+        leaves, treedef = jax.tree_util.tree_flatten(plan)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert _plans_equal(plan, back)
+
+
+def test_union_budget_covers_smoke_without_hypothesis():
+    g, idx = _graph(3)
+    wins = [(0, 100), (200, 900), (500, 600), (50, 350)]
+    for access in ("index", "hybrid"):
+        union_plan = plan_query(g, idx, windows=wins, access=access)
+        for w in wins:
+            member = plan_query(g, idx, w, access=access)
+            if union_plan.method != "scan":
+                assert union_plan.budget >= member.budget
+            assert union_plan.per_vertex_budget >= member.per_vertex_budget

@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import reference as R
 from repro.core.algorithms import earliest_arrival, temporal_pagerank
-from repro.core.edgemap import plan_access
+from repro.engine import decision_for, make_plan
 from repro.core.selective import CostModel
 from repro.core.temporal_graph import from_edges
 from repro.core.tger import build_tger
@@ -20,12 +20,12 @@ def test_full_kairos_flow_selective_window():
     idx = build_tger(g, degree_cutoff=64)
     ts = np.asarray(g.t_start)
     window = (int(np.quantile(ts, 0.97)), int(np.asarray(g.t_end).max()))
-    plan = plan_access(g, idx, window, CostModel())
-    assert plan.method == "index", "a 3% window on bursty data must choose TGER"
+    dec = decision_for(g, idx, window, CostModel())
+    assert dec.method == "index", "a 3% window on bursty data must choose TGER"
     src = int(np.argmax(np.asarray(g.out_degree)))
     got = np.asarray(
         earliest_arrival(g, src, window, idx,
-                         access=plan.method, budget=plan.budget)
+                         plan=make_plan(dec.method, budget=dec.budget))
     )
     ref = R.earliest_arrival_ref(g, src, window)
     assert (got == ref).all()
@@ -36,10 +36,10 @@ def test_full_kairos_flow_broad_window():
     idx = build_tger(g, degree_cutoff=64)
     ts = np.asarray(g.t_start)
     window = (int(ts.min()), int(np.asarray(g.t_end).max()))
-    plan = plan_access(g, idx, window, CostModel())
-    assert plan.method == "scan", "a full-range window must scan"
+    dec = decision_for(g, idx, window, CostModel())
+    assert dec.method == "scan", "a full-range window must scan"
     src = int(np.asarray(g.src)[0])
-    got = np.asarray(earliest_arrival(g, src, window, access="scan"))
+    got = np.asarray(earliest_arrival(g, src, window))
     ref = R.earliest_arrival_ref(g, src, window)
     assert (got == ref).all()
 
