@@ -14,7 +14,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: table4,fig7,fig8,fig9,plans,sweep,estimator,roofline")
+                    help="comma list: table4,fig7,fig8,fig9,plans,sweep,"
+                         "fixpoint,estimator,roofline")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -53,6 +54,13 @@ def main() -> None:
             bench_sweep.run(n_v=2_000, n_e=50_000, counts=(4, 8), iters=2)
         else:
             bench_sweep.run()
+
+    if want("fixpoint"):
+        from benchmarks import bench_fixpoint
+        if args.quick:
+            bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2)
+        else:
+            bench_fixpoint.run()
 
     if want("estimator"):
         from benchmarks import bench_estimator

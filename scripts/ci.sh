@@ -5,3 +5,7 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# smoke the perf trajectory: gather-once vs re-gather + incremental sweeps
+# (asserts result-identity internally; emits BENCH_fixpoint.json at the root)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint

@@ -105,7 +105,7 @@ class LMFamily(ArchSpec):
 
     def _mesh_cfg(self, mesh) -> tf.LMConfig:
         """Mesh-dependent config tweaks: MoE dispatch groups track the
-        batch-sharding degree (group-local dispatch, DESIGN.md §7)."""
+        batch-sharding degree (group-local dispatch, DESIGN.md §8)."""
         cfg = self.cfg
         if cfg.moe is not None and mesh is not None:
             sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -2,19 +2,29 @@ from repro.core.algorithms.paths import (  # noqa: F401
     earliest_arrival,
     earliest_arrival_batched,
     earliest_arrival_multi,
+    earliest_arrival_over_view,
     latest_departure,
     fastest,
     shortest_duration,
 )
-from repro.core.algorithms.bfs import temporal_bfs  # noqa: F401
-from repro.core.algorithms.connectivity import temporal_cc  # noqa: F401
+from repro.core.algorithms.bfs import (  # noqa: F401
+    temporal_bfs,
+    temporal_bfs_batched,
+)
+from repro.core.algorithms.connectivity import (  # noqa: F401
+    connected_components_batched,
+    temporal_cc,
+    temporal_cc_batched,
+)
 from repro.core.algorithms.kcore import temporal_kcore, temporal_coreness  # noqa: F401
 from repro.core.algorithms.pagerank import (  # noqa: F401
     temporal_pagerank,
     temporal_pagerank_batched,
+    temporal_pagerank_over_view,
 )
 from repro.core.algorithms.centrality import temporal_betweenness  # noqa: F401
 from repro.core.algorithms.reachability import (  # noqa: F401
     overlaps_reachability,
     overlaps_reachability_batched,
+    overlaps_reachability_over_view,
 )

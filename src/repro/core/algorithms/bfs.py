@@ -3,6 +3,10 @@
 Round h maintains the best (earliest) arrival achievable within <= h hops;
 a vertex's hop count is the first round it becomes reachable.  Exact for
 min-hop because arrival-per-round is the min over all <= h-hop paths.
+
+Both the single-window run and the batched [W, V] sweep execute on the
+gather-once FixpointRunner (DESIGN.md §7): the edge view and window mask
+are hoisted, so index/hybrid plans gather once per query, not per round.
 """
 from __future__ import annotations
 
@@ -12,16 +16,20 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import (
-    INT_INF,
-    ensure_plan,
-    frontier_from_sources,
-    temporal_edge_map,
-)
+from repro.core.edgemap import INT_INF, ensure_plan, frontier_from_sources
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
+
+
+def _bfs_relax(pred: OrderingPredicateType):
+    def relax(edges, arr_src):
+        ok = edge_follows(pred, arr_src, edges.t_start, edges.t_end)
+        return edges.t_end, ok
+
+    return relax
 
 
 @functools.partial(
@@ -38,35 +46,78 @@ def temporal_bfs(
     max_rounds: int = 0,
 ):
     """Returns (hops[V], arrival[V]); hops = INT_INF when unreachable."""
-    plan = ensure_plan(plan)
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+    )
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    ta = jnp.asarray(window[0], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
     hops0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(0)
     frontier0 = frontier_from_sources(V, source)
-    max_rounds = max_rounds or V + 1
+    relax = _bfs_relax(pred)
 
-    def relax(edges, arr_src):
-        ok = edge_follows(pred, arr_src, edges.t_start, edges.t_end)
-        return edges.t_end, ok
+    def cond(state):
+        _, _, frontier = state
+        return jnp.any(frontier)
 
-    def cond(carry):
-        rnd, (_, _, frontier) = carry
-        return (rnd < max_rounds) & jnp.any(frontier)
-
-    def body(carry):
-        rnd, (arrival, hops, frontier) = carry
-        cand, _ = temporal_edge_map(
-            g, (ta, tb), frontier, arrival, relax, "min",
-            tger=tger, plan=plan,
-        )
+    def body(state, rnd):
+        arrival, hops, frontier = state
+        cand, _ = runner.step(frontier, arrival, relax, "min")
         new_arrival = jnp.minimum(arrival, cand)
         improved = new_arrival < arrival
         newly_reached = improved & (hops == INT_INF)
         new_hops = jnp.where(newly_reached, rnd + 1, hops)
-        return rnd + 1, (new_arrival, new_hops, improved)
+        return new_arrival, new_hops, improved
 
-    _, (arrival, hops, _) = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), (arrival0, hops0, frontier0))
-    )
+    arrival, hops, _ = runner.run(cond, body, (arrival0, hops0, frontier0))
     return hops, arrival
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pred", "max_rounds")
+)
+def temporal_bfs_batched(
+    g: TemporalGraph,
+    source,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+):
+    """Batched multi-window BFS (DESIGN.md §6): (hops[W, V], arrival[W, V])
+    from ONE union-window gather — per-window masks over the shared view,
+    [W, V] min-combines per round.  Row w is bit-identical to
+    ``temporal_bfs(g, source, windows[w], ...)`` under the same plan: hop
+    counts are per-row exact because a converged row's frontier is empty, so
+    its hops never update while other rows keep relaxing."""
+    runner = FixpointRunner.for_windows(
+        g, tger, windows, plan=ensure_plan(plan), max_rounds=max_rounds
+    )
+    V = g.n_vertices
+    W = runner.windows.shape[0]
+    arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(
+        runner.windows[:, 0])
+    hops0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(0)
+    frontier0 = jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
+    relax = _bfs_relax(pred)
+
+    def cond(state):
+        _, _, frontier = state
+        return jnp.any(frontier)
+
+    def body(state, rnd):
+        arrival, hops, frontier = state
+        cand, _ = runner.step(frontier, arrival, relax, "min")
+        new_arrival = jnp.minimum(arrival, cand)
+        improved = new_arrival < arrival
+        newly_reached = improved & (hops == INT_INF)
+        new_hops = jnp.where(newly_reached, rnd + 1, hops)
+        return new_arrival, new_hops, improved
+
+    arrival, hops, _ = runner.run(cond, body, (arrival0, hops0, frontier0))
+    return hops, arrival
+
+
+__all__ = ["temporal_bfs", "temporal_bfs_batched"]

@@ -17,14 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.algorithms.paths import earliest_arrival
-from repro.core.edgemap import (
-    INT_INF,
-    ensure_plan,
-    segment_combine,
-    view_for_plan,
-)
+from repro.core.edgemap import INT_INF, ensure_plan, segment_combine
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
-from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
+from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
@@ -51,11 +47,13 @@ def _betweenness_single(
     )
     reached = t < INT_INF
 
-    edges = view_for_plan(g, tger, (ta, tb), plan)
+    # hoisted view + window mask (the EA call above gathered its own view;
+    # Brandes' forward/backward passes share this one)
+    runner = FixpointRunner.for_query(g, tger, (ta, tb), plan=plan)
+    edges = runner.edges
     t_src = t[edges.src]
     opt = (
-        edges.mask
-        & in_window(edges.t_start, edges.t_end, ta, tb)
+        runner.valid
         & (t_src < INT_INF)
         & edge_follows(pred, t_src, edges.t_start, edges.t_end)
         & (edges.t_end == t[edges.dst])

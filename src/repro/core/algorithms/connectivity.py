@@ -1,6 +1,11 @@
 """Temporal connected components: hash-min label propagation over the edges
 valid inside the query window (weak connectivity over the temporal slice —
-the standard definition used by shared-memory temporal systems)."""
+the standard definition used by shared-memory temporal systems).
+
+Label propagation is a fixpoint like the path relaxations: the edge view
+and window validity are loop-invariant, so both the single-window run and
+the batched [W, V] sweep execute on the gather-once FixpointRunner's
+hoisted view (DESIGN.md §7)."""
 from __future__ import annotations
 
 import functools
@@ -9,9 +14,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import ensure_plan, segment_combine, view_for_plan
+from repro.core.edgemap import (
+    combine_for_plan,
+    combine_windows_for_plan,
+    ensure_plan,
+)
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
-from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
@@ -27,32 +36,90 @@ def temporal_cc(
 ) -> jax.Array:
     """labels[V]: component id = min vertex id in the component (vertices
     with no valid incident edge are singletons)."""
-    plan = ensure_plan(plan)
+    plan_ = ensure_plan(plan)
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=plan_, max_rounds=max_rounds
+    )
+    edges, valid = runner.edges, runner.valid
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     labels0 = jnp.arange(V, dtype=jnp.int32)
-    max_rounds = max_rounds or V + 1
 
-    def cond(carry):
-        rnd, labels, changed = carry
-        return (rnd < max_rounds) & changed
+    def cond(state):
+        _, changed = state
+        return changed
 
-    def body(carry):
-        rnd, labels, _ = carry
+    def body(state, rnd):
+        labels, _ = state
         lab_src = labels[edges.src]
         lab_dst = labels[edges.dst]
-        # undirected propagation: push min label both ways
-        fwd = segment_combine(lab_src, edges.dst, V, "min", mask=valid)
-        bwd = segment_combine(lab_dst, edges.src, V, "min", mask=valid)
+        # undirected propagation: push min label both ways, through the
+        # plan's backend (the dst push is in native edge order, so the
+        # tiled layout is eligible exactly like the runner's step)
+        fwd = combine_for_plan(plan_, lab_src, edges.dst, V, "min",
+                               mask=valid, use_layout=runner.use_layout)
+        bwd = combine_for_plan(plan_, lab_dst, edges.src, V, "min",
+                               mask=valid)
         new_labels = jnp.minimum(labels, jnp.minimum(fwd, bwd))
         # pointer-jump (hash-min shortcut): labels[v] = labels[labels[v]]
         new_labels = jnp.minimum(new_labels, new_labels[new_labels])
         changed = jnp.any(new_labels != labels)
-        return rnd + 1, new_labels, changed
+        return new_labels, changed
 
-    _, labels, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), labels0, jnp.bool_(True))
-    )
+    labels, _ = runner.run(cond, body, (labels0, jnp.bool_(True)))
     return labels
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def temporal_cc_batched(
+    g: TemporalGraph,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+) -> jax.Array:
+    """Batched multi-window connected components (DESIGN.md §6):
+    labels[w, v] over all W windows from ONE union-window gather — the
+    per-window [W, E'] validity matrix is precomputed once and the min-label
+    pushes run as [W, ·] batched reductions.  Row w is bit-identical to
+    ``temporal_cc(g, windows[w], ...)`` under the same plan: hash-min label
+    propagation is monotone non-increasing and idempotent, so a converged
+    row rides extra rounds (forced by slower rows) as a no-op."""
+    plan_ = ensure_plan(plan)
+    runner = FixpointRunner.for_windows(
+        g, tger, windows, plan=plan_, max_rounds=max_rounds
+    )
+    edges, valid = runner.edges, runner.valid          # valid: [W, E']
+    V = g.n_vertices
+    W = runner.windows.shape[0]
+    labels0 = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (W, V))
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state, rnd):
+        labels, _ = state
+        lab_src = labels[:, edges.src]                 # [W, E']
+        lab_dst = labels[:, edges.dst]
+        fwd = combine_windows_for_plan(plan_, lab_src, edges.dst, V, "min",
+                                       masks=valid,
+                                       use_layout=runner.use_layout)
+        bwd = combine_windows_for_plan(plan_, lab_dst, edges.src, V, "min",
+                                       masks=valid)
+        new_labels = jnp.minimum(labels, jnp.minimum(fwd, bwd))
+        new_labels = jnp.minimum(
+            new_labels, jnp.take_along_axis(new_labels, new_labels, axis=1)
+        )
+        changed = jnp.any(new_labels != labels)
+        return new_labels, changed
+
+    labels, _ = runner.run(cond, body, (labels0, jnp.bool_(True)))
+    return labels
+
+
+# the ROADMAP/API-facing alias: "connected components" is the workload name,
+# temporal_cc_batched the module-consistent one.
+connected_components_batched = temporal_cc_batched
+
+__all__ = ["temporal_cc", "temporal_cc_batched", "connected_components_batched"]

@@ -1,5 +1,9 @@
 """Temporal k-core: iterative peeling of vertices whose (undirected) degree
-within the query window drops below k; plus full coreness decomposition."""
+within the query window drops below k; plus full coreness decomposition.
+
+Peeling is a fixpoint over a loop-invariant edge set: the view and the
+window-validity mask come precomputed from the gather-once FixpointRunner
+(DESIGN.md §7), so index/hybrid plans pay their gather once per query."""
 from __future__ import annotations
 
 import functools
@@ -8,9 +12,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import ensure_plan, segment_combine, view_for_plan
+from repro.core.edgemap import ensure_plan, segment_combine
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
-from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
@@ -26,21 +30,20 @@ def temporal_kcore(
     max_rounds: int = 0,
 ) -> jax.Array:
     """alive[V] bool: membership of the temporal k-core within the window."""
-    plan = ensure_plan(plan)
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+    )
+    edges, valid0 = runner.edges, runner.valid
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     alive0 = jnp.ones(V, dtype=bool)
-    max_rounds = max_rounds or V + 1
     k = jnp.asarray(k, jnp.int32)
 
-    def cond(carry):
-        rnd, alive, changed = carry
-        return (rnd < max_rounds) & changed
+    def cond(state):
+        _, changed = state
+        return changed
 
-    def body(carry):
-        rnd, alive, _ = carry
+    def body(state, rnd):
+        alive, _ = state
         live_edge = valid0 & alive[edges.src] & alive[edges.dst]
         ones = live_edge.astype(jnp.int32)
         deg = (
@@ -49,11 +52,9 @@ def temporal_kcore(
         )
         new_alive = alive & (deg >= k)
         changed = jnp.any(new_alive != alive)
-        return rnd + 1, new_alive, changed
+        return new_alive, changed
 
-    _, alive, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), alive0, jnp.bool_(True))
-    )
+    alive, _ = runner.run(cond, body, (alive0, jnp.bool_(True)))
     return alive
 
 
@@ -68,12 +69,11 @@ def temporal_coreness(
 ) -> jax.Array:
     """core[v] = max k such that v belongs to the temporal k-core within the
     window (full decomposition).  Peeling reuses the (k-1)-core's alive set
-    — the k-core is a subset — so total work is O(k_max * rounds * E')."""
-    plan = ensure_plan(plan)
+    — the k-core is a subset — so total work is O(k_max * rounds * E'); the
+    view and window mask are hoisted once across ALL k_max peels."""
+    runner = FixpointRunner.for_query(g, tger, window, plan=ensure_plan(plan))
+    edges, valid0 = runner.edges, runner.valid
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    valid0 = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
 
     def peel_to(alive, k):
         def cond(carry):

@@ -1,5 +1,10 @@
 """Temporal PageRank: damped power iteration over the window-valid edge set
-(paper §6.1 runs 100 iterations with a [t_a, t_b] input window)."""
+(paper §6.1 runs 100 iterations with a [t_a, t_b] input window).
+
+The window-validity matrix, degrees and dangling sets are all
+iteration-invariant: they are computed once on the FixpointRunner's hoisted
+view (DESIGN.md §7) and the power iteration reuses the runner's uniform
+step for its [W, ·] batched sum combine."""
 from __future__ import annotations
 
 import functools
@@ -9,12 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.edgemap import (
+    EdgeView,
     combine_windows_for_plan,
     ensure_plan,
     union_window,
     view_for_plan,
 )
-from repro.core.predicates import in_window
+from repro.engine.fixpoint import FixpointRunner
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 from repro.engine.plan import AccessPlan
@@ -44,6 +50,62 @@ def temporal_pagerank(
 
 
 @functools.partial(
+    jax.jit, static_argnames=("n_vertices", "n_iters")
+)
+def temporal_pagerank_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[W, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    damping: float = 0.85,
+    n_iters: int = 100,
+    init: Optional[jax.Array] = None,   # [W, V] warm start
+) -> jax.Array:
+    """The batched power iteration over a PREBUILT (union-covering) edge
+    view — the piece the incremental sliding-window server calls on its
+    advanced view.  ``init`` warm-starts the iteration (PageRank's damped
+    iteration contracts to a unique fixed point, so a warm start changes
+    only the residual after n_iters, not the limit — re-iterating from the
+    previous sweep's nearby answer converges faster, but the finite-iteration
+    output is NOT bit-identical to a cold uniform start; pass ``init=None``
+    for the bit-reproducible serving mode)."""
+    runner = FixpointRunner(
+        edges, windows=windows, plan=plan, n_vertices=n_vertices,
+    )
+    V = n_vertices
+    W = runner.windows.shape[0]
+    valid = runner.valid                                    # [W, E']
+    # degree reduce goes into src — native-order layout does not apply
+    out_deg = combine_windows_for_plan(
+        plan, valid.astype(jnp.float32), edges.src, V, "sum"
+    )                                                       # [W, V]
+    inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
+    dangling = out_deg == 0
+    ones_frontier = jnp.ones((W, V), dtype=bool)
+
+    def relax(e, state):
+        pr_src, inv_src = state
+        return pr_src * inv_src, jnp.ones(e.src.shape[0], dtype=bool)
+
+    pr0 = (
+        jnp.full((W, V), 1.0 / V, jnp.float32) if init is None
+        else jnp.asarray(init, jnp.float32)
+    )
+
+    def body(pr, _):
+        agg, _ = runner.step(ones_frontier, (pr, inv_deg), relax, "sum")
+        dangling_mass = (
+            jnp.sum(jnp.where(dangling, pr, 0.0), axis=1, keepdims=True) / V
+        )
+        pr_new = (1.0 - damping) / V + damping * (agg + dangling_mass)
+        return pr_new, None
+
+    pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
+    return pr
+
+
+@functools.partial(
     jax.jit, static_argnames=("n_iters",)
 )
 def temporal_pagerank_batched(
@@ -60,34 +122,9 @@ def temporal_pagerank_batched(
     a [W, ·] batched sum combine per power iteration, no per-window
     re-gather.  Degrees (and hence dangling sets) are per-window."""
     plan = ensure_plan(plan)
-    V = g.n_vertices
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
-    W = windows.shape[0]
     edges = view_for_plan(g, tger, union_window(windows), plan)
-    valid = jax.vmap(
-        lambda w: edges.mask & in_window(edges.t_start, edges.t_end, w[0], w[1])
-    )(windows)                                              # [W, K]
-    # degree reduce goes into src — native-order layout does not apply
-    out_deg = combine_windows_for_plan(
-        plan, valid.astype(jnp.float32), edges.src, V, "sum"
-    )                                                       # [W, V]
-    inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1.0), 0.0)
-    dangling = out_deg == 0
-    use_layout = plan.method == "scan"
-
-    pr0 = jnp.full((W, V), 1.0 / V, jnp.float32)
-
-    def body(pr, _):
-        contrib = pr[:, edges.src] * inv_deg[:, edges.src]  # [W, K]
-        agg = combine_windows_for_plan(
-            plan, contrib, edges.dst, V, "sum", masks=valid,
-            use_layout=use_layout,
-        )
-        dangling_mass = (
-            jnp.sum(jnp.where(dangling, pr, 0.0), axis=1, keepdims=True) / V
-        )
-        pr_new = (1.0 - damping) / V + damping * (agg + dangling_mass)
-        return pr_new, None
-
-    pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
-    return pr
+    return temporal_pagerank_over_view(
+        edges, windows, plan=plan, n_vertices=g.n_vertices,
+        damping=damping, n_iters=n_iters,
+    )

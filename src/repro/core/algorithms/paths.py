@@ -1,9 +1,12 @@
 """Temporal minimal-path algorithms (paper §2.3, §6): earliest arrival,
 latest departure, fastest, shortest duration.
 
-All are frontier relaxations over TemporalEdgeMap (Alg. 2 pattern):
-``WRITEMIN`` becomes ``segment_min``, the CAS'd frontier becomes a
-changed-mask, and the loop is a ``lax.while_loop`` over dense frontiers.
+All are frontier relaxations over the gather-once FixpointRunner
+(DESIGN.md §7): the edge view, window-validity mask and endpoint selection
+are hoisted out of the ``lax.while_loop`` — index/hybrid plans pay their
+binary search + budgeted gather exactly ONCE per query, not once per
+relaxation round.  ``WRITEMIN`` becomes ``segment_min``, the CAS'd
+frontier becomes a changed-mask (Alg. 2 pattern).
 """
 from __future__ import annotations
 
@@ -15,40 +18,33 @@ import jax.numpy as jnp
 
 from repro.core.edgemap import (
     INT_INF,
-    edge_map_over_view_batched,
+    EdgeView,
     ensure_plan,
     frontier_from_sources,
     segment_combine,
-    temporal_edge_map,
     union_window,
     view_for_plan,
 )
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
-from repro.core.predicates import OrderingPredicateType, edge_follows, in_window
+from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex, vertex_range
 
 INT_NEG_INF = jnp.iinfo(jnp.int32).min
 
 
-def _while_rounds(cond_state_fn, body_fn, init, max_rounds: int):
-    """while frontier nonempty and round < max_rounds."""
-
-    def cond(carry):
-        rnd, state = carry
-        return (rnd < max_rounds) & cond_state_fn(state)
-
-    def body(carry):
-        rnd, state = carry
-        return rnd + 1, body_fn(state)
-
-    _, final = jax.lax.while_loop(cond, body, (jnp.int32(0), init))
-    return final
-
-
 # ---------------------------------------------------------------------------
 # Earliest Arrival (paper Algorithm 2)
 # ---------------------------------------------------------------------------
+
+def _ea_relax(pred: OrderingPredicateType):
+    def relax(edges, arr_src):
+        ok = edge_follows(pred, arr_src, edges.t_start, edges.t_end)
+        return edges.t_end, ok
+
+    return relax
+
 
 @functools.partial(
     jax.jit,
@@ -72,30 +68,25 @@ def earliest_arrival(
     variant (frontier = improved vertices) is the standard correct form and
     matches it on graphs where earliest arrivals are settled in one visit.
 
-    Access method + backend come from ``plan`` (repro.engine.plan_query).
+    Access method + backend come from ``plan`` (repro.engine.plan_query);
+    the view is gathered once, before the fixpoint loop.
     """
-    plan = ensure_plan(plan)
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+    )
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    ta = jnp.asarray(window[0], jnp.int32)
     arrival0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
     frontier0 = frontier_from_sources(V, source)
-    visited0 = frontier0
-    max_rounds = max_rounds or V + 1
+    relax = _ea_relax(pred)
 
-    def relax(edges, arr_src):
-        ok = edge_follows(pred, arr_src, edges.t_start, edges.t_end)
-        return edges.t_end, ok
-
-    def cond_state(state):
+    def cond(state):
         _, frontier, _ = state
         return jnp.any(frontier)
 
-    def body(state):
+    def body(state, rnd):
         arrival, frontier, visited = state
-        cand, _ = temporal_edge_map(
-            g, (ta, tb), frontier, arrival, relax, "min",
-            tger=tger, plan=plan,
-        )
+        cand, _ = runner.step(frontier, arrival, relax, "min")
         new_arrival = jnp.minimum(arrival, cand)
         improved = new_arrival < arrival
         if visit_once:
@@ -105,9 +96,7 @@ def earliest_arrival(
             new_frontier = improved
         return new_arrival, new_frontier, visited
 
-    arrival, _, _ = _while_rounds(
-        cond_state, body, (arrival0, frontier0, visited0), max_rounds
-    )
+    arrival, _, _ = runner.run(cond, body, (arrival0, frontier0, frontier0))
     return arrival
 
 
@@ -117,6 +106,73 @@ def earliest_arrival_multi(g, sources, window, tger=None, **kw):
     ``model``)."""
     fn = lambda s: earliest_arrival(g, s, window, tger, **kw)
     return jax.vmap(fn)(jnp.asarray(sources))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_vertices", "pred", "max_rounds", "visit_once"),
+)
+def earliest_arrival_over_view(
+    edges: EdgeView,
+    source,
+    windows: jax.Array,             # i32[W, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    max_rounds: int = 0,
+    visit_once: bool = False,
+    init_arrival: Optional[jax.Array] = None,   # [W, V] warm start
+    init_frontier: Optional[jax.Array] = None,  # bool[W, V]
+) -> jax.Array:
+    """The batched EA fixpoint over a PREBUILT (union-covering) edge view.
+
+    This is the piece the incremental sliding-window server reuses: it
+    advances one view across sweeps and runs only the windows that need
+    solving.  ``init_arrival``/``init_frontier`` warm-start the fixpoint —
+    sound whenever every finite init label witnesses a real temporal path
+    inside its row's window (EA is a monotone min fixpoint: relaxation from
+    any sound over-approximation converges to the same fixpoint, provided
+    the frontier seeds every finite-label vertex).
+    """
+    runner = FixpointRunner(
+        edges, windows=windows, plan=plan, n_vertices=n_vertices,
+        max_rounds=max_rounds,
+    )
+    V = n_vertices
+    W = runner.windows.shape[0]
+    if init_arrival is None:
+        arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(
+            runner.windows[:, 0])
+    else:
+        arrival0 = init_arrival
+    if init_frontier is None:
+        frontier0 = (
+            jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
+            if init_arrival is None else arrival0 < INT_INF
+        )
+    else:
+        frontier0 = init_frontier
+    relax = _ea_relax(pred)
+
+    def cond(state):
+        _, frontier, _ = state
+        return jnp.any(frontier)
+
+    def body(state, rnd):
+        arrival, frontier, visited = state
+        cand, _ = runner.step(frontier, arrival, relax, "min")
+        new_arrival = jnp.minimum(arrival, cand)
+        improved = new_arrival < arrival
+        if visit_once:
+            new_frontier = improved & ~visited
+            visited = visited | improved
+        else:
+            new_frontier = improved
+        return new_arrival, new_frontier, visited
+
+    arrival, _, _ = runner.run(cond, body, (arrival0, frontier0, frontier0))
+    return arrival
 
 
 @functools.partial(
@@ -144,43 +200,12 @@ def earliest_arrival_batched(
     the same (union-budgeted) plan.  W is static (one compilation per sweep
     width); converged windows ride the remaining rounds as no-ops."""
     plan = ensure_plan(plan)
-    V = g.n_vertices
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
-    W = windows.shape[0]
     edges = view_for_plan(g, tger, union_window(windows), plan)
-
-    arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(windows[:, 0])
-    frontier0 = jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
-    visited0 = frontier0
-    max_rounds = max_rounds or V + 1
-
-    def relax(e, arr_src):
-        ok = edge_follows(pred, arr_src, e.t_start, e.t_end)
-        return e.t_end, ok
-
-    def cond_state(state):
-        _, frontier, _ = state
-        return jnp.any(frontier)
-
-    def body(state):
-        arrival, frontier, visited = state
-        cand, _ = edge_map_over_view_batched(
-            edges, windows, frontier, arrival, relax, "min",
-            plan=plan, n_vertices=V, compute_touched=False,
-        )
-        new_arrival = jnp.minimum(arrival, cand)
-        improved = new_arrival < arrival
-        if visit_once:
-            new_frontier = improved & ~visited
-            visited = visited | improved
-        else:
-            new_frontier = improved
-        return new_arrival, new_frontier, visited
-
-    arrival, _, _ = _while_rounds(
-        cond_state, body, (arrival0, frontier0, visited0), max_rounds
+    return earliest_arrival_over_view(
+        edges, source, windows, plan=plan, n_vertices=g.n_vertices,
+        pred=pred, max_rounds=max_rounds, visit_once=visit_once,
     )
-    return arrival
 
 
 # ---------------------------------------------------------------------------
@@ -201,13 +226,16 @@ def latest_departure(
     max_rounds: int = 0,
 ) -> jax.Array:
     """ld[v] = latest time one can depart v and still reach ``target`` within
-    the window.  Symmetric to EA on the in-direction with segment_max."""
-    plan = ensure_plan(plan)
+    the window.  Symmetric to EA on the in-direction with segment_max; the
+    in-direction view is likewise gathered once."""
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), direction="in",
+        max_rounds=max_rounds,
+    )
     V = g.n_vertices
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
+    tb = jnp.asarray(window[1], jnp.int32)
     ld0 = jnp.full(V, INT_NEG_INF, jnp.int32).at[target].set(tb)
     frontier0 = frontier_from_sources(V, target)
-    max_rounds = max_rounds or V + 1
 
     def relax(edges, ld_dst):
         # chaining (u,v,[ts,te]) before the continuation leaving v at ld[v]:
@@ -220,21 +248,18 @@ def latest_departure(
             raise ValueError("latest_departure supports succeeds predicates")
         return edges.t_start, ok
 
-    def cond_state(state):
+    def cond(state):
         _, frontier = state
         return jnp.any(frontier)
 
-    def body(state):
+    def body(state, rnd):
         ld, frontier = state
-        cand, _ = temporal_edge_map(
-            g, (ta, tb), frontier, ld, relax, "max",
-            direction="in", tger=tger, plan=plan,
-        )
+        cand, _ = runner.step(frontier, ld, relax, "max")
         new_ld = jnp.maximum(ld, cand)
         improved = new_ld > ld
         return new_ld, improved
 
-    ld, _ = _while_rounds(cond_state, body, (ld0, frontier0), max_rounds)
+    ld, _ = runner.run(cond, body, (ld0, frontier0))
     return ld
 
 
@@ -262,8 +287,10 @@ def fastest(
     Per Wu et al. [25], fastest(v) = min over source departure times t_d of
     EA(window=[t_d, tb])[v] - t_d.  The candidate departures are the source's
     (<= n_departures) earliest out-edge start times inside the window, read
-    via the TGER per-vertex 3-sided range query; the EA ladder is vmapped
-    (and sharded over `model` in the distributed engine)."""
+    via the TGER per-vertex 3-sided range query.  The departure ladder
+    [(t_d, tb), ...] IS a window batch, so the whole ladder runs as ONE
+    batched EA sweep over a single union-window gather (the pre-runner
+    implementation vmapped D full single-window EAs — D gathers)."""
     plan = ensure_plan(plan)
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     lo, hi = vertex_range(g, jnp.asarray(source), ta, tb)
@@ -276,14 +303,11 @@ def fastest(
     rep = jnp.concatenate([jnp.array([False]), departs[1:] == departs[:-1]])
     valid &= ~rep
 
-    def one(t_d):
-        arr = earliest_arrival(
-            g, source, (t_d, tb), tger,
-            pred=pred, plan=plan, max_rounds=max_rounds,
-        )
-        return jnp.where(arr == INT_INF, INT_INF, arr - t_d)
-
-    durs = jax.vmap(one)(departs)  # [D, V]
+    windows = jnp.stack([departs, jnp.full_like(departs, tb)], axis=1)  # [D, 2]
+    arr = earliest_arrival_batched(
+        g, source, windows, tger, pred=pred, plan=plan, max_rounds=max_rounds,
+    )                                                                   # [D, V]
+    durs = jnp.where(arr == INT_INF, INT_INF, arr - departs[:, None])
     durs = jnp.where(valid[:, None], durs, INT_INF)
     out = jnp.min(durs, axis=0)
     return out.at[source].set(0)
@@ -317,19 +341,22 @@ def shortest_duration(
     n_buckets; otherwise sound (never reports an infeasible cost) with
     bucket-resolution completeness.  This replaces Wu et al.'s per-vertex
     ragged Pareto lists, which do not vectorize.
+
+    The bucket assignments (q, p_src) are loop-invariant like the window
+    mask, so they are computed once on the runner's hoisted view.
     """
-    plan = ensure_plan(plan)
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+    )
+    edges, base_valid = runner.edges, runner.valid
     V, P = g.n_vertices, n_buckets
     ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
     # bucket bounds: uniform grid over the window (inclusive of tb).
     bounds = ta + ((tb - ta).astype(jnp.float32) * (jnp.arange(P) + 1) / P).astype(jnp.int32)
-    max_rounds = max_rounds or V + 1
 
     dur0 = jnp.full((V, P), jnp.inf, jnp.float32).at[source, :].set(0.0)
     frontier0 = frontier_from_sources(V, source)
 
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    base_valid = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
     cost = (
         edges.weight if use_weights
         else (edges.t_end - edges.t_start).astype(jnp.float32)
@@ -350,11 +377,11 @@ def shortest_duration(
     # whose staircase is 0 everywhere, so clamp and keep them valid from source.
     p_src_c = jnp.maximum(p_src, 0)
 
-    def cond_state(state):
+    def cond(state):
         _, frontier = state
         return jnp.any(frontier)
 
-    def body(state):
+    def body(state, rnd):
         dur, frontier = state
         src_sl = dur[edges.src, p_src_c]                       # [E']
         from_source = edges.src == source
@@ -369,7 +396,7 @@ def shortest_duration(
         improved_v = jnp.any(new_dur < dur, axis=1)
         return new_dur, improved_v
 
-    dur, _ = _while_rounds(cond_state, body, (dur0, frontier0), max_rounds)
+    dur, _ = runner.run(cond, body, (dur0, frontier0))
     return dur[:, P - 1]
 
 
@@ -377,6 +404,7 @@ __all__ = [
     "earliest_arrival",
     "earliest_arrival_multi",
     "earliest_arrival_batched",
+    "earliest_arrival_over_view",
     "latest_departure",
     "fastest",
     "shortest_duration",

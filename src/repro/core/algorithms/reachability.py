@@ -12,6 +12,10 @@ is truly overlaps-reachable; the witness chain is materialized by the
 relaxation) and exact whenever minimizing end never sacrifices a needed
 start (e.g. co-ordered starts/ends — property-tested; the exhaustive
 Pareto oracle lives in core/reference.py).
+
+Execution rides the gather-once FixpointRunner (DESIGN.md §7): the edge
+view and per-window validity are hoisted; the batched sweep vmaps the
+per-window fixpoint over the precomputed [W, E'] validity matrix.
 """
 from __future__ import annotations
 
@@ -23,30 +27,38 @@ import jax.numpy as jnp
 
 from repro.core.edgemap import (
     INT_INF,
+    EdgeView,
     ensure_plan,
     frontier_from_sources,
     segment_combine,
     union_window,
     view_for_plan,
 )
+from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
-from repro.core.predicates import in_window
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
 
-def _solve_window(edges, window, source, n_vertices: int, max_rounds: int):
-    """The one overlaps fixpoint over a prebuilt edge view: shared by the
-    single-window run and (vmapped over windows) the batched sweep."""
+def _solve_window(edges, base_ok, window, source, n_vertices: int,
+                  max_rounds: int, init=None):
+    """The one overlaps fixpoint over a prebuilt edge view with a
+    PRECOMPUTED validity mask: shared by the single-window run and (vmapped
+    over the [W, E'] validity rows) the batched sweep.  ``init`` optionally
+    warm-starts (s_end, s_start) — sound when every finite init pair is the
+    last-edge interval of a real overlaps chain inside this window."""
     V = n_vertices
-    ta, tb = window[0], window[1]
-    base_ok = edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+    ta = window[0]
 
     # state: (last_end, last_start); source seeds with (ta, ta) — its first
     # edge only needs ts >= ta, te >= ta, which the window implies.
-    end0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
-    start0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
-    frontier0 = frontier_from_sources(V, source)
+    if init is None:
+        end0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
+        start0 = jnp.full(V, INT_INF, jnp.int32).at[source].set(ta)
+        frontier0 = frontier_from_sources(V, source)
+    else:
+        end0, start0 = init
+        frontier0 = end0 < INT_INF
 
     def cond(carry):
         rnd, _, _, frontier = carry
@@ -92,12 +104,44 @@ def overlaps_reachability(
     max_rounds: int = 0,
 ):
     """Returns (reachable[V] bool, last_start[V], last_end[V])."""
-    plan = ensure_plan(plan)
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    edges = view_for_plan(g, tger, (ta, tb), plan)
-    return _solve_window(
-        edges, (ta, tb), source, g.n_vertices, max_rounds or g.n_vertices + 1
+    runner = FixpointRunner.for_query(
+        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
     )
+    return _solve_window(
+        runner.edges, runner.valid, runner.window, source, g.n_vertices,
+        runner.max_rounds,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "max_rounds"))
+def overlaps_reachability_over_view(
+    edges: EdgeView,
+    source,
+    windows: jax.Array,             # i32[W, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    max_rounds: int = 0,
+    init=None,                      # optional ([W, V] end, [W, V] start)
+):
+    """Batched overlaps fixpoints over a PREBUILT (union-covering) view —
+    the piece the incremental sliding-window server calls on its advanced
+    view.  Per-window validity is precomputed once ([W, E']); the fixpoint
+    is vmapped over its rows."""
+    runner = FixpointRunner(
+        edges, windows=windows, plan=plan, n_vertices=n_vertices,
+        max_rounds=max_rounds,
+    )
+    if init is None:
+        return jax.vmap(
+            lambda w, ok: _solve_window(
+                edges, ok, (w[0], w[1]), source, n_vertices, runner.max_rounds)
+        )(runner.windows, runner.valid)
+    return jax.vmap(
+        lambda w, ok, e0, s0: _solve_window(
+            edges, ok, (w[0], w[1]), source, n_vertices, runner.max_rounds,
+            init=(e0, s0))
+    )(runner.windows, runner.valid, init[0], init[1])
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds",))
@@ -117,7 +161,7 @@ def overlaps_reachability_batched(
     plan = ensure_plan(plan)
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
     edges = view_for_plan(g, tger, union_window(windows), plan)
-    mr = max_rounds or g.n_vertices + 1
-    return jax.vmap(
-        lambda w: _solve_window(edges, (w[0], w[1]), source, g.n_vertices, mr)
-    )(windows)
+    return overlaps_reachability_over_view(
+        edges, source, windows, plan=plan, n_vertices=g.n_vertices,
+        max_rounds=max_rounds,
+    )

@@ -182,10 +182,14 @@ def edge_map_over_view(
     n_vertices: int,
     direction: str = "out",
     check_window: bool = True,
-) -> Tuple[jax.Array, jax.Array]:
+    compute_touched: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
     """One relaxation round over a PREBUILT edge view (the round core shared
     by the single-window and batched edgemaps; sweeps that hoist the view
-    out of their fixpoint loop call this directly)."""
+    out of their fixpoint loop call this directly).
+    ``compute_touched=False`` skips the extra per-round segment-sum when the
+    caller derives its frontier from the combined values (every fixpoint
+    loop does) and returns ``touched=None``."""
     from_v, to_v = _endpoints(edges, direction)
 
     valid = edges.mask & frontier[from_v]
@@ -202,6 +206,8 @@ def edge_map_over_view(
         plan, cand, to_v, n_vertices, combine, mask=valid,
         use_layout=use_layout,
     )
+    if not compute_touched:
+        return out, None
     touched = segment_combine(
         valid.astype(jnp.int32), to_v, n_vertices, "sum", mask=None
     ) > 0
@@ -221,14 +227,16 @@ def temporal_edge_map(
     tger: Optional[TGERIndex] = None,
     plan: Optional[AccessPlan] = None,
     check_window: bool = True,
-) -> Tuple[jax.Array, jax.Array]:
+    compute_touched: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Apply one round of temporal edge relaxation under an AccessPlan.
 
     Returns (combined[V, ...], touched[V]) where ``touched`` marks segments
-    that received at least one valid contribution.  The ordering predicate
-    is evaluated inside ``relax`` (it needs algorithm state); ``pred`` is
-    accepted for symmetry with Table 2 and handed to relax via closure by
-    the algorithm implementations.
+    that received at least one valid contribution; ``compute_touched=False``
+    skips that extra segment-sum and returns ``touched=None``.  The ordering
+    predicate is evaluated inside ``relax`` (it needs algorithm state);
+    ``pred`` is accepted for symmetry with Table 2 and handed to relax via
+    closure by the algorithm implementations.
 
     The plan's backend executes the main combine; the tiled Pallas path is
     eligible when reducing into destinations over the graph's native edge
@@ -241,6 +249,7 @@ def temporal_edge_map(
         edges, window, frontier, src_state, relax, combine,
         plan=plan, n_vertices=g.n_vertices,
         direction=direction, check_window=check_window,
+        compute_touched=compute_touched,
     )
 
 
@@ -304,12 +313,14 @@ def temporal_edge_map_batched(
     tger: Optional[TGERIndex] = None,
     plan: Optional[AccessPlan] = None,
     check_window: bool = True,
-) -> Tuple[jax.Array, jax.Array]:
+    compute_touched: bool = True,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Batched multi-window TemporalEdgeMap: ONE edge view built over the
     union window serves all W windows; returns (combined[W, V, ...],
-    touched[W, V]).  Plans produced by ``plan_query(..., windows=[...])``
-    budget for the union, so each window's valid edges are a masked subset
-    of the one gathered candidate set."""
+    touched[W, V] — or ``None`` under ``compute_touched=False``).  Plans
+    produced by ``plan_query(..., windows=[...])`` budget for the union, so
+    each window's valid edges are a masked subset of the one gathered
+    candidate set."""
     plan = ensure_plan(plan)
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
     edges = view_for_plan(g, tger, union_window(windows), plan)
@@ -317,6 +328,7 @@ def temporal_edge_map_batched(
         edges, windows, frontiers, src_state, relax, combine,
         plan=plan, n_vertices=g.n_vertices,
         direction=direction, check_window=check_window,
+        compute_touched=compute_touched,
     )
 
 

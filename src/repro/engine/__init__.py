@@ -23,8 +23,10 @@ from repro.engine.backends import (  # noqa: F401
     get_backend,
     segment_combine,
 )
+from repro.engine.fixpoint import FixpointRunner  # noqa: F401
 
 __all__ = [
+    "FixpointRunner",
     "AccessPlan",
     "plan_query",
     "make_plan",

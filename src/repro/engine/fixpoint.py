@@ -1,0 +1,224 @@
+"""FixpointRunner — gather-once fixpoint execution (DESIGN.md §7).
+
+Every fixpoint algorithm in this repo is "relax over the window-valid edge
+set until the frontier empties".  The edge view, the per-edge window
+validity, the endpoint selection and the layout eligibility are all
+loop-INVARIANT (the query window is fixed for the whole run), yet the
+pre-runner algorithms rebuilt the view inside the ``lax.while_loop`` body —
+on index/hybrid plans that re-issues the binary search + budgeted gather
+EVERY relaxation round, O(rounds × budget) access work instead of the
+O(budget) the plan promised.  The runner hoists all of it:
+
+  * the edge view is built exactly ONCE per query (``for_query`` /
+    ``for_windows``), before the loop — the only gather in the program;
+  * ``valid`` is the precomputed structural ∧ window validity mask —
+    ``bool[E']`` for a single window, ``bool[W, E']`` for a batched sweep
+    (the matrix ``edge_map_over_view_batched``'s ``per_window`` closure
+    used to recompute every round);
+  * endpoints (``from_v``/``to_v``) and the static layout-eligibility bit
+    are resolved at construction;
+  * ``run`` drives the ``lax.while_loop`` with the uniform
+    rounds-capped / condition-holds loop shape, and ``step`` executes one
+    relaxation round over the hoisted view with ``touched`` computed only
+    on request (it costs an extra segment-sum most algorithms discard).
+
+The runner works identically for single-window ([V] state) and batched
+([W, V] state) execution — the batched path is how ``*_batched`` variants
+and the incremental sliding-window server share one union-window view.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.backends import (
+    combine_for_plan,
+    combine_windows_for_plan,
+    segment_combine,
+)
+from repro.engine.plan import AccessPlan
+
+
+class FixpointRunner:
+    """Owns one query's hoisted edge view and every loop-invariant quantity.
+
+    Construct via :meth:`for_query` (single window) or :meth:`for_windows`
+    (batched multi-window sweep), or directly from a prebuilt view (the
+    incremental server advances a view across sweeps and re-wraps it).
+    Constructed inside a jitted function, everything here is traced exactly
+    once, OUTSIDE the while-loop body.
+    """
+
+    def __init__(
+        self,
+        edges,                          # EdgeView (prebuilt)
+        window=None,                    # (ta, tb) — single-window mode
+        *,
+        windows=None,                   # i32[W, 2] — batched mode
+        plan: AccessPlan,
+        n_vertices: int,
+        direction: str = "out",
+        check_window: bool = True,
+        max_rounds: int = 0,
+    ):
+        from repro.core.edgemap import _endpoints
+        from repro.core.predicates import in_window
+
+        if (window is None) == (windows is None):
+            raise ValueError("pass exactly one of window= or windows=")
+        self.edges = edges
+        self.plan = plan
+        self.n_vertices = int(n_vertices)
+        self.direction = direction
+        self.batched = windows is not None
+        self.max_rounds = int(max_rounds) or self.n_vertices + 1
+        self.from_v, self.to_v = _endpoints(edges, direction)
+        # static: tiled kernels need the graph's native dst order
+        self.use_layout = plan.method == "scan" and direction == "out"
+
+        if self.batched:
+            self.windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+            self.window = None
+            if check_window:
+                self.valid = jax.vmap(
+                    lambda w: edges.mask
+                    & in_window(edges.t_start, edges.t_end, w[0], w[1])
+                )(self.windows)                                  # [W, E']
+            else:
+                self.valid = jnp.broadcast_to(
+                    edges.mask, (self.windows.shape[0],) + edges.mask.shape
+                )
+        else:
+            ta = jnp.asarray(window[0], jnp.int32)
+            tb = jnp.asarray(window[1], jnp.int32)
+            self.window = (ta, tb)
+            self.windows = None
+            self.valid = (
+                edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
+                if check_window else edges.mask
+            )                                                    # [E']
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def for_query(
+        cls,
+        g,
+        tger,
+        window,
+        *,
+        plan: Optional[AccessPlan] = None,
+        direction: str = "out",
+        check_window: bool = True,
+        max_rounds: int = 0,
+    ) -> "FixpointRunner":
+        """Single-window runner: ONE plan-directed view build per query."""
+        from repro.core.edgemap import ensure_plan, view_for_plan
+
+        plan = ensure_plan(plan)
+        edges = view_for_plan(g, tger, window, plan)
+        return cls(
+            edges, window, plan=plan, n_vertices=g.n_vertices,
+            direction=direction, check_window=check_window,
+            max_rounds=max_rounds,
+        )
+
+    @classmethod
+    def for_windows(
+        cls,
+        g,
+        tger,
+        windows,
+        *,
+        plan: Optional[AccessPlan] = None,
+        direction: str = "out",
+        check_window: bool = True,
+        max_rounds: int = 0,
+    ) -> "FixpointRunner":
+        """Batched runner: ONE union-window view serves all W windows."""
+        from repro.core.edgemap import ensure_plan, union_window, view_for_plan
+
+        plan = ensure_plan(plan)
+        windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+        edges = view_for_plan(g, tger, union_window(windows), plan)
+        return cls(
+            edges, windows=windows, plan=plan, n_vertices=g.n_vertices,
+            direction=direction, check_window=check_window,
+            max_rounds=max_rounds,
+        )
+
+    # -- one relaxation round over the hoisted view ------------------------
+
+    def step(
+        self,
+        frontier: jax.Array,            # bool[V] | bool[W, V]
+        src_state,                      # pytree of [V, ...] | [W, V, ...]
+        relax: Callable,
+        combine: str,
+        *,
+        compute_touched: bool = False,
+    ) -> Tuple[Any, Optional[jax.Array]]:
+        """One relaxation round.  All loop-invariant masking is precomputed;
+        the round pays only the frontier gather, the relax, and the combine.
+        ``touched`` (segments that received a valid contribution) costs an
+        extra segment-sum and is skipped unless requested — the fixpoint
+        loops derive their frontiers from the combined values instead."""
+        if self.batched:
+            def per_window(wvalid, f, state):
+                valid = wvalid & f[self.from_v]
+                gathered = jax.tree_util.tree_map(
+                    lambda a: a[self.from_v], state)
+                cand, extra = relax(self.edges, gathered)
+                return cand, valid & extra
+
+            cand, valid = jax.vmap(per_window)(self.valid, frontier, src_state)
+            out = combine_windows_for_plan(
+                self.plan, cand, self.to_v, self.n_vertices, combine,
+                masks=valid, use_layout=self.use_layout,
+            )
+            if not compute_touched:
+                return out, None
+            touched = jax.vmap(
+                lambda v: segment_combine(
+                    v.astype(jnp.int32), self.to_v, self.n_vertices, "sum")
+            )(valid) > 0
+            return out, touched
+
+        valid = self.valid & frontier[self.from_v]
+        gathered = jax.tree_util.tree_map(lambda a: a[self.from_v], src_state)
+        cand, extra = relax(self.edges, gathered)
+        valid &= extra
+        out = combine_for_plan(
+            self.plan, cand, self.to_v, self.n_vertices, combine,
+            mask=valid, use_layout=self.use_layout,
+        )
+        if not compute_touched:
+            return out, None
+        touched = segment_combine(
+            valid.astype(jnp.int32), self.to_v, self.n_vertices, "sum"
+        ) > 0
+        return out, touched
+
+    # -- the loop driver ---------------------------------------------------
+
+    def run(self, cond: Callable, body: Callable, init):
+        """``while (round < max_rounds) and cond(state): state = body(state,
+        round)``.  ``cond`` is typically frontier emptiness (``jnp.any`` of
+        the state's frontier leaf) or a changed flag; the round counter is
+        handed to ``body`` for hop-counting algorithms."""
+
+        def loop_cond(carry):
+            rnd, state = carry
+            return (rnd < self.max_rounds) & cond(state)
+
+        def loop_body(carry):
+            rnd, state = carry
+            return rnd + 1, body(state, rnd)
+
+        _, final = jax.lax.while_loop(loop_cond, loop_body, (jnp.int32(0), init))
+        return final
+
+
+__all__ = ["FixpointRunner"]

@@ -1,6 +1,8 @@
 from repro.serve.window_sweep import (  # noqa: F401
     ALGORITHMS,
+    SweepState,
     sliding_windows,
     sweep,
+    sweep_incremental,
     sweep_looped,
 )
