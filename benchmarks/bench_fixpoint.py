@@ -18,8 +18,13 @@ Two measurements, both asserted result-identical before timing:
 
 2. **cold sweep vs sweep_incremental** — stride-advanced sliding windows:
    the cold path re-plans, re-gathers and re-solves all W windows per
-   advance; the incremental path delta-gathers the entering time range and
-   solves only the one new window.
+   advance; the incremental path is ONE fused jitted dispatch (ring-view
+   delta scatter + solve of only the entering window + row assembly, with
+   donated buffers — DESIGN.md §7.3).  The sweep includes a TINY-budget
+   regime (width_frac 0.001) where the pre-fusion incremental path lost to
+   the cold sweep on per-advance dispatch overhead — the crossover the
+   fusion exists to close; ``dispatches_per_advance`` is recorded from the
+   server's dispatch-site log and asserted == 1.
 
 Besides the usual CSV rows, writes machine-readable ``BENCH_fixpoint.json``
 at the repo root (the start of the perf trajectory; CI runs this at smoke
@@ -43,6 +48,7 @@ from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph
 from repro.engine import plan_query
 from repro.serve import sliding_windows, sweep, sweep_incremental
+from repro.serve import window_sweep as _ws
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -139,8 +145,12 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
                 "speedup": t_re / max(t_once, 1e-12), "note": note,
             })
 
-    # ---- 2: cold sweep vs incremental advance ------------------------------
-    for frac in width_fracs:
+    # ---- 2: cold sweep vs FUSED incremental advance ------------------------
+    # width_fracs plus the tiny-budget regime where the pre-fusion
+    # incremental path paid 3-4 dispatches + host bookkeeping per advance
+    # and lost to the cold sweep's single cached jit call — the crossover
+    # the fused one-dispatch step closes (DESIGN.md §7.3).
+    for frac in (width_fracs[0] / 5,) + tuple(width_fracs):
         width = max(int(span * frac), 1)
         stride = max(width // 4, 1)
         base = t_max - advances * stride
@@ -150,9 +160,18 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         # view reuse and the comparison measures only row reuse)
         plan = plan_query(g, idx, windows=wins0, access="index")
 
-        # warm both jit caches on the advance shapes before timing
+        # warm the Wn=1 fused advance program on a THROWAWAY chain: the
+        # fused step donates the carried ring/result buffers, so a state is
+        # single-use (DESIGN.md §7.3 move semantics) — the timed chain is
+        # rebuilt cold afterwards.
+        _, s_warm = sweep_incremental(g, src, wins0, idx, plan=plan)
+        _, _ = sweep_incremental(
+            g, src,
+            sliding_windows(base + stride, width=width, stride=stride,
+                            count=W),
+            idx, plan=plan, state=s_warm)
         _, state = sweep_incremental(g, src, wins0, idx, plan=plan)
-        cold_times, inc_times, solved = [], [], []
+        cold_times, inc_times, solved, dispatches = [], [], [], []
         for k in range(1, advances + 1):
             wins = sliding_windows(base + k * stride, width=width,
                                    stride=stride, count=W)
@@ -165,13 +184,16 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
                 jax.block_until_ready(res)
                 return res, s2
 
-            if k == 1:  # warm the Wn=1 advance programs once
-                _, _ = one_advance()
+            _ws._DISPATCH_LOG = log = []
             tic = time.perf_counter()
             res, state = one_advance()
             inc_times.append(time.perf_counter() - tic)
+            _ws._DISPATCH_LOG = None
+            dispatches.append(len(log))
             solved.append(state.n_solved)
             assert state.last_advance in ("delta", "reuse"), state.last_advance
+            assert log == [f"fused:{plan.method}"], (
+                f"steady-state advance must be ONE fused dispatch, got {log}")
             if k == advances:  # row-identity vs the cold path, once
                 cold_res = sweep(g, src, wins, idx, plan=plan)
                 assert (np.asarray(res) == np.asarray(cold_res)).all(), (
@@ -184,12 +206,15 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
             f"plan={plan.cache_key};cold_us={t_cold*1e6:.0f};"
             f"incremental_us={t_inc*1e6:.0f};"
             f"solved_per_advance={int(np.median(solved))};"
+            f"dispatches_per_advance={int(np.median(dispatches))};"
             f"speedup={t_cold/max(t_inc,1e-12):.2f}x",
         )
         report["incremental"].append({
             "width_frac": frac, "W": W, "plan": plan.cache_key,
             "cold_us": t_cold * 1e6, "incremental_us": t_inc * 1e6,
             "solved_per_advance": int(np.median(solved)),
+            "dispatches_per_advance": int(np.median(dispatches)),
+            "fused": True,
             "speedup": t_cold / max(t_inc, 1e-12),
         })
 

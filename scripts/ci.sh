@@ -4,8 +4,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# CI marker: the long-horizon serving soak (tests/test_serving_soak.py)
+# drops from 220 to 60 advances under CI to bound wall clock.  GitHub
+# Actions sets CI=true already; export it here so local ci.sh runs match.
+export CI="${CI:-1}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
-# smoke the perf trajectory: gather-once vs re-gather + incremental sweeps
-# (asserts result-identity internally; emits BENCH_fixpoint.json at the root)
+# smoke the perf trajectory: gather-once vs re-gather + FUSED incremental
+# sweeps (one-dispatch advances asserted against the dispatch-site log,
+# result-identity asserted before timing; emits BENCH_fixpoint.json at the
+# repo root, including the tiny-budget crossover regime)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint

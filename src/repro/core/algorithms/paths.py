@@ -48,7 +48,7 @@ def _ea_relax(pred: OrderingPredicateType):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "max_rounds", "visit_once"),
+    static_argnames=("pred", "max_rounds", "visit_once", "with_metrics"),
 )
 def earliest_arrival(
     g: TemporalGraph,
@@ -60,7 +60,8 @@ def earliest_arrival(
     plan: Optional[AccessPlan] = None,
     max_rounds: int = 0,
     visit_once: bool = False,
-) -> jax.Array:
+    with_metrics: bool = False,
+):
     """t[v] = earliest arrival time from ``source`` to v within [ta, tb].
 
     ``visit_once=True`` reproduces Alg. 2's CAS(Visited) literally (each
@@ -70,6 +71,10 @@ def earliest_arrival(
 
     Access method + backend come from ``plan`` (repro.engine.plan_query);
     the view is gathered once, before the fixpoint loop.
+
+    ``with_metrics=True`` returns ``(arrival, FixpointMetrics)`` — the
+    runner's ``touched``-driven convergence record (round count + total
+    touched vertices), at the cost of one extra segment-sum per round.
     """
     runner = FixpointRunner.for_query(
         g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
@@ -84,9 +89,10 @@ def earliest_arrival(
         _, frontier, _ = state
         return jnp.any(frontier)
 
-    def body(state, rnd):
+    def step_state(state, touched=False):
         arrival, frontier, visited = state
-        cand, _ = runner.step(frontier, arrival, relax, "min")
+        cand, touched_v = runner.step(
+            frontier, arrival, relax, "min", compute_touched=touched)
         new_arrival = jnp.minimum(arrival, cand)
         improved = new_arrival < arrival
         if visit_once:
@@ -94,9 +100,15 @@ def earliest_arrival(
             visited = visited | improved
         else:
             new_frontier = improved
-        return new_arrival, new_frontier, visited
+        return (new_arrival, new_frontier, visited), touched_v
 
-    arrival, _, _ = runner.run(cond, body, (arrival0, frontier0, frontier0))
+    init = (arrival0, frontier0, frontier0)
+    if with_metrics:
+        (arrival, _, _), metrics = runner.run_with_metrics(
+            cond, lambda state, rnd: step_state(state, touched=True), init)
+        return arrival, metrics
+    arrival, _, _ = runner.run(
+        cond, lambda state, rnd: step_state(state)[0], init)
     return arrival
 
 
@@ -110,7 +122,8 @@ def earliest_arrival_multi(g, sources, window, tger=None, **kw):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_vertices", "pred", "max_rounds", "visit_once"),
+    static_argnames=("n_vertices", "pred", "max_rounds", "visit_once",
+                     "with_rounds"),
 )
 def earliest_arrival_over_view(
     edges: EdgeView,
@@ -124,18 +137,21 @@ def earliest_arrival_over_view(
     visit_once: bool = False,
     init_arrival: Optional[jax.Array] = None,   # [W, V] warm start
     init_frontier: Optional[jax.Array] = None,  # bool[W, V]
-) -> jax.Array:
+    with_rounds: bool = False,
+):
     """The batched EA fixpoint over a PREBUILT (union-covering) edge view.
 
     This is the piece the incremental sliding-window server reuses: it
-    advances one view across sweeps and runs only the windows that need
-    solving.  ``init_arrival``/``init_frontier`` warm-start the fixpoint —
-    sound whenever every finite init label witnesses a real temporal path
-    inside its row's window (EA is a monotone min fixpoint: relaxation from
-    any sound over-approximation converges to the same fixpoint, provided
-    the frontier seeds every finite-label vertex).
+    advances one ring view across sweeps and runs only the windows that
+    need solving.  ``init_arrival``/``init_frontier`` warm-start the
+    fixpoint — sound whenever every finite init label witnesses a real
+    temporal path inside its row's window (EA is a monotone min fixpoint:
+    relaxation from any sound over-approximation converges to the same
+    fixpoint, provided the frontier seeds every finite-label vertex).
+    ``with_rounds=True`` returns ``(arrival, rounds)`` for serving
+    observability.
     """
-    runner = FixpointRunner(
+    runner = FixpointRunner.for_view(
         edges, windows=windows, plan=plan, n_vertices=n_vertices,
         max_rounds=max_rounds,
     )
@@ -171,7 +187,12 @@ def earliest_arrival_over_view(
             new_frontier = improved
         return new_arrival, new_frontier, visited
 
-    arrival, _, _ = runner.run(cond, body, (arrival0, frontier0, frontier0))
+    init = (arrival0, frontier0, frontier0)
+    if with_rounds:
+        (arrival, _, _), rounds = runner.run(cond, body, init,
+                                             with_rounds=True)
+        return arrival, rounds
+    arrival, _, _ = runner.run(cond, body, init)
     return arrival
 
 

@@ -20,6 +20,7 @@ the combine emits [W, V] in one plan-directed batched reduction.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -149,6 +150,166 @@ def view_for_plan(
             raise ValueError("hybrid access requires a TGER and a per-vertex budget")
         return hybrid_view(g, tger, window, plan.per_vertex_budget)
     return scan_view(g)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer views (DESIGN.md §7.3)
+#
+# The incremental sliding-window server needs the view to be POSITIONALLY
+# STABLE across advances: the slot an edge occupies must not depend on the
+# current window, so a forward slide touches only the entering positions.
+# The identity is ``slot(p) = p mod C`` over the relevant time-first
+# permutation (global for index plans, heavy-only for hybrid plans, with the
+# light partition a window-independent static prefix).  An advance from
+# ``lo`` to ``lo'`` then re-gathers exactly the entering positions
+# [lo + C, lo' + C) — a fixed-shape scatter of a delta-budget rung — and
+# recomputes the O(C) validity mask from the new [lo, hi); every surviving
+# slot's payload is untouched, so the advanced buffer is bit-identical to a
+# cold ring build at the new window (property-tested, wrap-around included).
+# ---------------------------------------------------------------------------
+
+def ring_positions(lo, capacity: int) -> jax.Array:
+    """Time-first position resident in each ring slot: the unique
+    p in [lo, lo+capacity) with p ≡ slot (mod capacity)."""
+    s = jnp.arange(capacity, dtype=jnp.int32)
+    lo = jnp.asarray(lo, jnp.int32)
+    return lo + jnp.mod(s - lo, capacity)
+
+
+def _gather_fields(g: TemporalGraph, eids):
+    return (g.src[eids], g.dst[eids], g.t_start[eids], g.t_end[eids],
+            g.weight[eids])
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def index_ring_view(g: TemporalGraph, idx: TGERIndex, lo, hi, *,
+                    capacity: int) -> EdgeView:
+    """Cold build of the index-plan ring view: slot p%C holds time-first
+    position p for p in [lo, lo+C), masked to the valid [lo, hi).  Holds
+    the same edge SET as ``index_view(g, idx, window, budget=C)`` — only
+    slot order differs, which no masked segment combine can observe."""
+    pos = ring_positions(lo, capacity)
+    eids = idx.perm_by_start[jnp.minimum(pos, g.n_edges - 1)]
+    return EdgeView(*_gather_fields(g, eids), pos < hi)
+
+
+def advance_index_ring_fields(fields, perm, prev: EdgeView, lo_prev, lo_new,
+                              hi_new, *, capacity: int,
+                              delta_budget: int) -> EdgeView:
+    """Raw-array form of :func:`advance_index_ring` — ``fields`` is the
+    (src, dst, t_start, t_end, weight) tuple and ``perm`` the time-first
+    permutation.  The serving hot loop passes exactly these arrays instead
+    of the full graph/TGER pytrees: per-call pytree flattening is real
+    dispatch latency at serving budgets."""
+    enter = jnp.asarray(lo_prev, jnp.int32) + capacity + jnp.arange(
+        delta_budget, dtype=jnp.int32)
+    ok = enter < jnp.asarray(lo_new, jnp.int32) + capacity
+    eids = perm[jnp.minimum(enter, perm.shape[0] - 1)]
+    slots = jnp.where(ok, jnp.mod(enter, capacity), capacity)  # OOB -> dropped
+    new = [
+        p.at[slots].set(f[eids], mode="drop")
+        for p, f in zip(prev[:5], fields)
+    ]
+    return EdgeView(*new, ring_positions(lo_new, capacity) < hi_new)
+
+
+def advance_index_ring(g: TemporalGraph, idx: TGERIndex, prev: EdgeView,
+                       lo_prev, lo_new, hi_new, *, capacity: int,
+                       delta_budget: int) -> EdgeView:
+    """Slide the index ring forward: scatter only the ENTERING positions
+    [lo_prev+C, lo_new+C) into the slots they own (the ones being vacated),
+    then recompute the mask.  Requires 0 <= lo_new - lo_prev <= delta_budget
+    <= C (host-checked by the server; it falls cold otherwise)."""
+    return advance_index_ring_fields(
+        (g.src, g.dst, g.t_start, g.t_end, g.weight), idx.perm_by_start,
+        prev, lo_prev, lo_new, hi_new,
+        capacity=capacity, delta_budget=delta_budget)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def hybrid_ring_view(g: TemporalGraph, idx: TGERIndex, lo, hi, *,
+                     capacity: int) -> EdgeView:
+    """Cold build of the hybrid ring view: the light partition is a static
+    (window-independent) prefix, the heavy partition a ring over the HEAVY
+    time-first permutation — [lo, hi) are positions in that order.  Holds
+    the same edge SET as a completeness-budgeted ``hybrid_view`` (light
+    edges + heavy in-window-start edges); the per-vertex gather becomes one
+    contiguous positional range, which is what makes the advance a delta."""
+    le = idx.light_eids
+    l_mask = jnp.arange(le.shape[0]) < idx.n_light_edges
+    pos = ring_positions(lo, capacity)
+    eids = idx.heavy_perm_by_start[
+        jnp.minimum(pos, idx.heavy_perm_by_start.shape[0] - 1)]
+    fields = [
+        jnp.concatenate([l, h])
+        for l, h in zip(_gather_fields(g, le), _gather_fields(g, eids))
+    ]
+    return EdgeView(*fields, jnp.concatenate([l_mask, pos < hi]))
+
+
+def advance_hybrid_ring_fields(fields, heavy_perm, prev: EdgeView, lo_prev,
+                               lo_new, hi_new, *, capacity: int,
+                               delta_budget: int) -> EdgeView:
+    """Raw-array form of :func:`advance_hybrid_ring`.  The light-prefix
+    length is recovered from the resident buffer (``len - capacity``), so
+    only the five edge arrays and the heavy permutation travel."""
+    L = prev.src.shape[0] - capacity
+    enter = jnp.asarray(lo_prev, jnp.int32) + capacity + jnp.arange(
+        delta_budget, dtype=jnp.int32)
+    ok = enter < jnp.asarray(lo_new, jnp.int32) + capacity
+    eids = heavy_perm[jnp.minimum(enter, heavy_perm.shape[0] - 1)]
+    slots = jnp.where(ok, L + jnp.mod(enter, capacity), prev.src.shape[0])
+    new = [
+        p.at[slots].set(f[eids], mode="drop")
+        for p, f in zip(prev[:5], fields)
+    ]
+    h_mask = ring_positions(lo_new, capacity) < hi_new
+    mask = jax.lax.dynamic_update_slice_in_dim(prev.mask, h_mask, L, 0)
+    return EdgeView(*new, mask)
+
+
+def advance_hybrid_ring(g: TemporalGraph, idx: TGERIndex, prev: EdgeView,
+                        lo_prev, lo_new, hi_new, *, capacity: int,
+                        delta_budget: int) -> EdgeView:
+    """Slide the hybrid ring's heavy partition forward (positions over the
+    heavy time-first permutation); the light prefix is untouched."""
+    return advance_hybrid_ring_fields(
+        (g.src, g.dst, g.t_start, g.t_end, g.weight), idx.heavy_perm_by_start,
+        prev, lo_prev, lo_new, hi_new,
+        capacity=capacity, delta_budget=delta_budget)
+
+
+def ring_view_for_plan(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    window,
+    plan: AccessPlan,
+) -> Tuple[EdgeView, int, int, int]:
+    """Host-level cold ring build for the plan's method: returns
+    ``(edges, lo, hi, capacity)`` with (lo, hi) the host-side position range
+    the server's advance bookkeeping slides (-1/-1/0 for scan, whose 'ring'
+    is the untouched full view)."""
+    from repro.core.tger import (
+        heavy_window_positions_host,
+        window_positions_host,
+    )
+    from repro.engine.plan import rung
+
+    if plan.method == "index":
+        if tger is None or plan.budget <= 0:
+            raise ValueError("index access requires a TGER and a positive budget")
+        lo, hi = window_positions_host(tger, window)
+        capacity = plan.ring_capacity or plan.budget
+        return index_ring_view(g, tger, lo, hi, capacity=capacity), lo, hi, capacity
+    if plan.method == "hybrid":
+        if tger is None:
+            raise ValueError("hybrid access requires a TGER")
+        lo, hi = heavy_window_positions_host(tger, window)
+        capacity = plan.ring_capacity or rung(max(hi - lo, 16))
+        if hi - lo > capacity:  # plan's rung predates this window: re-rung
+            capacity = rung(hi - lo)
+        return hybrid_ring_view(g, tger, lo, hi, capacity=capacity), lo, hi, capacity
+    return scan_view(g), -1, -1, 0
 
 
 RelaxFn = Callable[[EdgeView, jax.Array], Tuple[jax.Array, jax.Array]]
@@ -354,6 +515,14 @@ __all__ = [
     "hybrid_view",
     "hybrid_budget",
     "view_for_plan",
+    "ring_positions",
+    "index_ring_view",
+    "advance_index_ring",
+    "advance_index_ring_fields",
+    "hybrid_ring_view",
+    "advance_hybrid_ring",
+    "advance_hybrid_ring_fields",
+    "ring_view_for_plan",
     "ensure_plan",
     "union_window",
     "segment_combine",

@@ -1,0 +1,62 @@
+"""Identity-keyed host-side caches for device-array-derived artifacts.
+
+Several host paths derive expensive artifacts from device arrays that are
+immutable for the life of a graph/index — the host copy of the time-first
+order (serving advance bookkeeping), the per-vertex budget key array, the
+Pallas tile layout.  They all want the same cache discipline:
+
+  * key on ``id()`` of the source array(s) — content hashing would cost
+    more than the artifact;
+  * pin a strong reference to each keyed array and re-check with ``is``
+    on every hit, so a recycled ``id()`` after garbage collection can
+    never alias a stale entry;
+  * bounded FIFO eviction (these are per-graph artifacts; a handful of
+    live graphs is the realistic working set).
+
+``identity_cache`` packages that discipline once.  Non-array arguments
+participate in the key by VALUE (e.g. tile shapes), arrays by identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+
+def _is_array(a) -> bool:
+    return isinstance(a, np.ndarray) or hasattr(a, "__array__") and hasattr(
+        a, "dtype")
+
+
+def identity_cache(max_entries: int = 16) -> Callable:
+    """Decorator: memoize ``fn(*args)`` keyed by the identity of its array
+    arguments (value for non-arrays), strong-ref-pinned, FIFO-bounded."""
+
+    def deco(fn):
+        cache: dict = {}
+
+        @functools.wraps(fn)
+        def wrapped(*args):
+            key = tuple(
+                id(a) if _is_array(a) else a for a in args
+            )
+            hit = cache.get(key)
+            if hit is not None and all(
+                (p is a) for p, a in zip(hit[0], args) if p is not None
+            ):
+                return hit[1]
+            value = fn(*args)
+            if len(cache) >= max_entries:
+                cache.pop(next(iter(cache)))
+            pins = tuple(a if _is_array(a) else None for a in args)
+            cache[key] = (pins, value)
+            return value
+
+        wrapped.cache = cache  # introspection for tests
+        return wrapped
+
+    return deco
+
+
+__all__ = ["identity_cache"]

@@ -22,10 +22,18 @@ TPU/XLA; the *time-first* insight does.  Our registry is:
 
   4. per-indexed-vertex SAT histograms (selective indexing: only vertices
      with deg >= cutoff are indexed — paper's build-time threshold, 2k
-     edges by default).
+     edges by default);
+
+  5. a HEAVY time-first permutation (edges whose source is indexed, sorted
+     by t_start) — the positional identity the hybrid ring-buffer view
+     slides over (DESIGN.md §7.3): the hybrid view's heavy partition over a
+     window [ta, tb] is the contiguous range [lo, hi) of this permutation,
+     so a sliding-window advance is a delta gather of only the entering
+     positions, exactly like the index path over the global permutation.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Optional
 
@@ -39,6 +47,7 @@ from repro.core.histogram import (
     build_histogram,
     stack_histograms,
 )
+from repro.core.hostcache import identity_cache
 from repro.core.temporal_graph import TemporalGraph
 
 DEFAULT_DEGREE_CUTOFF = 2048  # paper §5: "currently set to 2k edges"
@@ -59,11 +68,15 @@ class TGERIndex:
     vertex_to_slot: jax.Array   # i32[V]; -1 when vertex not indexed
     # -- heavy/light edge partition (hybrid edgemap) --------------------------
     light_eids: jax.Array       # i32[E_light] edges whose src is NOT indexed
+    # -- heavy time-first layout (hybrid ring identity, DESIGN.md §7.3) -------
+    heavy_perm_by_start: jax.Array  # i32[max(E_heavy, 1)] heavy edge ids by t_start
+    heavy_start_sorted: jax.Array   # i32[max(E_heavy, 1)] their t_start, ascending
     # -- static ---------------------------------------------------------------
     degree_cutoff: int = dataclasses.field(metadata=dict(static=True))
     n_indexed: int = dataclasses.field(metadata=dict(static=True))
     n_buckets_time: int = dataclasses.field(metadata=dict(static=True))
     n_light_edges: int = dataclasses.field(metadata=dict(static=True))
+    n_heavy_edges: int = dataclasses.field(metadata=dict(static=True))
 
 
 def build_tger(
@@ -129,6 +142,15 @@ def build_tger(
     else:
         n_light = int(light_eids.size)
 
+    # heavy time-first permutation: the hybrid ring slides over this order
+    heavy_eids = np.nonzero(is_heavy_src)[0].astype(np.int32)
+    n_heavy = int(heavy_eids.size)
+    if n_heavy:
+        heavy_perm = heavy_eids[np.argsort(t_start[heavy_eids], kind="stable")]
+    else:
+        heavy_perm = np.zeros(1, np.int32)  # keep shapes non-empty
+    heavy_start_sorted = t_start[heavy_perm].astype(np.int32)
+
     return TGERIndex(
         perm_by_start=jnp.asarray(perm),
         start_sorted=jnp.asarray(start_sorted, jnp.int32),
@@ -138,10 +160,13 @@ def build_tger(
         vertex_hist=vertex_hist,
         vertex_to_slot=jnp.asarray(vertex_to_slot),
         light_eids=jnp.asarray(light_eids),
+        heavy_perm_by_start=jnp.asarray(heavy_perm),
+        heavy_start_sorted=jnp.asarray(heavy_start_sorted),
         degree_cutoff=int(degree_cutoff),
         n_indexed=int(len(indexed)),
         n_buckets_time=int(B),
         n_light_edges=n_light,
+        n_heavy_edges=n_heavy,
     )
 
 
@@ -202,6 +227,39 @@ def vertex_prefix(g: TemporalGraph, v, start_bound, strict: bool = False):
     return lo, pos
 
 
+# --------------------------------------------------------------------------
+# host-side window-position bookkeeping (incremental serving, DESIGN.md §7.3)
+#
+# The sliding-window server binary-searches the time-first orders EVERY
+# stride advance to compute the ring delta range; pay each device->host
+# transfer once per TGER, not once per advance.
+# --------------------------------------------------------------------------
+
+@identity_cache(16)
+def _host_sorted(arr: jax.Array) -> np.ndarray:
+    return np.asarray(arr)
+
+
+def window_positions_host(idx: TGERIndex, window) -> tuple:
+    """Host-side [lo, hi) of ``window`` in the GLOBAL time-first order (the
+    same searchsorted ``window_range`` runs on device).  Uses ``bisect``
+    rather than ``np.searchsorted`` — scalar queries sit on the serving
+    hot path, and numpy's per-call dispatch overhead dwarfs the O(log E)
+    probe cost there."""
+    ss = _host_sorted(idx.start_sorted)
+    return (bisect.bisect_left(ss, int(window[0])),
+            bisect.bisect_right(ss, int(window[1])))
+
+
+def heavy_window_positions_host(idx: TGERIndex, window) -> tuple:
+    """Host-side [lo, hi) of ``window`` in the HEAVY time-first order — the
+    hybrid ring's delta range."""
+    hs = _host_sorted(idx.heavy_start_sorted)
+    n = idx.n_heavy_edges
+    return (min(bisect.bisect_left(hs, int(window[0])), n),
+            min(bisect.bisect_right(hs, int(window[1])), n))
+
+
 def vertex_range(g: TemporalGraph, v, start_lo, start_hi):
     """Edge-id range of v's out-edges with t_start in [start_lo, start_hi].
     Vectorizes over ``v``/bounds."""
@@ -217,6 +275,8 @@ __all__ = [
     "build_tger",
     "window_range",
     "gather_window_edges",
+    "window_positions_host",
+    "heavy_window_positions_host",
     "vertex_prefix",
     "vertex_range",
     "DEFAULT_DEGREE_CUTOFF",

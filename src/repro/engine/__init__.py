@@ -11,9 +11,11 @@ from repro.engine.plan import (  # noqa: F401
     BACKENDS,
     METHODS,
     decision_for,
+    heavy_window_budget,
     make_plan,
     per_vertex_window_budget,
     plan_query,
+    rung,
 )
 from repro.engine.backends import (  # noqa: F401
     ExecutionBackend,
@@ -23,15 +25,18 @@ from repro.engine.backends import (  # noqa: F401
     get_backend,
     segment_combine,
 )
-from repro.engine.fixpoint import FixpointRunner  # noqa: F401
+from repro.engine.fixpoint import FixpointMetrics, FixpointRunner  # noqa: F401
 
 __all__ = [
     "FixpointRunner",
+    "FixpointMetrics",
     "AccessPlan",
     "plan_query",
     "make_plan",
     "decision_for",
     "per_vertex_window_budget",
+    "heavy_window_budget",
+    "rung",
     "METHODS",
     "BACKENDS",
     "ExecutionBackend",

@@ -25,10 +25,15 @@ O(budget) the plan promised.  The runner hoists all of it:
 The runner works identically for single-window ([V] state) and batched
 ([W, V] state) execution — the batched path is how ``*_batched`` variants
 and the incremental sliding-window server share one union-window view.
+``for_view`` wraps views the runner did not build — in particular the
+server's ring-buffer views, advanced in place across sweeps (DESIGN.md
+§7.3).  ``run(with_rounds=True)`` / ``run_with_metrics`` export the
+``touched``-driven convergence record (:class:`FixpointMetrics`) for
+serving observability.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +44,21 @@ from repro.engine.backends import (
     segment_combine,
 )
 from repro.engine.plan import AccessPlan
+
+
+class FixpointMetrics(NamedTuple):
+    """The ``touched``-driven convergence record of one fixpoint run
+    (observability for serving: how much work did this query actually do).
+
+    ``rounds`` counts loop-body executions — the final body execution is the
+    one that makes no further change and empties the frontier, matching the
+    round count of a host-side reference loop run to no-change.
+    ``touched_total`` sums, over all rounds, the vertices that received at
+    least one valid contribution (the runner's per-round ``touched`` mask).
+    """
+
+    rounds: jax.Array          # i32 scalar
+    touched_total: jax.Array   # i32 scalar
 
 
 class FixpointRunner:
@@ -201,13 +221,38 @@ class FixpointRunner:
         ) > 0
         return out, touched
 
+    @classmethod
+    def for_view(
+        cls,
+        edges,
+        window=None,
+        *,
+        windows=None,
+        plan: AccessPlan,
+        n_vertices: int,
+        direction: str = "out",
+        check_window: bool = True,
+        max_rounds: int = 0,
+    ) -> "FixpointRunner":
+        """Wrap an EXTERNALLY-built (or externally-ADVANCED) edge view — the
+        incremental server's ring views enter the runner here: the view's
+        slot order is irrelevant to the masked segment combines, so a
+        ring-advanced view runs identically to a cold gather."""
+        return cls(
+            edges, window, windows=windows, plan=plan, n_vertices=n_vertices,
+            direction=direction, check_window=check_window,
+            max_rounds=max_rounds,
+        )
+
     # -- the loop driver ---------------------------------------------------
 
-    def run(self, cond: Callable, body: Callable, init):
+    def run(self, cond: Callable, body: Callable, init, *,
+            with_rounds: bool = False):
         """``while (round < max_rounds) and cond(state): state = body(state,
         round)``.  ``cond`` is typically frontier emptiness (``jnp.any`` of
         the state's frontier leaf) or a changed flag; the round counter is
-        handed to ``body`` for hop-counting algorithms."""
+        handed to ``body`` for hop-counting algorithms.  ``with_rounds=True``
+        additionally returns the executed round count (i32 scalar)."""
 
         def loop_cond(carry):
             rnd, state = carry
@@ -217,8 +262,33 @@ class FixpointRunner:
             rnd, state = carry
             return rnd + 1, body(state, rnd)
 
-        _, final = jax.lax.while_loop(loop_cond, loop_body, (jnp.int32(0), init))
-        return final
+        rnd, final = jax.lax.while_loop(
+            loop_cond, loop_body, (jnp.int32(0), init))
+        return (final, rnd) if with_rounds else final
+
+    def run_with_metrics(
+        self, cond: Callable, body: Callable, init
+    ) -> Tuple[Any, FixpointMetrics]:
+        """Metered loop driver: ``body(state, rnd) -> (state, touched)``
+        (``touched`` from ``step(..., compute_touched=True)``); returns
+        ``(final_state, FixpointMetrics)``.  Costs one extra segment-sum per
+        round over the unmetered ``run`` — serving opts in per query."""
+
+        def loop_cond(carry):
+            rnd, state, _touched_total = carry
+            return (rnd < self.max_rounds) & cond(state)
+
+        def loop_body(carry):
+            rnd, state, touched_total = carry
+            state, touched = body(state, rnd)
+            return (
+                rnd + 1, state,
+                touched_total + jnp.sum(touched.astype(jnp.int32)),
+            )
+
+        rnd, final, touched_total = jax.lax.while_loop(
+            loop_cond, loop_body, (jnp.int32(0), init, jnp.int32(0)))
+        return final, FixpointMetrics(rounds=rnd, touched_total=touched_total)
 
 
-__all__ = ["FixpointRunner"]
+__all__ = ["FixpointRunner", "FixpointMetrics"]

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hostcache import identity_cache
 from repro.core.selective import AccessDecision, CostModel, decide_access
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -61,6 +62,7 @@ class AccessPlan:
     n_edges: int = dataclasses.field(metadata=dict(static=True))  # layout domain (0 = no layout)
     cache_key: str = dataclasses.field(metadata=dict(static=True))
     n_windows: int = dataclasses.field(default=0, metadata=dict(static=True))  # batched sweep width (0 = single window)
+    ring_capacity: int = dataclasses.field(default=0, metadata=dict(static=True))  # ring-view slot count (0 = derive)
 
     @property
     def view_budget(self) -> int:
@@ -70,9 +72,18 @@ class AccessPlan:
 
 def _cache_key(method: str, backend: str, budget: int, pvb: int,
                exchange: int, tile_v: int, block_e: int,
-               n_windows: int = 0) -> str:
+               n_windows: int = 0, ring_capacity: int = 0) -> str:
     key = f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
+    if ring_capacity:
+        key += f"/r{ring_capacity}"
     return f"{key}/w{n_windows}" if n_windows else key
+
+
+def rung(n: int) -> int:
+    """The static-shape budget ladder: round up to a power of two (one jit
+    compilation per rung — DESIGN.md §2)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
 
 
 def _empty_i32() -> jax.Array:
@@ -93,6 +104,7 @@ def make_plan(
     tile_v: int = DEFAULT_TILE_V,
     block_e: int = DEFAULT_BLOCK_E,
     n_windows: int = 0,
+    ring_capacity: int = 0,
 ) -> AccessPlan:
     """Direct plan constructor (the planner-free path: legacy shims, the
     distributed engine's per-shard plans, tests)."""
@@ -124,9 +136,37 @@ def make_plan(
         n_edges=int(n_edges),
         cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
                              int(exchange_budget), int(tile_v), int(block_e),
-                             int(n_windows)),
+                             int(n_windows), int(ring_capacity)),
         n_windows=int(n_windows),
+        ring_capacity=int(ring_capacity),
     )
+
+
+# identity-cached composite-key array per_vertex_window_budget bisects: the
+# O(E_heavy) key build depends only on (graph, index), while the
+# incremental server re-evaluates the budget on hybrid advances — pay the
+# build once per TGER, each query is then one 2H searchsorted.
+@identity_cache(8)
+def _pvb_keys(t_start, out_offsets, indexed_ids):
+    ts = np.asarray(t_start).astype(np.int64)
+    off = np.asarray(out_offsets).astype(np.int64)
+    hv = np.asarray(indexed_ids)
+    hv = hv[hv >= 0].astype(np.int64)
+    if hv.size == 0:
+        return None
+    lo, hi = off[hv], off[hv + 1]
+    lens = hi - lo
+    total = int(lens.sum())
+    if total == 0:
+        return None
+    # flat edge positions of every heavy slice, slice-major
+    starts = np.cumsum(lens) - lens
+    flat = np.repeat(lo - starts, lens) + np.arange(total)
+    rank = np.repeat(np.arange(hv.size, dtype=np.int64), lens)
+    base = np.int64(np.iinfo(np.int32).min)
+    keys = (rank << 33) + (ts[flat] - base)
+    slots = np.arange(hv.size, dtype=np.int64) << 33
+    return (keys, slots, base, hv.size)
 
 
 def per_vertex_window_budget(
@@ -141,64 +181,63 @@ def per_vertex_window_budget(
 
     Exact and fully vectorized: each indexed vertex's T-CSR slice is
     start-sorted, so slices concatenate into one globally sorted array of
-    composite keys (slot << 33 | t_start - INT32_MIN) and all 2H window
-    bounds resolve in a single batched ``np.searchsorted``, O(E_heavy +
-    H log E_heavy) host work instead of the former O(H) Python loop.
+    composite keys (slot << 33 | t_start - INT32_MIN) — built once per
+    (graph, TGER) identity — and all 2H window bounds resolve in a single
+    batched ``np.searchsorted``, O(H log E_heavy) per query.
     """
     if idx.n_indexed == 0:
         return floor
-    ts = np.asarray(g.t_start).astype(np.int64)
-    off = np.asarray(g.out_offsets).astype(np.int64)
-    hv = np.asarray(idx.indexed_ids)
-    hv = hv[hv >= 0].astype(np.int64)
-    if hv.size == 0:
-        return floor
-    lo, hi = off[hv], off[hv + 1]
-    lens = hi - lo
-    total = int(lens.sum())
-    ws, we = int(window[0]), int(window[1])
-    if total == 0:
+    entry = _pvb_keys(g.t_start, g.out_offsets, idx.indexed_ids)
+    if entry is None:
         worst = floor
     else:
-        # flat edge positions of every heavy slice, slice-major
-        starts = np.cumsum(lens) - lens
-        flat = np.repeat(lo - starts, lens) + np.arange(total)
-        rank = np.repeat(np.arange(hv.size, dtype=np.int64), lens)
-        base = np.int64(np.iinfo(np.int32).min)
-        keys = (rank << 33) + (ts[flat] - base)
-        slots = np.arange(hv.size, dtype=np.int64) << 33
+        keys, slots, base, n_hv = entry
+        ws, we = int(window[0]), int(window[1])
         queries = np.concatenate([slots + (ws - base), slots + (we + 1 - base)])
         bounds = np.searchsorted(keys, queries, side="left")
-        counts = bounds[hv.size:] - bounds[:hv.size]
+        counts = bounds[n_hv:] - bounds[:n_hv]
         worst = max(floor, int(counts.max()))
     return 1 << (worst - 1).bit_length() if worst > 1 else 1
 
 
-# identity-keyed layout cache: the tile layout depends only on (dst array,
-# tile_v, block_e) and is O(E log E) host work — build once per graph, not
-# once per plan_query call.  The cached strong ref to dst pins its id().
-_LAYOUT_CACHE: dict = {}
-_LAYOUT_CACHE_MAX = 16
+def heavy_window_budget(
+    g: TemporalGraph,
+    idx: TGERIndex,
+    window: Tuple[int, int],
+    floor: int = 16,
+) -> int:
+    """Ring-capacity rung for the HYBRID ring view (DESIGN.md §7.3): the
+    count of heavy (indexed-source) edges whose start lies in the window,
+    rounded to a power of two.  Unlike ``per_vertex_window_budget`` (a
+    per-vertex max, which over-allocates H x budget slots), this is the
+    exact total the positional heavy ring holds.  Monotone in window
+    inclusion, so the union window's rung covers every member window."""
+    from repro.core.tger import heavy_window_positions_host
+
+    lo, hi = heavy_window_positions_host(idx, (int(window[0]), int(window[1])))
+    return rung(max(hi - lo, floor))
 
 
-def _layout_for(g: TemporalGraph, tile_v: int, block_e: int):
+# identity-cached tile layout: depends only on (dst array, sizes, tile
+# shape) and is O(E log E) host work — build once per graph, not once per
+# plan_query call.
+@identity_cache(16)
+def _layout_cached(dst, n_edges: int, n_vertices: int, tile_v: int,
+                   block_e: int):
     from repro.kernels.layout import build_tile_layout
 
-    key = (id(g.dst), int(g.n_edges), int(g.n_vertices), tile_v, block_e)
-    hit = _LAYOUT_CACHE.get(key)
-    if hit is not None and hit[0] is g.dst:
-        return hit[1]
-    layout = build_tile_layout(np.asarray(g.dst), g.n_vertices, tile_v, block_e)
+    layout = build_tile_layout(np.asarray(dst), n_vertices, tile_v, block_e)
     # device-put the layout arrays once; make_plan's jnp.asarray is then a
     # no-op and every plan for this graph shares the same buffers.
-    layout = dataclasses.replace(
+    return dataclasses.replace(
         layout, perm=jnp.asarray(layout.perm),
         block_tile=jnp.asarray(layout.block_tile),
     )
-    if len(_LAYOUT_CACHE) >= _LAYOUT_CACHE_MAX:
-        _LAYOUT_CACHE.pop(next(iter(_LAYOUT_CACHE)))
-    _LAYOUT_CACHE[key] = (g.dst, layout)
-    return layout
+
+
+def _layout_for(g: TemporalGraph, tile_v: int, block_e: int):
+    return _layout_cached(g.dst, int(g.n_edges), int(g.n_vertices),
+                          int(tile_v), int(block_e))
 
 
 def plan_query(
@@ -265,6 +304,7 @@ def plan_query(
 
     budget = 0
     per_vertex = 0
+    ring_capacity = 0
     if tger is None:
         method = "scan"
         if access in ("index", "hybrid"):
@@ -279,6 +319,9 @@ def plan_query(
             per_vertex = max(
                 per_vertex, per_vertex_window_budget(g, tger, w, floor=hybrid_floor)
             )
+        # hybrid ring capacity: the heavy in-window COUNT rung (the count is
+        # monotone in window inclusion, so the union rung covers members).
+        ring_capacity = heavy_window_budget(g, tger, win, floor=hybrid_floor)
     else:
         dec = decide_access(
             tger, n_edges, win, model,
@@ -293,6 +336,9 @@ def plan_query(
             for w in member_wins:
                 wdec = decide_access(tger, n_edges, w, model, force="index")
                 budget = max(budget, wdec.budget)
+            # index ring capacity IS the budget rung: the ring holds the
+            # same [lo, lo+budget) positional range the cold view gathers.
+            ring_capacity = budget
 
     if backend == "pallas_tiled" and method != "scan":
         backend = "xla_segment"  # tile layout is per-graph static: scan only
@@ -304,7 +350,7 @@ def plan_query(
         exchange_budget=int(exchange_budget),
         layout=layout, n_edges=n_edges if layout is not None else 0,
         tile_v=tile_v, block_e=block_e,
-        n_windows=n_windows,
+        n_windows=n_windows, ring_capacity=ring_capacity,
     )
 
 
@@ -330,6 +376,8 @@ __all__ = [
     "plan_query",
     "decision_for",
     "per_vertex_window_budget",
+    "heavy_window_budget",
+    "rung",
     "METHODS",
     "BACKENDS",
 ]

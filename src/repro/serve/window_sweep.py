@@ -12,28 +12,32 @@ variants.  ``sweep_looped`` is the reference W-independent-runs execution
 (used by tests for row-parity and by ``benchmarks/run.py --only sweep`` for
 the amortization comparison).
 
-``sweep_incremental`` (DESIGN.md §7.2) is the serving hot loop: when the
-window set advances by a stride, it carries a :class:`SweepState` across
-calls and, instead of a cold plan+gather+W-fixpoints pass,
+``sweep_incremental`` (DESIGN.md §7.2–§7.3) is the serving hot loop: when
+the window set advances by a stride, it carries a :class:`SweepState`
+across calls and, instead of a cold plan+gather+W-fixpoints pass, runs ONE
+fused jitted step that
 
-  * advances the union edge view with a DELTA gather of only the entering
-    time range (index plans: the time-first order makes the union view a
-    contiguous positional range, so sliding forward is a shift + a small
-    tail gather; scan plans reuse the full view untouched);
-  * copies the rows of windows already answered by the previous sweep
-    (windows_new[1:] == windows_prev[:-1] under a one-stride advance — the
-    DeltaGraph-style reuse of the time axis);
-  * solves only the genuinely new windows, warm-started where monotone-safe
-    (EA: provably the same fixpoint; see DESIGN.md §7.2 for the
-    per-algorithm soundness table).
+  * slides the RING-buffer union view forward (slot identity ``p mod C``
+    over the time-first permutation — global for index plans, heavy-only
+    for hybrid plans) by scattering ONLY the entering positions, with the
+    view buffers donated so the steady state reallocates nothing;
+  * solves only the genuinely new windows (windows_new[1:] ==
+    windows_prev[:-1] under a one-stride advance — the DeltaGraph-style
+    reuse of the time axis), warm-started where the caller explicitly opts
+    in via ``warm_start=`` and soundness allows (DESIGN.md §7.2);
+  * assembles the [W, V] result rows (reused + solved) inside the same
+    program — one dispatch per advance, trace/dispatch-count-tested.
 
 Integer-label results are row-identical (bit-exact) to the cold ``sweep``
-under the same plan; pagerank rows match up to float reduction order.
+under the same plan; pagerank rows match up to float reduction order (sums
+cross edge-view layouts — compare allclose, as everywhere floats cross
+views).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
@@ -51,13 +55,24 @@ from repro.core.algorithms import (
     temporal_pagerank_batched,
     temporal_pagerank_over_view,
 )
-from repro.core.edgemap import INT_INF, EdgeView, view_for_plan
+from repro.core.edgemap import (
+    INT_INF,
+    EdgeView,
+    advance_hybrid_ring_fields,
+    advance_index_ring_fields,
+    ring_view_for_plan,
+)
 from repro.core.temporal_graph import TemporalGraph
-from repro.core.tger import TGERIndex
+from repro.core.tger import (
+    TGERIndex,
+    heavy_window_positions_host,
+    window_positions_host,
+)
 from repro.engine.plan import (
     AccessPlan,
     per_vertex_window_budget,
     plan_query,
+    rung,
 )
 
 ALGORITHMS = ("earliest_arrival", "reachability", "pagerank")
@@ -155,119 +170,234 @@ def sweep_looped(
 
 
 # ---------------------------------------------------------------------------
-# Incremental sliding-window serving (DESIGN.md §7.2)
+# Incremental sliding-window serving (DESIGN.md §7.2–§7.3)
 # ---------------------------------------------------------------------------
+
+# trace-time events of the fused steps: incremented ONLY when jax traces a
+# new (static-signature) variant.  The soak test pins this after warmup —
+# steady-state advances must not retrace.
+_TRACE_COUNTS: dict = {}
+
+# dispatch-site log: tests install a list here and every device-dispatch
+# site in the incremental path appends a tag — the steady-state advance
+# must log exactly one "fused:<method>" entry (the acceptance property).
+_DISPATCH_LOG: Optional[list] = None
+
+
+def fused_trace_count() -> int:
+    """Total fused-step traces so far (one per new static signature)."""
+    return sum(_TRACE_COUNTS.values())
+
+
+def _trace_event(tag: str) -> None:
+    _TRACE_COUNTS[tag] = _TRACE_COUNTS.get(tag, 0) + 1
+
+
+def _note(tag: str) -> None:
+    if _DISPATCH_LOG is not None:
+        _DISPATCH_LOG.append(tag)
+
+
+def _call_donating(fn, *args, **kwargs):
+    """Invoke a buffer-donating jitted step with jax's "donated buffers
+    were not usable" UserWarning suppressed FOR THIS CALL ONLY (XLA
+    declines to alias some leaves — expected residue, not actionable; a
+    process-wide filter would swallow real donation diagnostics from user
+    code).  The steps donate their view/result buffers so the steady state
+    reallocs nothing where XLA can alias; the carried state is single-use
+    (DESIGN.md §7.3)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable",
+            category=UserWarning)
+        return fn(*args, **kwargs)
+
 
 @dataclasses.dataclass
 class SweepState:
     """The carry between consecutive ``sweep_incremental`` calls: the served
-    windows + their answers (row reuse), the union edge view (delta
-    advancing), and the host-side position bookkeeping the delta gather
-    needs.  ``last_advance`` records how the view was obtained —
-    ``cold`` (full plan + gather, no reuse), ``delta`` (shift + entering-
-    range gather), ``reuse`` (scan view, untouched), ``rebuild`` (hybrid
-    view regathered, rows still reused) — and ``n_solved`` how many windows
-    actually ran a fixpoint (both are what the benchmark and the tests
-    assert on)."""
+    windows + their answers (row reuse), the RING-buffer union edge view
+    (positionally stable across advances — DESIGN.md §7.3), and the
+    host-side position bookkeeping the delta scatter needs.
+
+    ``last_advance`` records how the view was obtained — ``cold`` (full
+    plan + ring build, no reuse), ``delta`` (fused one-dispatch ring
+    advance; index AND hybrid), ``reuse`` (scan view, untouched),
+    ``noop``/``reorder`` (window set unchanged / permuted) — and
+    ``n_solved`` how many windows actually ran a fixpoint.
+
+    Donation contract (DESIGN.md §7.3): passing a state to
+    ``sweep_incremental`` DONATES its view and result buffers to the fused
+    step — the state is MOVED-FROM, single-use.  Reusing a consumed state,
+    or reading result arrays returned before the advance that consumed
+    them, raises jax's "buffer has been deleted or donated" error.  Copy
+    rows out (``np.asarray``) before the next advance if retention is
+    needed."""
 
     algorithm: str
     windows: np.ndarray          # i32[W, 2] (host)
     plan: AccessPlan
-    edges: EdgeView              # union-window view (device)
+    edges: EdgeView              # ring-layout union view (device)
     union: Tuple[int, int]
-    lo: int                      # time-first position of edges[0] (index; -1 otherwise)
+    lo: int                      # first resident time-first position (index:
+                                 # global order; hybrid: heavy order; -1 scan)
+    hi: int                      # end of the VALID position range [lo, hi)
+    capacity: int                # ring slot count C (0 for scan)
     results: Any                 # [W, V] array or tuple of [W, V] (reachability)
     graph_ref: Any               # strong ref to g.src — pins identity (no id reuse)
     source_token: Optional[tuple]  # None for source-free algorithms (pagerank)
     kwargs_token: tuple
     last_advance: str = "cold"
     n_solved: int = 0
+    warm_applied: bool = False   # an explicit warm_start= actually seeded rows
+    last_rounds: Any = None      # i32 device scalar (EA only; lazy, no sync)
 
 
-def _rung(n: int) -> int:
-    n = max(int(n), 1)
-    return 1 << (n - 1).bit_length()
-
-
-@functools.partial(jax.jit, static_argnames=("budget", "delta_budget"))
-def _advance_index_view(
-    g: TemporalGraph,
-    tger: TGERIndex,
-    prev: EdgeView,
-    lo_prev,
-    shift,
-    lo_new,
-    hi_new,
-    *,
-    budget: int,
-    delta_budget: int,
-) -> EdgeView:
-    """Slide an index-plan union view forward in the time-first order.
-
-    The previous view holds positions [lo_prev, lo_prev+budget); the new
-    union needs [lo_new, lo_new+budget) with lo_new = lo_prev + shift.  Only
-    the ENTERING tail positions [lo_prev+budget, lo_prev+budget+shift) are
-    gathered from the global edge arrays (O(delta) random access instead of
-    O(budget)); the surviving prefix is shifted in-place with one static
-    concat + dynamic slice.  Bit-identical to a cold ``index_view`` of the
-    new union under the same budget (positions are clamped identically, the
-    mask is recomputed from the new [lo, hi))."""
-    pos = lo_prev + budget + jnp.arange(delta_budget, dtype=jnp.int32)
-    pos_c = jnp.minimum(pos, g.n_edges - 1)
-    eids = tger.perm_by_start[pos_c]
-    delta = (g.src[eids], g.dst[eids], g.t_start[eids], g.t_end[eids],
-             g.weight[eids])
-    prev_f = (prev.src, prev.dst, prev.t_start, prev.t_end, prev.weight)
-    fields = [
-        jax.lax.dynamic_slice_in_dim(jnp.concatenate([p, d]), shift, budget)
-        for p, d in zip(prev_f, delta)
-    ]
-    mask = (lo_new + jnp.arange(budget, dtype=jnp.int32)) < hi_new
-    return EdgeView(*fields, mask)
-
-
-# identity-keyed host copy of the time-first start order: the advance
-# bookkeeping binary-searches it every stride, so pay the device->host
-# transfer once per TGER, not once per advance.  The strong ref pins id().
-_START_SORTED_CACHE: dict = {}
-_START_SORTED_CACHE_MAX = 8
-
-
-def _start_sorted_host(tger: TGERIndex) -> np.ndarray:
-    key = id(tger.start_sorted)
-    hit = _START_SORTED_CACHE.get(key)
-    if hit is not None and hit[0] is tger.start_sorted:
-        return hit[1]
-    ss = np.asarray(tger.start_sorted)
-    if len(_START_SORTED_CACHE) >= _START_SORTED_CACHE_MAX:
-        _START_SORTED_CACHE.pop(next(iter(_START_SORTED_CACHE)))
-    _START_SORTED_CACHE[key] = (tger.start_sorted, ss)
-    return ss
-
-
-def _window_positions(tger: TGERIndex, union: Tuple[int, int]) -> Tuple[int, int]:
-    """Host-side [lo, hi) of the union window in the time-first order (the
-    same searchsorted ``window_range`` runs on device)."""
-    ss = _start_sorted_host(tger)
-    return (int(np.searchsorted(ss, union[0], side="left")),
-            int(np.searchsorted(ss, union[1], side="right")))
-
-
-def _run_over_view(algorithm, edges, source, windows, plan, n_vertices,
-                   init, kwargs):
+def _solve_over_view(algorithm, edges, source, windows, plan, n_vertices,
+                     init, kwargs):
+    """Solve ``windows`` over a prebuilt (ring) view.  Returns
+    ``(results, rounds)`` — ``rounds`` is the runner's convergence metric
+    for EA and -1 for the vmapped/fixed-iteration algorithms."""
     if algorithm == "earliest_arrival":
         return earliest_arrival_over_view(
             edges, source, windows, plan=plan, n_vertices=n_vertices,
-            init_arrival=init, **kwargs)
+            init_arrival=init, with_rounds=True, **kwargs)
     if algorithm == "reachability":
-        return overlaps_reachability_over_view(
+        res = overlaps_reachability_over_view(
             edges, source, windows, plan=plan, n_vertices=n_vertices,
             init=init, **kwargs)
+        return res, jnp.int32(-1)
     if algorithm == "pagerank":
-        return temporal_pagerank_over_view(
+        res = temporal_pagerank_over_view(
             edges, windows, plan=plan, n_vertices=n_vertices,
             init=init, **kwargs)
+        return res, jnp.int32(-1)
     raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
+
+
+def _assemble(prev_results, sub, row_map, new_pos, tuple_result):
+    """Row assembly: copy reused rows from the previous sweep (static
+    gather), scatter the freshly-solved rows into their positions."""
+    rm = jnp.asarray(row_map, jnp.int32)
+    npos = jnp.asarray(new_pos, jnp.int32)
+
+    def one(prev, s):
+        return prev[rm].at[npos].set(s)
+
+    if tuple_result:
+        return tuple(one(prev_results[k], sub[k]) for k in range(3))
+    return one(prev_results, sub)
+
+
+# ---------------------------------------------------------------------------
+# fused one-dispatch advance steps (DESIGN.md §7.3): view advance + fixpoint
+# solve + row assembly in ONE jitted program, with the ring and result
+# buffers donated so a steady-state advance reallocates nothing.
+# ---------------------------------------------------------------------------
+
+# NB: the fused steps take the five raw edge arrays + the relevant
+# permutation rather than the TemporalGraph/TGERIndex pytrees — per-call
+# pytree flattening of ~24 leaves is measurable dispatch latency at small
+# serving budgets, and the step needs nothing else from either structure.
+
+_ADVANCE_RING = {
+    "index": advance_index_ring_fields,
+    "hybrid": advance_hybrid_ring_fields,
+}
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "algorithm", "n_vertices", "capacity",
+                     "delta_budget", "row_map", "new_pos", "kwargs_token"),
+    donate_argnames=("edges", "prev_results"),
+)
+def _fused_step_ring(
+    fields,                         # (src, dst, t_start, t_end, weight)
+    perm,                           # time-first permutation (global | heavy)
+    plan: AccessPlan,
+    edges: EdgeView,
+    prev_results,
+    new_windows,
+    positions,                      # i32[3]: (lo_prev, lo_new, hi_new) packed
+    source,
+    init,
+    *,
+    method: str,
+    algorithm: str,
+    n_vertices: int,
+    capacity: int,
+    delta_budget: int,
+    row_map: tuple,
+    new_pos: tuple,
+    kwargs_token: tuple,
+):
+    _trace_event(
+        f"{method}/{algorithm}/C{capacity}/d{delta_budget}/n{len(new_pos)}")
+    edges = _ADVANCE_RING[method](
+        fields, perm, edges, positions[0], positions[1], positions[2],
+        capacity=capacity, delta_budget=delta_budget)
+    sub, rounds = _solve_over_view(
+        algorithm, edges, source, new_windows, plan, n_vertices, init,
+        dict(kwargs_token))
+    results = _assemble(prev_results, sub, row_map, new_pos,
+                        algorithm == "reachability")
+    return results, edges, rounds
+
+
+# NB: the scan step does NOT donate the view — the scan view aliases the
+# graph's own edge arrays, which must outlive every advance.
+@functools.partial(
+    jax.jit,
+    static_argnames=("algorithm", "n_vertices", "row_map", "new_pos",
+                     "kwargs_token"),
+    donate_argnames=("prev_results",),
+)
+def _fused_step_scan(
+    fields,                         # (src, dst, t_start, t_end, weight)
+    plan: AccessPlan,
+    prev_results,
+    new_windows,
+    source,
+    init,
+    *,
+    algorithm: str,
+    n_vertices: int,
+    row_map: tuple,
+    new_pos: tuple,
+    kwargs_token: tuple,
+):
+    _trace_event(f"scan/{algorithm}/n{len(new_pos)}")
+    edges = EdgeView(*fields, jnp.ones(fields[0].shape[0], dtype=bool))
+    sub, rounds = _solve_over_view(
+        algorithm, edges, source, new_windows, plan, n_vertices,
+        init, dict(kwargs_token))
+    results = _assemble(prev_results, sub, row_map, new_pos,
+                        algorithm == "reachability")
+    return results, rounds
+
+
+def _containment_spans(windows_new, prev_windows):
+    """Shared warm-start precheck: span arrays, or None when no previous
+    window can be strictly contained in any new window.  Equal-span
+    containment is equality, which row matching already consumed — so the
+    steady sliding loop (all widths equal) early-outs here without scanning
+    pairs or building any arrays."""
+    new_spans = windows_new[:, 1].astype(np.int64) - windows_new[:, 0]
+    prev_spans = prev_windows[:, 1].astype(np.int64) - prev_windows[:, 0]
+    if prev_spans.size == 0 or int(prev_spans.min()) >= int(new_spans.max()):
+        return None
+    return new_spans, prev_spans
+
+
+def _best_contained(w, span, prev_windows, prev_spans):
+    """Widest previous window STRICTLY contained in ``w`` (None if none)."""
+    best, best_span = None, -1
+    for p, wp in enumerate(prev_windows):
+        if (prev_spans[p] < span and wp[0] >= w[0] and wp[1] <= w[1]
+                and int(prev_spans[p]) > best_span):
+            best, best_span = p, int(prev_spans[p])
+    return best
 
 
 def _ea_warm_init(windows_new, prev_windows, prev_results, source, n_vertices):
@@ -276,27 +406,74 @@ def _ea_warm_init(windows_new, prev_windows, prev_results, source, n_vertices):
     remain witnessed, and EA's monotone min fixpoint is unique — so the
     warm run converges to exactly the cold answer; DESIGN.md §7.2).
     Returns None when no containment exists (the cold init path is then
-    taken).  Equal-span containment is equality, which row matching already
-    consumed — so the steady sliding loop (all widths equal) early-outs
-    here without scanning pairs or building any arrays."""
-    new_spans = windows_new[:, 1].astype(np.int64) - windows_new[:, 0]
-    prev_spans = prev_windows[:, 1].astype(np.int64) - prev_windows[:, 0]
-    if prev_spans.size == 0 or int(prev_spans.min()) >= int(new_spans.max()):
+    taken)."""
+    spans = _containment_spans(windows_new, prev_windows)
+    if spans is None:
         return None
+    new_spans, prev_spans = spans
     rows, any_warm = [], False
     for w, span in zip(windows_new, new_spans):
         cold = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(int(w[0]))
-        best, best_span = None, -1
-        for p, wp in enumerate(prev_windows):
-            if (prev_spans[p] < span and wp[0] >= w[0] and wp[1] <= w[1]
-                    and int(prev_spans[p]) > best_span):
-                best, best_span = p, int(prev_spans[p])
+        best = _best_contained(w, span, prev_windows, prev_spans)
         if best is None:
             rows.append(cold)
         else:
             any_warm = True
             rows.append(jnp.minimum(cold, prev_results[best]))
     return jnp.stack(rows) if any_warm else None
+
+
+def _reach_warm_init(windows_new, prev_windows, prev_results, source,
+                     n_vertices):
+    """([Wn, V] end, [Wn, V] start) overlaps-reachability warm start from
+    contained previous windows: every warm (end, start) pair is the
+    last-edge interval of a REAL overlaps chain inside the containing new
+    window, so every reported vertex stays truly reachable (sound).  The
+    lexicographic heuristic may settle a different witness pair than a cold
+    run, so this is opt-in behind ``warm_start=`` (DESIGN.md §7.2)."""
+    spans = _containment_spans(windows_new, prev_windows)
+    if spans is None:
+        return None
+    new_spans, prev_spans = spans
+    reach_p, start_p, end_p = prev_results
+    e_rows, s_rows, any_warm = [], [], False
+    for w, span in zip(windows_new, new_spans):
+        ta = int(w[0])
+        ce = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(ta)
+        cs = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(ta)
+        best = _best_contained(w, span, prev_windows, prev_spans)
+        if best is None:
+            e_rows.append(ce)
+            s_rows.append(cs)
+        else:
+            any_warm = True
+            pe = jnp.where(reach_p[best], end_p[best], INT_INF)
+            ps = jnp.where(reach_p[best], start_p[best], INT_INF)
+            better = (pe < ce) | ((pe == ce) & (ps < cs))
+            e_rows.append(jnp.where(better, pe, ce))
+            s_rows.append(jnp.where(better, ps, cs))
+    if not any_warm:
+        return None
+    return jnp.stack(e_rows), jnp.stack(s_rows)
+
+
+def _warm_init(algorithm, warm_start, kwargs, sub_windows, state, source,
+               n_vertices):
+    """The explicit ``warm_start=`` gate (DESIGN.md §7.2): EA warm starts
+    are exact (monotone min fixpoint; refused under ``visit_once``, whose
+    visited-blocking breaks re-expansion); reachability warm starts are
+    sound-but-not-bit-stable (opt-in is the consent to that); pagerank warm
+    starts would change the finite-iteration output, so they are refused —
+    the caller observes the refusal via ``state.warm_applied``."""
+    if not warm_start:
+        return None
+    if algorithm == "earliest_arrival" and not kwargs.get("visit_once"):
+        return _ea_warm_init(
+            sub_windows, state.windows, state.results, source, n_vertices)
+    if algorithm == "reachability":
+        return _reach_warm_init(
+            sub_windows, state.windows, state.results, source, n_vertices)
+    return None  # refused: pagerank, or EA under visit_once
 
 
 def sweep_incremental(
@@ -310,7 +487,7 @@ def sweep_incremental(
     access: str = "auto",
     backend: str = "xla_segment",
     plan: Optional[AccessPlan] = None,
-    warm_start: bool = True,
+    warm_start: bool = False,
     **kwargs,
 ):
     """Serve ``windows`` reusing the previous sweep's :class:`SweepState`.
@@ -319,14 +496,24 @@ def sweep_incremental(
     :func:`sweep`.  Integer-label algorithms (earliest_arrival,
     reachability) are BIT-identical to the cold execution under the same
     plan; pagerank rows are numerically identical up to float reduction
-    order (reused rows were summed over the previous union view, whose
-    positional base differs — compare allclose, as everywhere floats cross
-    edge views).  Pass ``state=None`` (or a state from a different graph /
-    source / algorithm / kwargs) for a cold start; pass the returned state
-    back on the next advance.  ``warm_start`` controls the EA containment
-    warm start (exact, and skipped under ``visit_once`` where blocking
-    re-expansion would break it); reachability and pagerank solve new rows
-    from the cold init.
+    order (sums cross edge-view layouts — compare allclose, as everywhere
+    floats cross views).  Pass ``state=None`` (or a state from a different
+    graph / source / algorithm / kwargs) for a cold start; pass the
+    returned state back on the next advance.
+
+    A steady-state advance (forward slide within the ring's capacity and
+    delta rung) is ONE jitted dispatch: the fused step scatters only the
+    entering time-first range into the donated ring view, solves only the
+    genuinely new windows, and assembles the [W, V] result rows in the same
+    program (DESIGN.md §7.3).  Index AND hybrid plans delta-advance (the
+    hybrid ring slides over the heavy time-first permutation); scan plans
+    reuse the full view untouched.
+
+    ``warm_start=True`` explicitly opts into containment warm starts:
+    EXACT for the default label-correcting EA (monotone min fixpoint),
+    sound-but-not-bit-stable for reachability, and REFUSED (cold init, with
+    ``state.warm_applied == False``) for pagerank and for EA under
+    ``visit_once`` — the unsound cases of DESIGN.md §7.2.
     """
     windows = np.asarray(windows, np.int32).reshape(-1, 2)
     union = (int(windows[:, 0].min()), int(windows[:, 1].max()))
@@ -337,21 +524,44 @@ def sweep_incremental(
         else tuple(np.asarray(source).reshape(-1).tolist())
     )
     kwargs_token = tuple(sorted(kwargs.items()))
+    src_arg = 0 if algorithm == "pagerank" else source
 
-    def cold():
-        p = plan if plan is not None else plan_query(
-            g, tger, windows=windows, access=access, backend=backend)
-        edges = view_for_plan(g, tger, union, p)
-        lo = _window_positions(tger, union)[0] if (
-            p.method == "index" and tger is not None) else -1
-        results = _run_over_view(
-            algorithm, edges, source, jnp.asarray(windows), p,
+    def plan_covers(p):
+        """May a fallback REUSE the previous plan for this union?  Keeping
+        the plan (and hence the ring-capacity rung) stable across cold
+        fallbacks is what pins the fused step's jit cache over a long
+        serving horizon — replan only when coverage actually lapsed."""
+        if p.method == "scan":
+            return True
+        if tger is None:
+            return False
+        if p.method == "index":
+            lo, hi = window_positions_host(tger, union)
+            return hi - lo <= (p.ring_capacity or p.budget)
+        lo, hi = heavy_window_positions_host(tger, union)
+        if p.ring_capacity and hi - lo > p.ring_capacity:
+            return False
+        return per_vertex_window_budget(g, tger, union) <= p.per_vertex_budget
+
+    def cold(prev_plan=None):
+        p = plan
+        if p is None and prev_plan is not None and plan_covers(prev_plan):
+            p = prev_plan
+        if p is None:
+            p = plan_query(
+                g, tger, windows=windows, access=access, backend=backend)
+        _note("cold:view")
+        edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
+        _note("cold:solve")
+        results, rounds = _solve_over_view(
+            algorithm, edges, src_arg, jnp.asarray(windows), p,
             g.n_vertices, None, kwargs)
         return results, SweepState(
             algorithm=algorithm, windows=windows.copy(), plan=p, edges=edges,
-            union=union, lo=lo, results=results, graph_ref=g.src,
-            source_token=source_token, kwargs_token=kwargs_token,
-            last_advance="cold", n_solved=len(windows),
+            union=union, lo=lo, hi=hi, capacity=capacity, results=results,
+            graph_ref=g.src, source_token=source_token,
+            kwargs_token=kwargs_token, last_advance="cold",
+            n_solved=len(windows), last_rounds=rounds,
         )
 
     reusable = (
@@ -366,77 +576,104 @@ def sweep_incremental(
         return cold()
 
     p = state.plan
-    # ---- advance the union view --------------------------------------------
-    if p.method == "scan":
-        edges, lo_new, advance = state.edges, -1, "reuse"
-    elif p.method == "index" and tger is not None:
-        lo_new, hi_new = _window_positions(tger, union)
-        shift = lo_new - state.lo
-        if shift < 0 or hi_new - lo_new > p.budget or shift > p.budget:
-            return cold()  # slid backwards or budget no longer covers
-        edges = _advance_index_view(
-            g, tger, state.edges,
-            jnp.int32(state.lo), jnp.int32(shift), jnp.int32(lo_new),
-            jnp.int32(hi_new),
-            budget=p.budget, delta_budget=_rung(shift),
+    # ---- match windows against the previous sweep's answered rows ----------
+    # (vectorized: per-element int() conversions are hot-path host latency)
+    eq = (windows[:, None, :] == state.windows[None, :, :]).all(axis=2)
+    has = eq.any(axis=1)
+    arg = eq.argmax(axis=1)
+    matched = [int(arg[i]) if has[i] else None for i in range(len(windows))]
+    new_idx = [i for i, m in enumerate(matched) if m is None]
+    tuple_result = algorithm == "reachability"
+
+    if not new_idx:
+        # nothing to solve: the window set is unchanged (noop) or a
+        # permutation of answered rows (one gather dispatch)
+        if (len(windows) == len(state.windows)
+                and matched == list(range(len(state.windows)))):
+            return state.results, dataclasses.replace(
+                state, last_advance="noop", n_solved=0, warm_applied=False)
+        _note("reorder")
+        rm = jnp.asarray(matched, jnp.int32)
+        results = (
+            tuple(r[rm] for r in state.results) if tuple_result
+            else state.results[rm]
         )
+        return results, dataclasses.replace(
+            state, windows=windows.copy(), union=union, results=results,
+            last_advance="reorder", n_solved=0, warm_applied=False)
+
+    sub_windows = windows[new_idx]
+    row_map = tuple(0 if m is None else m for m in matched)
+    new_pos = tuple(new_idx)
+    fields = (g.src, g.dst, g.t_start, g.t_end, g.weight)
+
+    def make_init():
+        # deferred until the advance is KNOWN to take a fused path: the
+        # warm-init rows are device work that a cold fallback would discard
+        init = _warm_init(algorithm, warm_start, kwargs, sub_windows, state,
+                          source, g.n_vertices)
+        if init is not None:
+            _note("warm-init")
+        return init
+
+    # ---- fused advance: ring slide + solve + assembly, one dispatch --------
+    if p.method == "scan":
+        init = make_init()
+        _note("fused:scan")
+        results, rounds = _call_donating(
+            _fused_step_scan,
+            fields, p, state.results, sub_windows, src_arg, init,
+            algorithm=algorithm, n_vertices=g.n_vertices, row_map=row_map,
+            new_pos=new_pos, kwargs_token=kwargs_token)
+        edges, lo_new, hi_new, advance = state.edges, -1, -1, "reuse"
+    elif p.method in ("index", "hybrid") and tger is not None:
+        positions = (window_positions_host if p.method == "index"
+                     else heavy_window_positions_host)
+        lo_new, hi_new = positions(tger, union)
+        # hybrid parity guard: the ring itself stays exact (its own
+        # coverage is the hi-lo <= C check below), but the COLD
+        # hybrid_view under this plan would truncate if some vertex's
+        # in-window count outgrew the per-vertex budget — replan so parity
+        # with `sweep` holds.  The TOTAL heavy count bounds every
+        # per-vertex count, so the exact (O(H log E) host) check only runs
+        # when that O(1) bound is inconclusive.
+        if (p.method == "hybrid"
+                and hi_new - lo_new > p.per_vertex_budget
+                and per_vertex_window_budget(g, tger, union)
+                > p.per_vertex_budget):
+            return cold()
+        shift = lo_new - state.lo
+        C = state.capacity
+        if shift < 0 or shift > C or hi_new - lo_new > C:
+            # slid backwards or the ring no longer covers; the fallback
+            # keeps the plan when it still covers (jit-cache stability)
+            return cold(prev_plan=p)
+        perm = (tger.perm_by_start if p.method == "index"
+                else tger.heavy_perm_by_start)
+        init = make_init()
+        _note(f"fused:{p.method}")
+        # delta rung floored at C/8: at most four delta variants per
+        # capacity ever compile, pinning the fused cache over long horizons
+        delta_budget = min(max(rung(max(shift, 1)), C // 8), C)
+        results, edges, rounds = _call_donating(
+            _fused_step_ring,
+            fields, perm, p, state.edges, state.results, sub_windows,
+            np.asarray([state.lo, lo_new, hi_new], np.int32), src_arg,
+            init, method=p.method, algorithm=algorithm,
+            n_vertices=g.n_vertices, capacity=C,
+            delta_budget=delta_budget, row_map=row_map,
+            new_pos=new_pos, kwargs_token=kwargs_token)
         advance = "delta"
-    elif p.method == "hybrid" and tger is not None:
-        # the hybrid view is per-vertex-range gathered — no contiguous
-        # positional identity to slide, so the view is regathered; the
-        # per-window answers below are still reused.
-        if per_vertex_window_budget(g, tger, union) > p.per_vertex_budget:
-            return cold()  # completeness budget no longer covers
-        edges, lo_new, advance = view_for_plan(g, tger, union, p), -1, "rebuild"
     else:
         return cold()
 
-    # ---- reuse answered windows, solve only the new ones -------------------
-    prev_row = {(int(w[0]), int(w[1])): i for i, w in enumerate(state.windows)}
-    matched = [prev_row.get((int(w[0]), int(w[1]))) for w in windows]
-    new_idx = [i for i, m in enumerate(matched) if m is None]
-
-    tuple_result = algorithm == "reachability"
-    if new_idx:
-        sub_windows = windows[new_idx]
-        init = None
-        # visit_once marks warm finite-label vertices as already visited,
-        # which blocks their re-expansion — warm starts are only exact for
-        # the default label-correcting EA, so skip them otherwise
-        if (warm_start and algorithm == "earliest_arrival"
-                and not kwargs.get("visit_once")):
-            init = _ea_warm_init(
-                sub_windows, state.windows, state.results, source,
-                g.n_vertices)
-        sub = _run_over_view(
-            algorithm, edges, source, jnp.asarray(sub_windows), p,
-            g.n_vertices, init, kwargs)
-    else:
-        sub = None
-
-    def assemble(prev_arr, sub_arr):
-        rows, j = [], 0
-        for i, m in enumerate(matched):
-            if m is None:
-                rows.append(sub_arr[j])
-                j += 1
-            else:
-                rows.append(prev_arr[m])
-        return jnp.stack(rows)
-
-    if tuple_result:
-        results = tuple(
-            assemble(state.results[k], sub[k] if sub is not None else None)
-            for k in range(3)
-        )
-    else:
-        results = assemble(state.results, sub)
-
     return results, SweepState(
         algorithm=algorithm, windows=windows.copy(), plan=p, edges=edges,
-        union=union, lo=lo_new, results=results, graph_ref=g.src,
-        source_token=source_token, kwargs_token=kwargs_token,
-        last_advance=advance, n_solved=len(new_idx),
+        union=union, lo=lo_new, hi=hi_new, capacity=state.capacity,
+        results=results, graph_ref=g.src, source_token=source_token,
+        kwargs_token=kwargs_token, last_advance=advance,
+        n_solved=len(new_idx), warm_applied=init is not None,
+        last_rounds=rounds,
     )
 
 
@@ -446,5 +683,6 @@ __all__ = [
     "sweep_incremental",
     "SweepState",
     "sliding_windows",
+    "fused_trace_count",
     "ALGORITHMS",
 ]

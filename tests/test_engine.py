@@ -456,7 +456,7 @@ def test_layout_cache_reused_across_plans():
                     tile_v=64, block_e=128)
     assert p1.layout_perm is p2.layout_perm  # same cached TileLayout arrays
     key = (id(g.dst), g.n_edges, g.n_vertices, 64, 128)
-    assert key in plan_mod._LAYOUT_CACHE
+    assert key in plan_mod._layout_cached.cache
 
 
 _SUBPROCESS_PROG = textwrap.dedent(

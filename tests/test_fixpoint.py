@@ -325,19 +325,22 @@ def test_sweep_incremental_scan_reuses_view():
 
 def test_sweep_incremental_ea_warm_start_exact():
     """A new window CONTAINING a previously-answered window warm-starts from
-    its labels and still converges to exactly the cold fixpoint (EA's
-    monotone-min warm-start soundness, DESIGN.md §7.2)."""
+    its labels (under the explicit ``warm_start=True`` opt-in) and still
+    converges to exactly the cold fixpoint (EA's monotone-min warm-start
+    soundness, DESIGN.md §7.2)."""
     g, idx, t_max, span, src = _serving_case(seed=11)
     t0 = int(np.asarray(g.t_start).min())
     lo, mid, hi = t0, t0 + span // 2, t0 + span
     wins0 = np.asarray([[lo, mid], [lo + span // 4, mid]], np.int32)
-    _, state = sweep_incremental(g, src, wins0, idx, access="index")
+    _, state = sweep_incremental(g, src, wins0, idx, access="index",
+                                 warm_start=True)
     # union start pinned by the kept window; the widened second window
     # contains prev [lo+span//4, mid]
     wins1 = np.asarray([[lo, mid], [lo + span // 8, mid + span // 8]], np.int32)
     res, state = sweep_incremental(g, src, wins1, idx, state=state,
-                                   access="index")
+                                   access="index", warm_start=True)
     assert state.last_advance == "delta" and state.n_solved == 1
+    assert state.warm_applied, "containment exists: the warm start must fire"
     cold = sweep(g, src, wins1, idx, plan=state.plan)
     assert (np.asarray(res) == np.asarray(cold)).all()
 

@@ -1,0 +1,250 @@
+"""Ring-buffer view identity, property-tested (DESIGN.md §7.3).
+
+The serving invariant the fused incremental step rests on: for random edge
+sets, window widths, strides and ring capacities, an ADVANCED ring view is
+bit-identical (all six EdgeView fields) to a COLD ring build at the new
+window — wrap-around boundaries included — and the ring's masked edge set
+equals the classic per-window gather's set for every access method (slot
+order is the only difference, which no masked segment combine observes).
+
+Hypothesis drives the randomized exploration (the conftest shim skips the
+``@given`` tests when the dev extra is absent); the deterministic smoke
+tests below exercise the same invariants — including forced multi-lap
+wrap-arounds and the shift == capacity boundary — in every environment.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import edgemap as em
+from repro.core.temporal_graph import from_edges
+from repro.core.tger import (
+    build_tger,
+    heavy_window_positions_host,
+    window_positions_host,
+)
+from repro.engine.plan import rung
+
+T_MAX = 1000
+
+_GRAPH_CACHE = {}
+
+
+def _graph(seed, n_v=40, n_e=600):
+    if seed not in _GRAPH_CACHE:
+        rng = np.random.default_rng(seed)
+        g = from_edges(
+            rng.integers(0, n_v, n_e), rng.integers(0, n_v, n_e),
+            rng.integers(0, T_MAX, n_e), None, n_vertices=n_v,
+            rng=np.random.default_rng(seed),
+        )
+        _GRAPH_CACHE[seed] = (g, build_tger(g, degree_cutoff=8,
+                                            n_time_buckets=8))
+    return _GRAPH_CACHE[seed]
+
+
+def _views_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+    )
+
+
+_METHOD = {
+    "index": (window_positions_host, em.index_ring_view,
+              em.advance_index_ring),
+    "hybrid": (heavy_window_positions_host, em.hybrid_ring_view,
+               em.advance_hybrid_ring),
+}
+
+
+def _advance_vs_cold(method, g, idx, w_a, w_b, capacity):
+    """(advanced, cold) ring views for the slide w_a -> w_b, or None when
+    the host bookkeeping would fall cold (backwards slide / overflow)."""
+    positions, build, advance = _METHOD[method]
+    lo_a, hi_a = positions(idx, w_a)
+    lo_b, hi_b = positions(idx, w_b)
+    shift = lo_b - lo_a
+    if not (0 <= shift <= capacity and hi_a - lo_a <= capacity
+            and hi_b - lo_b <= capacity):
+        return None
+    ring = build(g, idx, lo_a, hi_a, capacity=capacity)
+    advanced = advance(
+        g, idx, ring, lo_a, lo_b, hi_b,
+        capacity=capacity, delta_budget=min(rung(max(shift, 1)), capacity))
+    cold = build(g, idx, lo_b, hi_b, capacity=capacity)
+    return advanced, cold
+
+
+def _masked_rows(view):
+    m = np.asarray(view.mask)
+    return sorted(map(tuple, np.stack(
+        [np.asarray(f)[m] for f in view[:4]], axis=1).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 4),
+    method=st.sampled_from(["index", "hybrid"]),
+    lo=st.integers(0, T_MAX - 1),
+    width=st.integers(1, T_MAX // 2),
+    shift_t=st.integers(0, T_MAX // 2),
+    grow=st.integers(-100, 100),
+    cap_pow=st.integers(5, 10),
+)
+def test_ring_advance_bit_identical_to_cold_build(
+        seed, method, lo, width, shift_t, grow, cap_pow):
+    """THE ring identity: advancing is indistinguishable from rebuilding."""
+    g, idx = _graph(seed)
+    w_a = (lo, lo + width)
+    w_b = (lo + shift_t, max(lo + shift_t + 1, lo + shift_t + width + grow))
+    pair = _advance_vs_cold(method, g, idx, w_a, w_b, 1 << cap_pow)
+    if pair is None:  # out-of-envelope slides fall cold in the server
+        return
+    advanced, cold = pair
+    assert _views_equal(advanced, cold)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 4),
+    lo=st.integers(0, T_MAX - 1),
+    width=st.integers(1, T_MAX // 3),
+    cap_pow=st.integers(5, 10),
+)
+def test_index_ring_set_matches_classic_index_view(seed, lo, width, cap_pow):
+    """The ring's masked edge set equals ``index_view``'s under the same
+    budget — only slot order differs."""
+    g, idx = _graph(seed)
+    capacity = 1 << cap_pow
+    w = (lo, lo + width)
+    plo, phi = window_positions_host(idx, w)
+    if phi - plo > capacity:
+        return
+    ring = em.index_ring_view(g, idx, plo, phi, capacity=capacity)
+    classic = em.index_view(g, idx, w, capacity)
+    assert _masked_rows(ring) == _masked_rows(classic)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 4),
+    lo=st.integers(0, T_MAX - 1),
+    width=st.integers(1, T_MAX // 3),
+)
+def test_hybrid_ring_set_is_light_plus_heavy_in_window(seed, lo, width):
+    """The hybrid ring's masked set is exactly {light edges} ∪ {heavy edges
+    with in-window start} — the same coverage a completeness-budgeted
+    ``hybrid_view`` gathers per vertex."""
+    g, idx = _graph(seed)
+    w = (lo, lo + width)
+    plo, phi = heavy_window_positions_host(idx, w)
+    capacity = rung(max(phi - plo, 16))
+    ring = em.hybrid_ring_view(g, idx, plo, phi, capacity=capacity)
+
+    src, ts = np.asarray(g.src), np.asarray(g.t_start)
+    slot = np.asarray(idx.vertex_to_slot)
+    heavy_src = slot[src] >= 0
+    want = np.nonzero(
+        ~heavy_src | (heavy_src & (ts >= w[0]) & (ts <= w[1])))[0]
+    fields = [np.asarray(f) for f in (g.src, g.dst, g.t_start, g.t_end)]
+    want_rows = sorted(
+        map(tuple, np.stack([f[want] for f in fields], axis=1).tolist()))
+    assert _masked_rows(ring) == want_rows
+
+
+# ---------------------------------------------------------------------------
+# deterministic smoke (always runs; forced wrap-arounds and boundaries)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["index", "hybrid"])
+def test_ring_multi_lap_wraparound_chain(method):
+    """A chain of forward slides whose cumulative positional shift is many
+    multiples of a SMALL capacity: every slot wraps repeatedly, and each
+    advanced view still equals its cold rebuild bit-for-bit."""
+    g, idx = _graph(0)
+    positions, build, advance = _METHOD[method]
+
+    # widths sized so in-window counts stay under a deliberately tiny ring
+    capacity = 32
+    windows, t = [], 0
+    while t + 40 <= T_MAX:
+        windows.append((t, t + 40))
+        t += 25
+    lo, hi = positions(idx, windows[0])
+    assert hi - lo <= capacity, "smoke premise: narrow window fits tiny ring"
+    ring = build(g, idx, lo, hi, capacity=capacity)
+    total_shift = 0
+    for w in windows[1:]:
+        lo_n, hi_n = positions(idx, w)
+        if hi_n - lo_n > capacity or lo_n - lo > capacity:
+            # window too dense for the tiny ring: rebuild cold (the server's
+            # fallback) and keep sliding
+            ring, lo, hi = build(g, idx, lo_n, hi_n, capacity=capacity), lo_n, hi_n
+            continue
+        shift = lo_n - lo
+        ring = advance(
+            g, idx, ring, lo, lo_n, hi_n, capacity=capacity,
+            delta_budget=min(rung(max(shift, 1)), capacity))
+        total_shift += shift
+        cold = build(g, idx, lo_n, hi_n, capacity=capacity)
+        assert _views_equal(ring, cold), f"diverged at window {w}"
+        lo, hi = lo_n, hi_n
+    assert total_shift > 4 * capacity, "smoke premise: multiple full laps"
+
+
+@pytest.mark.parametrize("method", ["index", "hybrid"])
+def test_ring_full_capacity_shift_boundary(method):
+    """shift == capacity replaces every slot in one advance — the extreme
+    wrap — and must still equal the cold rebuild."""
+    g, idx = _graph(1)
+    positions, build, advance = _METHOD[method]
+    capacity = 64
+    w_a = (0, 50)
+    lo_a, hi_a = positions(idx, w_a)
+    # find a window whose position range starts exactly capacity later
+    host = {"index": idx.start_sorted, "hybrid": idx.heavy_start_sorted}[method]
+    starts = np.asarray(host)
+    lo_b = lo_a + capacity
+    if lo_b >= starts.size:
+        pytest.skip("graph too small for a full-capacity shift")
+    t_b = int(starts[lo_b])
+    w_b = (t_b, t_b + 30)
+    lo_b2, hi_b = positions(idx, w_b)
+    if lo_b2 - lo_a != capacity or hi_b - lo_b2 > capacity:
+        # duplicate start times can off-by-one the position; widen search
+        pytest.skip("no exact full-capacity alignment in this graph")
+    ring = build(g, idx, lo_a, hi_a, capacity=capacity)
+    advanced = advance(g, idx, ring, lo_a, lo_b2, hi_b,
+                       capacity=capacity, delta_budget=capacity)
+    cold = build(g, idx, lo_b2, hi_b, capacity=capacity)
+    assert _views_equal(advanced, cold)
+
+
+def test_ring_zero_shift_mask_only_update():
+    """A pure window-end change (shift == 0) re-masks without regathering:
+    still bit-identical to the cold build of the new range."""
+    g, idx = _graph(2)
+    lo, hi = window_positions_host(idx, (100, 300))
+    _, hi2 = window_positions_host(idx, (100, 450))
+    capacity = rung(max(hi2 - lo, 16))
+    ring = em.index_ring_view(g, idx, lo, hi, capacity=capacity)
+    advanced = em.advance_index_ring(
+        g, idx, ring, lo, lo, hi2, capacity=capacity, delta_budget=1)
+    cold = em.index_ring_view(g, idx, lo, hi2, capacity=capacity)
+    assert _views_equal(advanced, cold)
+
+
+def test_scan_ring_is_the_untouched_full_view():
+    """Scan's 'ring' is trivial: ring_view_for_plan returns the scan view
+    itself and the server reuses it across every advance."""
+    from repro.engine.plan import make_plan
+
+    g, idx = _graph(3)
+    edges, lo, hi, capacity = em.ring_view_for_plan(
+        g, idx, (0, T_MAX), make_plan("scan"))
+    assert (lo, hi, capacity) == (-1, -1, 0)
+    assert edges.src is g.src  # aliases the graph arrays, zero copy
