@@ -4,14 +4,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
-# CI marker: the long-horizon serving soak (tests/test_serving_soak.py)
-# drops from 220 to 60 advances under CI to bound wall clock.  GitHub
-# Actions sets CI=true already; export it here so local ci.sh runs match.
+# CI marker: the long-horizon serving soaks (tests/test_serving_soak.py:
+# 220 -> 60 advances; tests/test_multitenant.py: 110 -> 36 advances) are
+# reduced under CI to bound wall clock.  GitHub Actions sets CI=true
+# already; export it here so local ci.sh runs match.
 export CI="${CI:-1}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # smoke the perf trajectory: gather-once vs re-gather + FUSED incremental
-# sweeps (one-dispatch advances asserted against the dispatch-site log,
-# result-identity asserted before timing; emits BENCH_fixpoint.json at the
-# repo root, including the tiny-budget crossover regime)
+# sweeps + the multi-tenant 1/4/16-tenant queries-per-second regime
+# (one-dispatch advances asserted against the dispatch-site log at every
+# batch size, result-identity asserted before timing; emits
+# BENCH_fixpoint.json at the repo root, including the tiny-budget
+# crossover regime)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint

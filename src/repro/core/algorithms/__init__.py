@@ -10,19 +10,30 @@ from repro.core.algorithms.paths import (  # noqa: F401
 from repro.core.algorithms.bfs import (  # noqa: F401
     temporal_bfs,
     temporal_bfs_batched,
+    temporal_bfs_over_view,
 )
 from repro.core.algorithms.connectivity import (  # noqa: F401
     connected_components_batched,
     temporal_cc,
     temporal_cc_batched,
+    temporal_cc_over_view,
 )
-from repro.core.algorithms.kcore import temporal_kcore, temporal_coreness  # noqa: F401
+from repro.core.algorithms.kcore import (  # noqa: F401
+    temporal_kcore,
+    temporal_kcore_batched,
+    temporal_kcore_over_view,
+    temporal_coreness,
+)
 from repro.core.algorithms.pagerank import (  # noqa: F401
     temporal_pagerank,
     temporal_pagerank_batched,
     temporal_pagerank_over_view,
 )
-from repro.core.algorithms.centrality import temporal_betweenness  # noqa: F401
+from repro.core.algorithms.centrality import (  # noqa: F401
+    temporal_betweenness,
+    temporal_betweenness_batched,
+    temporal_betweenness_over_view,
+)
 from repro.core.algorithms.reachability import (  # noqa: F401
     overlaps_reachability,
     overlaps_reachability_batched,

@@ -15,8 +15,16 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.edgemap import INT_INF, ensure_plan, frontier_from_sources
+from repro.core.edgemap import (
+    INT_INF,
+    EdgeView,
+    ensure_plan,
+    frontier_from_sources,
+    union_window,
+    view_for_plan,
+)
 from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
@@ -74,33 +82,39 @@ def temporal_bfs(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pred", "max_rounds")
+    jax.jit, static_argnames=("n_vertices", "pred", "max_rounds")
 )
-def temporal_bfs_batched(
-    g: TemporalGraph,
-    source,
-    windows,                        # i32[W, 2] query windows
-    tger: Optional[TGERIndex] = None,
+def temporal_bfs_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
     *,
+    plan: AccessPlan,
+    n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
-    plan: Optional[AccessPlan] = None,
     max_rounds: int = 0,
+    init=None,
 ):
-    """Batched multi-window BFS (DESIGN.md §6): (hops[W, V], arrival[W, V])
-    from ONE union-window gather — per-window masks over the shared view,
-    [W, V] min-combines per round.  Row w is bit-identical to
-    ``temporal_bfs(g, source, windows[w], ...)`` under the same plan: hop
-    counts are per-row exact because a converged row's frontier is empty, so
-    its hops never update while other rows keep relaxing."""
-    runner = FixpointRunner.for_windows(
-        g, tger, windows, plan=ensure_plan(plan), max_rounds=max_rounds
+    """Batched min-hop BFS over a PREBUILT (union-covering) edge view — the
+    uniform multi-source entry point (DESIGN.md §7.4): row q solves
+    ``(sources[q], windows[q])``, so one gathered (or ring-advanced) view
+    answers a whole (source × window) batch.
+
+    ``init`` must be None: hop counts are ROUND-indexed (hops[v] = the
+    first round arrival improves), so a warm-started run cannot reproduce
+    the cold hop numbering — the serving layer refuses bfs warm starts
+    for exactly this reason (DESIGN.md §7.4 soundness table)."""
+    if init is not None:
+        raise ValueError(
+            "temporal_bfs_over_view does not accept a warm init: hop "
+            "counts are round-indexed and only exact from a cold start")
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, sources=sources, plan=plan,
+        n_vertices=n_vertices, max_rounds=max_rounds,
     )
-    V = g.n_vertices
-    W = runner.windows.shape[0]
-    arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(
-        runner.windows[:, 0])
-    hops0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(0)
-    frontier0 = jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
+    arrival0 = runner.seeded(INT_INF, runner.windows[:, 0])
+    hops0 = runner.seeded(INT_INF, 0)
+    frontier0 = runner.source_frontier()
     relax = _bfs_relax(pred)
 
     def cond(state):
@@ -120,4 +134,39 @@ def temporal_bfs_batched(
     return hops, arrival
 
 
-__all__ = ["temporal_bfs", "temporal_bfs_batched"]
+@functools.partial(
+    jax.jit, static_argnames=("pred", "max_rounds")
+)
+def temporal_bfs_batched(
+    g: TemporalGraph,
+    source,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+):
+    """Batched multi-window BFS (DESIGN.md §6): (hops[W, V], arrival[W, V])
+    from ONE union-window gather — per-window masks over the shared view,
+    [W, V] min-combines per round.  Row w is bit-identical to
+    ``temporal_bfs(g, source, windows[w], ...)`` under the same plan: hop
+    counts are per-row exact because a converged row's frontier is empty, so
+    its hops never update while other rows keep relaxing.  ``source`` must
+    be a SCALAR — arrays are rejected rather than silently reinterpreted
+    (pre-§7.4 multi-seed vs the new per-row source axis); use
+    ``temporal_bfs_over_view(sources=...)`` for per-row sources."""
+    if np.ndim(source) != 0:
+        raise ValueError(
+            "temporal_bfs_batched takes a scalar source; use "
+            "temporal_bfs_over_view(sources=[...]) for per-row sources")
+    plan = ensure_plan(plan)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    return temporal_bfs_over_view(
+        edges, windows, sources=source, plan=plan, n_vertices=g.n_vertices,
+        pred=pred, max_rounds=max_rounds,
+    )
+
+
+__all__ = ["temporal_bfs", "temporal_bfs_batched", "temporal_bfs_over_view"]

@@ -7,7 +7,15 @@ dependencies delta accumulate in reverse bucket order.  Exact when arrivals
 strictly increase along optimal paths (strict predicate / positive
 durations) and bucket count >= distinct arrival times; the paper's T.BC
 similarly counts minimal temporal paths (it uses shortest-duration paths;
-we count earliest-arrival paths — noted in DESIGN.md)."""
+we count earliest-arrival paths — noted in DESIGN.md).
+
+Execution rides the gather-once FixpointRunner view (DESIGN.md §7):
+``temporal_betweenness_over_view`` is the uniform multi-source entry point
+(DESIGN.md §7.4) — row q computes the single-source dependency vector of
+``(sources[q], windows[q])`` over ONE prebuilt (union-covering) view, with
+the EA upsweep running as one batched fixpoint across all rows;
+``temporal_betweenness`` sums those rows (the classic BC reduction) and
+``temporal_betweenness_batched`` serves per-window rows for one source."""
 from __future__ import annotations
 
 import functools
@@ -16,8 +24,15 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms.paths import earliest_arrival
-from repro.core.edgemap import INT_INF, ensure_plan, segment_combine
+from repro.core.algorithms.paths import earliest_arrival_over_view
+from repro.core.edgemap import (
+    INT_INF,
+    EdgeView,
+    ensure_plan,
+    segment_combine,
+    union_window,
+    view_for_plan,
+)
 from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
@@ -25,35 +40,16 @@ from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("pred", "max_rounds", "n_buckets"),
-)
-def _betweenness_single(
-    g: TemporalGraph,
-    source,
-    window,
-    tger,
-    pred: OrderingPredicateType,
-    plan,
-    max_rounds: int,
-    n_buckets: int,
-):
-    V, P = g.n_vertices, n_buckets
-    ta, tb = jnp.asarray(window[0], jnp.int32), jnp.asarray(window[1], jnp.int32)
-    t = earliest_arrival(
-        g, source, (ta, tb), tger,
-        pred=pred, plan=plan, max_rounds=max_rounds,
-    )
+def _brandes_row(edges, valid_row, window, source, t, P: int,
+                 pred: OrderingPredicateType, V: int):
+    """One (source, window) row's dependency vector over the hoisted view:
+    ``t`` is the row's earliest-arrival labels, ``valid_row`` its window
+    validity mask — both precomputed outside (and vmapped over rows)."""
+    ta, tb = window[0], window[1]
     reached = t < INT_INF
-
-    # hoisted view + window mask (the EA call above gathered its own view;
-    # Brandes' forward/backward passes share this one)
-    runner = FixpointRunner.for_query(g, tger, (ta, tb), plan=plan)
-    edges = runner.edges
     t_src = t[edges.src]
     opt = (
-        runner.valid
+        valid_row
         & (t_src < INT_INF)
         & edge_follows(pred, t_src, edges.t_start, edges.t_end)
         & (edges.t_end == t[edges.dst])
@@ -94,6 +90,51 @@ def _betweenness_single(
     return delta.at[source].set(0.0)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_vertices", "pred", "max_rounds", "n_buckets"),
+)
+def temporal_betweenness_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
+    pred: OrderingPredicateType = OrderingPredicateType.STRICTLY_SUCCEEDS,
+    max_rounds: int = 0,
+    n_buckets: int = 64,
+    init=None,
+) -> jax.Array:
+    """delta[q, v] = dependency of v on sources[q] within windows[q] — the
+    uniform multi-source entry point over a PREBUILT (union-covering) view.
+    The EA upsweep runs as ONE batched fixpoint over all rows; the
+    forward/backward Brandes passes are vmapped over the row axis.  Summing
+    rows that share a window gives classic BC (``temporal_betweenness``).
+
+    ``init`` must be None: dependencies are not a monotone fixpoint (they
+    are a two-pass DAG accumulation), so there is no sound warm start —
+    the serving layer refuses betweenness warm starts (DESIGN.md §7.4)."""
+    if init is not None:
+        raise ValueError(
+            "temporal_betweenness_over_view does not accept a warm init: "
+            "Brandes dependencies are recomputed per run")
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, sources=sources, plan=plan,
+        n_vertices=n_vertices, max_rounds=max_rounds,
+    )
+    if runner.sources is None:
+        raise ValueError("temporal_betweenness_over_view needs sources=")
+    t = earliest_arrival_over_view(
+        edges, runner.windows, sources=runner.sources, plan=plan,
+        n_vertices=n_vertices, pred=pred, max_rounds=max_rounds,
+    )                                                  # [Q, V]
+    return jax.vmap(
+        lambda w, s, ok, t_row: _brandes_row(
+            edges, ok, (w[0], w[1]), s, t_row, n_buckets, pred, n_vertices)
+    )(runner.windows, runner.sources, runner.valid, t)
+
+
 def temporal_betweenness(
     g: TemporalGraph,
     sources,
@@ -105,10 +146,46 @@ def temporal_betweenness(
     max_rounds: int = 0,
     n_buckets: int = 64,
 ) -> jax.Array:
-    """BC[v] = sum over sources of the dependency of v (Brandes)."""
+    """BC[v] = sum over sources of the dependency of v (Brandes).  The
+    source batch runs as rows of ONE ``temporal_betweenness_over_view``
+    call — a single union gather instead of a per-source view build."""
     plan = ensure_plan(plan)
-    fn = lambda s: _betweenness_single(
-        g, s, window, tger, pred, plan, max_rounds, n_buckets
+    sources = jnp.asarray(sources, jnp.int32).reshape(-1)
+    edges = view_for_plan(g, tger, window, plan)
+    windows = jnp.broadcast_to(
+        jnp.asarray([window[0], window[1]], jnp.int32), (sources.shape[0], 2))
+    deltas = temporal_betweenness_over_view(
+        edges, windows, sources=sources, plan=plan, n_vertices=g.n_vertices,
+        pred=pred, max_rounds=max_rounds, n_buckets=n_buckets,
     )
-    deltas = jax.vmap(fn)(jnp.asarray(sources))
     return jnp.sum(deltas, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("pred", "max_rounds", "n_buckets"))
+def temporal_betweenness_batched(
+    g: TemporalGraph,
+    source,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    pred: OrderingPredicateType = OrderingPredicateType.STRICTLY_SUCCEEDS,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+    n_buckets: int = 64,
+) -> jax.Array:
+    """delta[w, v] = dependency rows of ONE source across W windows from a
+    single union-window gather (the serving-shaped batch)."""
+    plan = ensure_plan(plan)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    return temporal_betweenness_over_view(
+        edges, windows, sources=source, plan=plan, n_vertices=g.n_vertices,
+        pred=pred, max_rounds=max_rounds, n_buckets=n_buckets,
+    )
+
+
+__all__ = [
+    "temporal_betweenness",
+    "temporal_betweenness_batched",
+    "temporal_betweenness_over_view",
+]

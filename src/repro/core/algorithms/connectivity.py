@@ -15,9 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.edgemap import (
+    EdgeView,
     combine_for_plan,
     combine_windows_for_plan,
     ensure_plan,
+    union_window,
+    view_for_plan,
 )
 from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
@@ -69,6 +72,68 @@ def temporal_cc(
     return labels
 
 
+@functools.partial(jax.jit, static_argnames=("n_vertices", "max_rounds"))
+def temporal_cc_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    sources=None,                   # accepted for signature uniformity: must be None
+    max_rounds: int = 0,
+    init: Optional[jax.Array] = None,   # [Q, V] warm-start labels
+) -> jax.Array:
+    """Batched hash-min label propagation over a PREBUILT (union-covering)
+    edge view — the uniform entry point (DESIGN.md §7.4).  Connected
+    components are source-free, so ``sources`` must be None (each row is a
+    window-only query).
+
+    ``init`` warm-starts the labels.  EXACT (bit-identical to a cold run)
+    whenever every init label is an upper bound on the row's true
+    component minimum AND is itself the id of a vertex in the same
+    component — e.g. the converged labels of any window CONTAINED in the
+    row's window (its components are sub-components, and a sub-component
+    minimum is a member vertex's id).  Min-label propagation converges to
+    the per-component minimum of the init labels, which under that
+    precondition is exactly the component minimum."""
+    if sources is not None:
+        raise ValueError("temporal_cc is source-free: pass sources=None")
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, plan=plan, n_vertices=n_vertices,
+        max_rounds=max_rounds,
+    )
+    valid = runner.valid                               # [Q, E']
+    V = n_vertices
+    Q = runner.windows.shape[0]
+    labels0 = (
+        jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (Q, V)) if init is None
+        else jnp.asarray(init, jnp.int32)
+    )
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state, rnd):
+        labels, _ = state
+        lab_src = labels[:, edges.src]                 # [Q, E']
+        lab_dst = labels[:, edges.dst]
+        fwd = combine_windows_for_plan(plan, lab_src, edges.dst, V, "min",
+                                       masks=valid,
+                                       use_layout=runner.use_layout)
+        bwd = combine_windows_for_plan(plan, lab_dst, edges.src, V, "min",
+                                       masks=valid)
+        new_labels = jnp.minimum(labels, jnp.minimum(fwd, bwd))
+        new_labels = jnp.minimum(
+            new_labels, jnp.take_along_axis(new_labels, new_labels, axis=1)
+        )
+        changed = jnp.any(new_labels != labels)
+        return new_labels, changed
+
+    labels, _ = runner.run(cond, body, (labels0, jnp.bool_(True)))
+    return labels
+
+
 @functools.partial(jax.jit, static_argnames=("max_rounds",))
 def temporal_cc_batched(
     g: TemporalGraph,
@@ -86,40 +151,21 @@ def temporal_cc_batched(
     propagation is monotone non-increasing and idempotent, so a converged
     row rides extra rounds (forced by slower rows) as a no-op."""
     plan_ = ensure_plan(plan)
-    runner = FixpointRunner.for_windows(
-        g, tger, windows, plan=plan_, max_rounds=max_rounds
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan_)
+    return temporal_cc_over_view(
+        edges, windows, plan=plan_, n_vertices=g.n_vertices,
+        max_rounds=max_rounds,
     )
-    edges, valid = runner.edges, runner.valid          # valid: [W, E']
-    V = g.n_vertices
-    W = runner.windows.shape[0]
-    labels0 = jnp.broadcast_to(jnp.arange(V, dtype=jnp.int32), (W, V))
-
-    def cond(state):
-        _, changed = state
-        return changed
-
-    def body(state, rnd):
-        labels, _ = state
-        lab_src = labels[:, edges.src]                 # [W, E']
-        lab_dst = labels[:, edges.dst]
-        fwd = combine_windows_for_plan(plan_, lab_src, edges.dst, V, "min",
-                                       masks=valid,
-                                       use_layout=runner.use_layout)
-        bwd = combine_windows_for_plan(plan_, lab_dst, edges.src, V, "min",
-                                       masks=valid)
-        new_labels = jnp.minimum(labels, jnp.minimum(fwd, bwd))
-        new_labels = jnp.minimum(
-            new_labels, jnp.take_along_axis(new_labels, new_labels, axis=1)
-        )
-        changed = jnp.any(new_labels != labels)
-        return new_labels, changed
-
-    labels, _ = runner.run(cond, body, (labels0, jnp.bool_(True)))
-    return labels
 
 
 # the ROADMAP/API-facing alias: "connected components" is the workload name,
 # temporal_cc_batched the module-consistent one.
 connected_components_batched = temporal_cc_batched
 
-__all__ = ["temporal_cc", "temporal_cc_batched", "connected_components_batched"]
+__all__ = [
+    "temporal_cc",
+    "temporal_cc_batched",
+    "temporal_cc_over_view",
+    "connected_components_batched",
+]

@@ -12,7 +12,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.edgemap import ensure_plan, segment_combine
+from repro.core.edgemap import (
+    EdgeView,
+    ensure_plan,
+    segment_combine,
+    union_window,
+    view_for_plan,
+)
 from repro.engine.fixpoint import FixpointRunner
 from repro.engine.plan import AccessPlan
 from repro.core.temporal_graph import TemporalGraph
@@ -56,6 +62,87 @@ def temporal_kcore(
 
     alive, _ = runner.run(cond, body, (alive0, jnp.bool_(True)))
     return alive
+
+
+@functools.partial(jax.jit, static_argnames=("n_vertices", "max_rounds"))
+def temporal_kcore_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    k,
+    sources=None,                   # accepted for signature uniformity: must be None
+    max_rounds: int = 0,
+    init=None,
+) -> jax.Array:
+    """Batched k-core peeling over a PREBUILT (union-covering) edge view —
+    the uniform entry point (DESIGN.md §7.4): alive[q, v] = membership of
+    the temporal k-core within windows[q].  Source-free (``sources`` must
+    be None); ``k`` is shared by all rows of the batch (queries with
+    different k are separate batch groups).
+
+    ``init`` must be None: peeling only REMOVES vertices, so a warm alive
+    set from another window could never resurrect a vertex the wider
+    window's extra edges keep alive — the serving layer refuses kcore warm
+    starts (DESIGN.md §7.4 soundness table)."""
+    if sources is not None:
+        raise ValueError("temporal_kcore is source-free: pass sources=None")
+    if init is not None:
+        raise ValueError(
+            "temporal_kcore_over_view does not accept a warm init: peeling "
+            "cannot resurrect vertices, so only the all-alive start is exact")
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, plan=plan, n_vertices=n_vertices,
+        max_rounds=max_rounds,
+    )
+    valid = runner.valid                               # [Q, E']
+    V = n_vertices
+    Q = runner.windows.shape[0]
+    alive0 = jnp.ones((Q, V), dtype=bool)
+    k = jnp.asarray(k, jnp.int32)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state, rnd):
+        alive, _ = state
+        live = valid & alive[:, edges.src] & alive[:, edges.dst]   # [Q, E']
+        ones = live.astype(jnp.int32)
+        deg = jax.vmap(
+            lambda o: segment_combine(o, edges.dst, V, "sum")
+            + segment_combine(o, edges.src, V, "sum")
+        )(ones)
+        new_alive = alive & (deg >= k)
+        changed = jnp.any(new_alive != alive)
+        return new_alive, changed
+
+    alive, _ = runner.run(cond, body, (alive0, jnp.bool_(True)))
+    return alive
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def temporal_kcore_batched(
+    g: TemporalGraph,
+    k,
+    windows,                        # i32[W, 2] query windows
+    tger: Optional[TGERIndex] = None,
+    *,
+    plan: Optional[AccessPlan] = None,
+    max_rounds: int = 0,
+) -> jax.Array:
+    """Batched multi-window k-core: alive[w, v] over all W windows from ONE
+    union-window gather.  Row w matches ``temporal_kcore(g, k, windows[w],
+    ...)`` under the same plan (peeling is per-row monotone; a converged
+    row rides extra rounds as a no-op)."""
+    plan = ensure_plan(plan)
+    windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
+    edges = view_for_plan(g, tger, union_window(windows), plan)
+    return temporal_kcore_over_view(
+        edges, windows, plan=plan, n_vertices=g.n_vertices, k=k,
+        max_rounds=max_rounds,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k_max",))

@@ -54,22 +54,27 @@ def temporal_pagerank(
 )
 def temporal_pagerank_over_view(
     edges: EdgeView,
-    windows: jax.Array,             # i32[W, 2]
+    windows: jax.Array,             # i32[Q, 2]
     *,
     plan: AccessPlan,
     n_vertices: int,
+    sources=None,                   # accepted for signature uniformity: must be None
     damping: float = 0.85,
     n_iters: int = 100,
-    init: Optional[jax.Array] = None,   # [W, V] warm start
+    init: Optional[jax.Array] = None,   # [Q, V] warm start
 ) -> jax.Array:
     """The batched power iteration over a PREBUILT (union-covering) edge
     view — the piece the incremental sliding-window server calls on its
-    advanced view.  ``init`` warm-starts the iteration (PageRank's damped
+    advanced view.  PageRank is source-free, so ``sources`` must be None
+    (signature uniformity with the other ``*_over_view`` entry points,
+    DESIGN.md §7.4).  ``init`` warm-starts the iteration (PageRank's damped
     iteration contracts to a unique fixed point, so a warm start changes
     only the residual after n_iters, not the limit — re-iterating from the
     previous sweep's nearby answer converges faster, but the finite-iteration
     output is NOT bit-identical to a cold uniform start; pass ``init=None``
     for the bit-reproducible serving mode)."""
+    if sources is not None:
+        raise ValueError("temporal_pagerank is source-free: pass sources=None")
     runner = FixpointRunner(
         edges, windows=windows, plan=plan, n_vertices=n_vertices,
     )

@@ -15,6 +15,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.edgemap import (
     INT_INF,
@@ -127,48 +128,43 @@ def earliest_arrival_multi(g, sources, window, tger=None, **kw):
 )
 def earliest_arrival_over_view(
     edges: EdgeView,
-    source,
-    windows: jax.Array,             # i32[W, 2]
+    windows: jax.Array,             # i32[Q, 2]
     *,
     plan: AccessPlan,
     n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
     pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
     max_rounds: int = 0,
     visit_once: bool = False,
-    init_arrival: Optional[jax.Array] = None,   # [W, V] warm start
-    init_frontier: Optional[jax.Array] = None,  # bool[W, V]
+    init: Optional[jax.Array] = None,   # [Q, V] warm-start arrival
     with_rounds: bool = False,
 ):
-    """The batched EA fixpoint over a PREBUILT (union-covering) edge view.
+    """The batched EA fixpoint over a PREBUILT (union-covering) edge view —
+    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
+    ``(sources[q], windows[q])``, so one gathered view answers a whole
+    (source × window) batch; a scalar ``sources`` broadcasts (the
+    single-tenant sweep).
 
     This is the piece the incremental sliding-window server reuses: it
-    advances one ring view across sweeps and runs only the windows that
-    need solving.  ``init_arrival``/``init_frontier`` warm-start the
-    fixpoint — sound whenever every finite init label witnesses a real
-    temporal path inside its row's window (EA is a monotone min fixpoint:
-    relaxation from any sound over-approximation converges to the same
-    fixpoint, provided the frontier seeds every finite-label vertex).
-    ``with_rounds=True`` returns ``(arrival, rounds)`` for serving
-    observability.
+    advances one ring view across sweeps and runs only the rows that need
+    solving.  ``init`` warm-starts the fixpoint with [Q, V] arrival labels
+    (frontier = the finite labels) — sound whenever every finite init
+    label witnesses a real temporal path inside its row's window (EA is a
+    monotone min fixpoint: relaxation from any sound over-approximation
+    converges to the same fixpoint, provided the frontier seeds every
+    finite-label vertex).  ``with_rounds=True`` returns ``(arrival,
+    rounds)`` for serving observability.
     """
     runner = FixpointRunner.for_view(
-        edges, windows=windows, plan=plan, n_vertices=n_vertices,
-        max_rounds=max_rounds,
+        edges, windows=windows, sources=sources, plan=plan,
+        n_vertices=n_vertices, max_rounds=max_rounds,
     )
-    V = n_vertices
-    W = runner.windows.shape[0]
-    if init_arrival is None:
-        arrival0 = jnp.full((W, V), INT_INF, jnp.int32).at[:, source].set(
-            runner.windows[:, 0])
+    if init is None:
+        arrival0 = runner.seeded(INT_INF, runner.windows[:, 0])
+        frontier0 = runner.source_frontier()
     else:
-        arrival0 = init_arrival
-    if init_frontier is None:
-        frontier0 = (
-            jnp.zeros((W, V), dtype=bool).at[:, source].set(True)
-            if init_arrival is None else arrival0 < INT_INF
-        )
-    else:
-        frontier0 = init_frontier
+        arrival0 = init
+        frontier0 = arrival0 < INT_INF
     relax = _ea_relax(pred)
 
     def cond(state):
@@ -219,12 +215,26 @@ def earliest_arrival_batched(
     subgraph-per-interval model does across time-series intervals.  Row w is
     bit-identical to ``earliest_arrival(g, source, windows[w], ...)`` under
     the same (union-budgeted) plan.  W is static (one compilation per sweep
-    width); converged windows ride the remaining rounds as no-ops."""
+    width); converged windows ride the remaining rounds as no-ops.
+
+    ``source`` must be a SCALAR (shared by every row).  Arrays are
+    rejected rather than reinterpreted: pre-§7.4 code seeded every row at
+    ALL of an array's vertices (multi-seed), the new source axis would
+    seed row w at source[w] — a silent numerical difference.  Use
+    ``earliest_arrival`` / ``earliest_arrival_multi`` for multi-seed
+    queries and ``earliest_arrival_over_view(sources=...)`` for explicit
+    per-row sources."""
+    if np.ndim(source) != 0:
+        raise ValueError(
+            "earliest_arrival_batched takes a scalar source; use "
+            "earliest_arrival_over_view(sources=[...]) for per-row sources "
+            "or earliest_arrival(g, [s1, s2, ...], ...) for a multi-seed "
+            "single query")
     plan = ensure_plan(plan)
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
     edges = view_for_plan(g, tger, union_window(windows), plan)
     return earliest_arrival_over_view(
-        edges, source, windows, plan=plan, n_vertices=g.n_vertices,
+        edges, windows, sources=source, plan=plan, n_vertices=g.n_vertices,
         pred=pred, max_rounds=max_rounds, visit_once=visit_once,
     )
 

@@ -116,32 +116,35 @@ def overlaps_reachability(
 @functools.partial(jax.jit, static_argnames=("n_vertices", "max_rounds"))
 def overlaps_reachability_over_view(
     edges: EdgeView,
-    source,
-    windows: jax.Array,             # i32[W, 2]
+    windows: jax.Array,             # i32[Q, 2]
     *,
     plan: AccessPlan,
     n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
     max_rounds: int = 0,
-    init=None,                      # optional ([W, V] end, [W, V] start)
+    init=None,                      # optional ([Q, V] end, [Q, V] start)
 ):
     """Batched overlaps fixpoints over a PREBUILT (union-covering) view —
-    the piece the incremental sliding-window server calls on its advanced
-    view.  Per-window validity is precomputed once ([W, E']); the fixpoint
-    is vmapped over its rows."""
-    runner = FixpointRunner(
-        edges, windows=windows, plan=plan, n_vertices=n_vertices,
-        max_rounds=max_rounds,
+    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
+    ``(sources[q], windows[q])``, the source axis vmapped alongside the
+    window axis.  Per-window validity is precomputed once ([Q, E']); the
+    fixpoint is vmapped over its rows."""
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, sources=sources, plan=plan,
+        n_vertices=n_vertices, max_rounds=max_rounds,
     )
+    if runner.sources is None:
+        raise ValueError("overlaps_reachability_over_view needs sources=")
     if init is None:
         return jax.vmap(
-            lambda w, ok: _solve_window(
-                edges, ok, (w[0], w[1]), source, n_vertices, runner.max_rounds)
-        )(runner.windows, runner.valid)
+            lambda w, s, ok: _solve_window(
+                edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds)
+        )(runner.windows, runner.sources, runner.valid)
     return jax.vmap(
-        lambda w, ok, e0, s0: _solve_window(
-            edges, ok, (w[0], w[1]), source, n_vertices, runner.max_rounds,
+        lambda w, s, ok, e0, s0: _solve_window(
+            edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds,
             init=(e0, s0))
-    )(runner.windows, runner.valid, init[0], init[1])
+    )(runner.windows, runner.sources, runner.valid, init[0], init[1])
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds",))
@@ -162,6 +165,6 @@ def overlaps_reachability_batched(
     windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
     edges = view_for_plan(g, tger, union_window(windows), plan)
     return overlaps_reachability_over_view(
-        edges, source, windows, plan=plan, n_vertices=g.n_vertices,
+        edges, windows, sources=source, plan=plan, n_vertices=g.n_vertices,
         max_rounds=max_rounds,
     )

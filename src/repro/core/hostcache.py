@@ -10,11 +10,19 @@ Pallas tile layout.  They all want the same cache discipline:
   * pin a strong reference to each keyed array and re-check with ``is``
     on every hit, so a recycled ``id()`` after garbage collection can
     never alias a stale entry;
-  * bounded FIFO eviction (these are per-graph artifacts; a handful of
-    live graphs is the realistic working set).
+  * bounded LRU eviction.  These are per-graph/per-index artifacts, and a
+    handful of live graphs is the realistic working set — but a
+    multi-tenant serving horizon keeps the SAME few graphs hot while
+    churning through plan/window-shaped keys (the per-vertex budget cache
+    keys on window bounds too), so eviction must favour the entries that
+    are actually being re-read.  LRU (recency, not insertion order) keeps
+    the long-horizon working set resident under the same hard cap FIFO
+    gave: host memory stays bounded no matter how many advances a tenant
+    batch lives through.
 
 ``identity_cache`` packages that discipline once.  Non-array arguments
-participate in the key by VALUE (e.g. tile shapes), arrays by identity.
+participate in the key by VALUE (e.g. tile shapes, window bounds), arrays
+by identity.
 """
 from __future__ import annotations
 
@@ -31,7 +39,9 @@ def _is_array(a) -> bool:
 
 def identity_cache(max_entries: int = 16) -> Callable:
     """Decorator: memoize ``fn(*args)`` keyed by the identity of its array
-    arguments (value for non-arrays), strong-ref-pinned, FIFO-bounded."""
+    arguments (value for non-arrays), strong-ref-pinned, LRU-bounded at
+    ``max_entries`` (a hard cap — long multi-tenant serving horizons
+    cannot grow host memory without bound)."""
 
     def deco(fn):
         cache: dict = {}
@@ -45,15 +55,26 @@ def identity_cache(max_entries: int = 16) -> Callable:
             if hit is not None and all(
                 (p is a) for p, a in zip(hit[0], args) if p is not None
             ):
+                # LRU touch: python dicts iterate in insertion order, so
+                # re-inserting moves the entry to the back of the
+                # eviction queue (front = least recently used).
+                del cache[key]
+                cache[key] = hit
                 return hit[1]
+            if hit is not None:
+                # id() collision with a dead array: the pinned ref no
+                # longer matches, so the entry is stale — drop it rather
+                # than letting it shadow the fresh value.
+                del cache[key]
             value = fn(*args)
-            if len(cache) >= max_entries:
+            while len(cache) >= max_entries:
                 cache.pop(next(iter(cache)))
             pins = tuple(a if _is_array(a) else None for a in args)
             cache[key] = (pins, value)
             return value
 
         wrapped.cache = cache  # introspection for tests
+        wrapped.max_entries = max_entries
         return wrapped
 
     return deco

@@ -14,8 +14,15 @@ from repro.engine.plan import (  # noqa: F401
     heavy_window_budget,
     make_plan,
     per_vertex_window_budget,
+    plan_batch,
     plan_query,
     rung,
+)
+from repro.engine.queries import (  # noqa: F401
+    QueryBatch,
+    QueryRow,
+    QuerySpec,
+    SOURCE_FREE,
 )
 from repro.engine.backends import (  # noqa: F401
     ExecutionBackend,
@@ -31,7 +38,12 @@ __all__ = [
     "FixpointRunner",
     "FixpointMetrics",
     "AccessPlan",
+    "QueryBatch",
+    "QueryRow",
+    "QuerySpec",
+    "SOURCE_FREE",
     "plan_query",
+    "plan_batch",
     "make_plan",
     "decision_for",
     "per_vertex_window_budget",

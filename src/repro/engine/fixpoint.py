@@ -23,13 +23,19 @@ O(budget) the plan promised.  The runner hoists all of it:
     on request (it costs an extra segment-sum most algorithms discard).
 
 The runner works identically for single-window ([V] state) and batched
-([W, V] state) execution — the batched path is how ``*_batched`` variants
+([Q, V] state) execution — the batched path is how ``*_batched`` variants
 and the incremental sliding-window server share one union-window view.
-``for_view`` wraps views the runner did not build — in particular the
-server's ring-buffer views, advanced in place across sweeps (DESIGN.md
-§7.3).  ``run(with_rounds=True)`` / ``run_with_metrics`` export the
-``touched``-driven convergence record (:class:`FixpointMetrics`) for
-serving observability.
+Since the multi-tenant refactor the batched row axis carries a **source
+axis vmapped alongside the window axis** (DESIGN.md §7.4): each row q of
+a batched run owns its own ``(source, window)`` pair, so one gathered
+view answers a whole (algorithm × source × window) query batch —
+``sources=`` normalizes a scalar / [Q] vector onto the row axis and the
+``seeded`` / ``source_frontier`` helpers build the per-row inits every
+frontier algorithm starts from.  ``for_view`` wraps views the runner did
+not build — in particular the server's ring-buffer views, advanced in
+place across sweeps (DESIGN.md §7.3).  ``run(with_rounds=True)`` /
+``run_with_metrics`` export the ``touched``-driven convergence record
+(:class:`FixpointMetrics`) for serving observability.
 """
 from __future__ import annotations
 
@@ -76,7 +82,8 @@ class FixpointRunner:
         edges,                          # EdgeView (prebuilt)
         window=None,                    # (ta, tb) — single-window mode
         *,
-        windows=None,                   # i32[W, 2] — batched mode
+        windows=None,                   # i32[Q, 2] — batched mode
+        sources=None,                   # scalar | i32[Q] — batched row sources
         plan: AccessPlan,
         n_vertices: int,
         direction: str = "out",
@@ -101,6 +108,17 @@ class FixpointRunner:
         if self.batched:
             self.windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
             self.window = None
+            # the source axis rides the row axis: rows[q] = (sources[q],
+            # windows[q]) — a scalar source broadcasts over every row (the
+            # pre-multi-tenant single-tenant sweep), a [Q] vector gives each
+            # row its own seed vertex (DESIGN.md §7.4).
+            if sources is None:
+                self.sources = None
+            else:
+                s = jnp.asarray(sources, jnp.int32)
+                self.sources = jnp.broadcast_to(
+                    s.reshape(-1) if s.ndim else s,
+                    (self.windows.shape[0],))
             if check_window:
                 self.valid = jax.vmap(
                     lambda w: edges.mask
@@ -115,6 +133,7 @@ class FixpointRunner:
             tb = jnp.asarray(window[1], jnp.int32)
             self.window = (ta, tb)
             self.windows = None
+            self.sources = None
             self.valid = (
                 edges.mask & in_window(edges.t_start, edges.t_end, ta, tb)
                 if check_window else edges.mask
@@ -152,22 +171,47 @@ class FixpointRunner:
         tger,
         windows,
         *,
+        sources=None,
         plan: Optional[AccessPlan] = None,
         direction: str = "out",
         check_window: bool = True,
         max_rounds: int = 0,
     ) -> "FixpointRunner":
-        """Batched runner: ONE union-window view serves all W windows."""
+        """Batched runner: ONE union-window view serves all Q rows."""
         from repro.core.edgemap import ensure_plan, union_window, view_for_plan
 
         plan = ensure_plan(plan)
         windows = jnp.asarray(windows, jnp.int32).reshape(-1, 2)
         edges = view_for_plan(g, tger, union_window(windows), plan)
         return cls(
-            edges, windows=windows, plan=plan, n_vertices=g.n_vertices,
-            direction=direction, check_window=check_window,
-            max_rounds=max_rounds,
+            edges, windows=windows, sources=sources, plan=plan,
+            n_vertices=g.n_vertices, direction=direction,
+            check_window=check_window, max_rounds=max_rounds,
         )
+
+    # -- per-row source seeding (the vmapped source axis, DESIGN.md §7.4) --
+
+    def seeded(self, fill, value, dtype=jnp.int32) -> jax.Array:
+        """[Q, V] init builder for the batched row axis: every entry is
+        ``fill`` except position ``(q, sources[q])`` which holds ``value``
+        (scalar or [Q], e.g. each row's window start).  This is the init
+        every frontier relaxation starts from, with the source axis and the
+        window axis varying together per row."""
+        if not self.batched or self.sources is None:
+            raise ValueError("seeded() needs batched mode with sources=")
+        Q = self.windows.shape[0]
+        rows = jnp.arange(Q, dtype=jnp.int32)
+        base = jnp.full((Q, self.n_vertices), fill, dtype)
+        return base.at[rows, self.sources].set(value)
+
+    def source_frontier(self) -> jax.Array:
+        """bool[Q, V]: row q's frontier seeded at its own source vertex."""
+        if not self.batched or self.sources is None:
+            raise ValueError("source_frontier() needs batched mode with sources=")
+        Q = self.windows.shape[0]
+        rows = jnp.arange(Q, dtype=jnp.int32)
+        return jnp.zeros((Q, self.n_vertices), bool).at[
+            rows, self.sources].set(True)
 
     # -- one relaxation round over the hoisted view ------------------------
 
@@ -228,6 +272,7 @@ class FixpointRunner:
         window=None,
         *,
         windows=None,
+        sources=None,
         plan: AccessPlan,
         n_vertices: int,
         direction: str = "out",
@@ -239,9 +284,9 @@ class FixpointRunner:
         slot order is irrelevant to the masked segment combines, so a
         ring-advanced view runs identically to a cold gather."""
         return cls(
-            edges, window, windows=windows, plan=plan, n_vertices=n_vertices,
-            direction=direction, check_window=check_window,
-            max_rounds=max_rounds,
+            edges, window, windows=windows, sources=sources, plan=plan,
+            n_vertices=n_vertices, direction=direction,
+            check_window=check_window, max_rounds=max_rounds,
         )
 
     # -- the loop driver ---------------------------------------------------

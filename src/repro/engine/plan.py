@@ -63,6 +63,7 @@ class AccessPlan:
     cache_key: str = dataclasses.field(metadata=dict(static=True))
     n_windows: int = dataclasses.field(default=0, metadata=dict(static=True))  # batched sweep width (0 = single window)
     ring_capacity: int = dataclasses.field(default=0, metadata=dict(static=True))  # ring-view slot count (0 = derive)
+    batch_sig: str = dataclasses.field(default="", metadata=dict(static=True))  # QueryBatch shape signature ("" = not a batch plan)
 
     @property
     def view_budget(self) -> int:
@@ -72,11 +73,16 @@ class AccessPlan:
 
 def _cache_key(method: str, backend: str, budget: int, pvb: int,
                exchange: int, tile_v: int, block_e: int,
-               n_windows: int = 0, ring_capacity: int = 0) -> str:
+               n_windows: int = 0, ring_capacity: int = 0,
+               batch_sig: str = "") -> str:
     key = f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
     if ring_capacity:
         key += f"/r{ring_capacity}"
-    return f"{key}/w{n_windows}" if n_windows else key
+    if n_windows:
+        key += f"/w{n_windows}"
+    if batch_sig:
+        key += f"/q{batch_sig}"
+    return key
 
 
 def rung(n: int) -> int:
@@ -105,6 +111,7 @@ def make_plan(
     block_e: int = DEFAULT_BLOCK_E,
     n_windows: int = 0,
     ring_capacity: int = 0,
+    batch_sig: str = "",
 ) -> AccessPlan:
     """Direct plan constructor (the planner-free path: legacy shims, the
     distributed engine's per-shard plans, tests)."""
@@ -136,9 +143,11 @@ def make_plan(
         n_edges=int(n_edges),
         cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
                              int(exchange_budget), int(tile_v), int(block_e),
-                             int(n_windows), int(ring_capacity)),
+                             int(n_windows), int(ring_capacity),
+                             str(batch_sig)),
         n_windows=int(n_windows),
         ring_capacity=int(ring_capacity),
+        batch_sig=str(batch_sig),
     )
 
 
@@ -354,6 +363,40 @@ def plan_query(
     )
 
 
+def plan_batch(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    batch,
+    *,
+    model: CostModel = CostModel(),
+    access: str = "auto",
+    backend: str = "xla_segment",
+    **kw,
+) -> AccessPlan:
+    """Plan ONE union AccessPlan for a whole :class:`~repro.engine.queries.
+    QueryBatch` (DESIGN.md §7.4): every (algorithm × source × window) row
+    of the batch executes over the same gathered union view, so the plan
+    is ``plan_query`` over the batch's distinct windows — budgets cover the
+    union and every member window — with the batch's SHAPE signature
+    riding the cache key (``AccessPlan.batch_sig``).  The signature keys
+    group structure and row counts, never sources or window bounds, so a
+    shape-stable tenant stream reuses one plan (and hence one fused-step
+    jit entry) across its whole serving horizon."""
+    plan = plan_query(
+        g, tger, windows=batch.windows(), model=model, access=access,
+        backend=backend, **kw,
+    )
+    sig = batch.signature()
+    return dataclasses.replace(
+        plan,
+        batch_sig=sig,
+        cache_key=_cache_key(
+            plan.method, plan.backend, plan.budget, plan.per_vertex_budget,
+            plan.exchange_budget, plan.tile_v, plan.block_e, plan.n_windows,
+            plan.ring_capacity, sig),
+    )
+
+
 def decision_for(
     g: TemporalGraph,
     tger: Optional[TGERIndex],
@@ -374,6 +417,7 @@ __all__ = [
     "AccessPlan",
     "make_plan",
     "plan_query",
+    "plan_batch",
     "decision_for",
     "per_vertex_window_budget",
     "heavy_window_budget",

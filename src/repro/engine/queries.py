@@ -1,0 +1,180 @@
+"""QueryBatch: the first-class multi-tenant query unit (DESIGN.md §7.4).
+
+A serving tenant asks ``(algorithm, source, window, params)``; the
+multi-tenant engine answers a whole SET of those from one shared temporal
+structure — one union AccessPlan, one ring advance, one fused dispatch.
+This module is the host-side normal form that planning (`plan_batch`) and
+serving (`serve.serve_batch` / `sweep_incremental`) agree on:
+
+  * :class:`QuerySpec` — one tenant's request: an algorithm name, zero or
+    more source vertices, one window, and the algorithm kwargs.  A spec
+    with S sources EXPANDS into S rows (the "(algorithm × source ×
+    window)" row model: every row is one [V] answer).
+  * :class:`QueryBatch` — an ordered tuple of specs.  ``groups()`` buckets
+    the expanded rows by ``(algorithm, params)`` — the unit the batched
+    ``*_over_view`` solvers consume (each group solves as ONE [Q_g, V]
+    fixpoint with the source axis vmapped alongside the window axis) —
+    and ``signature()`` is the static shape descriptor that rides the
+    AccessPlan cache key, so jitted programs specialize per batch SHAPE
+    (group structure and row counts), never per batch VALUES (sources and
+    window bounds stay dynamic).
+
+Source-free algorithms (pagerank, cc, kcore) take ``sources=None`` /
+``()`` — their rows are window-only queries.  The module is deliberately
+dependency-light (host-side dataclasses + numpy): the engine planner and
+the serving layer both import it, neither through the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Algorithms whose rows carry no source vertex.  Kept here (not in serve)
+# so spec normalization needs no import of the serving dispatch table;
+# serve validates against its own registry again at dispatch time.
+SOURCE_FREE = ("pagerank", "cc", "kcore")
+
+
+def _params_token(params) -> Tuple[Tuple[str, Any], ...]:
+    if isinstance(params, dict):
+        items = params.items()
+    else:
+        items = tuple(params)
+    return tuple(sorted((str(k), v) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One tenant's request.  ``sources`` is a tuple of seed vertices
+    (empty for source-free algorithms); ``params`` the algorithm kwargs as
+    a sorted item tuple (hashable — it becomes part of the jit-static
+    group schedule)."""
+
+    algorithm: str
+    window: Tuple[int, int]
+    sources: Tuple[int, ...] = ()
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    @classmethod
+    def make(cls, algorithm: str, window, sources=None, **params) -> "QuerySpec":
+        """Normalizing constructor: scalar/sequence sources, any window
+        pair, kwargs as params."""
+        if sources is None:
+            src: Tuple[int, ...] = ()
+        elif np.ndim(sources) == 0:
+            src = (int(sources),)
+        else:
+            src = tuple(int(s) for s in np.asarray(sources).reshape(-1))
+        if algorithm in SOURCE_FREE and src:
+            raise ValueError(f"{algorithm} is source-free: pass sources=None")
+        if algorithm not in SOURCE_FREE and not src:
+            raise ValueError(f"{algorithm} needs at least one source")
+        return cls(
+            algorithm=str(algorithm),
+            window=(int(window[0]), int(window[1])),
+            sources=src,
+            params=_params_token(params),
+        )
+
+    @property
+    def n_rows(self) -> int:
+        return max(len(self.sources), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRow:
+    """One expanded (algorithm, source, window) row: the atomic unit of
+    matching/reuse in the incremental server.  ``source`` is None for
+    source-free algorithms.  ``spec_index`` points back at the originating
+    spec (result navigation)."""
+
+    algorithm: str
+    params: Tuple[Tuple[str, Any], ...]
+    source: Optional[int]
+    window: Tuple[int, int]
+    spec_index: int
+
+    @property
+    def group_key(self) -> Tuple[str, tuple]:
+        return (self.algorithm, self.params)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """An ordered set of :class:`QuerySpec` — THE unit of multi-tenant
+    planning and serving."""
+
+    specs: Tuple[QuerySpec, ...]
+
+    @classmethod
+    def make(cls, specs: Sequence[QuerySpec]) -> "QueryBatch":
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("a QueryBatch needs at least one QuerySpec")
+        return cls(specs=specs)
+
+    # -- the row/group normal form ----------------------------------------
+
+    def rows(self) -> List[QueryRow]:
+        """Expanded rows, batch order: specs in order, a spec's sources in
+        order."""
+        out: List[QueryRow] = []
+        for i, spec in enumerate(self.specs):
+            if spec.sources:
+                for s in spec.sources:
+                    out.append(QueryRow(spec.algorithm, spec.params, s,
+                                        spec.window, i))
+            else:
+                out.append(QueryRow(spec.algorithm, spec.params, None,
+                                    spec.window, i))
+        return out
+
+    def groups(self) -> Dict[Tuple[str, tuple], List[QueryRow]]:
+        """Rows bucketed by ``(algorithm, params)`` in first-appearance
+        order — one bucket = one batched ``*_over_view`` solve.  The order
+        is deterministic so a shape-stable batch stream produces a stable
+        group schedule (jit-cache pinning)."""
+        out: Dict[Tuple[str, tuple], List[QueryRow]] = {}
+        for row in self.rows():
+            out.setdefault(row.group_key, []).append(row)
+        return out
+
+    @property
+    def n_rows(self) -> int:
+        return sum(spec.n_rows for spec in self.specs)
+
+    def union(self) -> Tuple[int, int]:
+        return (
+            min(s.window[0] for s in self.specs),
+            max(s.window[1] for s in self.specs),
+        )
+
+    def windows(self) -> List[Tuple[int, int]]:
+        """Distinct windows, first-appearance order (what the union planner
+        budgets over)."""
+        seen: Dict[Tuple[int, int], None] = {}
+        for s in self.specs:
+            seen.setdefault(s.window, None)
+        return list(seen)
+
+    def signature(self) -> str:
+        """The static batch-SHAPE descriptor that rides the AccessPlan
+        cache key: per-group algorithm names + row counts (readable) plus
+        a crc of the full (algorithm, params, n_rows) group structure
+        (collision-safe for distinct param sets).  Window bounds and
+        source ids are deliberately EXCLUDED — they are dynamic arguments
+        of the fused step, and keying on them would defeat the jit-cache
+        pinning the serving soak asserts."""
+        parts = []
+        desc = []
+        for (alg, params), rows in self.groups().items():
+            parts.append(f"{alg}x{len(rows)}")
+            desc.append((alg, params, len(rows)))
+        crc = zlib.crc32(repr(desc).encode()) & 0xFFFFFFFF
+        return "+".join(parts) + f"#{crc:08x}"
+
+
+__all__ = ["QuerySpec", "QueryRow", "QueryBatch", "SOURCE_FREE"]

@@ -1,6 +1,9 @@
 from repro.serve.window_sweep import (  # noqa: F401
     ALGORITHMS,
+    QueryBatch,
+    QuerySpec,
     SweepState,
+    serve_batch,
     sliding_windows,
     sweep,
     sweep_incremental,

@@ -1,44 +1,48 @@
-"""Multi-window query serving: one plan, one traversal, W answers — and
-incremental advancing when the window set slides.
+"""Multi-tenant window-query serving: one plan, one ring advance, ONE fused
+dispatch — a whole batch of (algorithm × source × window) queries.
 
 The serving workload Kairos's selective indexing exists for is *temporal
 window queries* — "earliest arrival over each of the last 24 sliding
-windows", "reachability per day this month".  Answering those one window at
-a time pays W full passes over the edge set; this module is the batched
-path (DESIGN.md §6): ``sweep`` plans ONCE over the union window
-(`plan_query(windows=...)`), builds one shared edge view, and executes the
-whole sweep as a single jitted [W, V] program via the batched algorithm
-variants.  ``sweep_looped`` is the reference W-independent-runs execution
-(used by tests for row-parity and by ``benchmarks/run.py --only sweep`` for
-the amortization comparison).
+windows", "reachability per day this month", and (since the multi-tenant
+refactor, DESIGN.md §7.4) MANY tenants' worth of those at once.  The unit
+of work is a :class:`~repro.engine.queries.QueryBatch`: a set of
+``QuerySpec(algorithm, sources, window, params)`` entries, expanded into
+(algorithm × source × window) rows and bucketed into per-``(algorithm,
+params)`` groups, each of which solves as one batched ``*_over_view``
+fixpoint with the source axis vmapped alongside the window axis.
 
-``sweep_incremental`` (DESIGN.md §7.2–§7.3) is the serving hot loop: when
-the window set advances by a stride, it carries a :class:`SweepState`
-across calls and, instead of a cold plan+gather+W-fixpoints pass, runs ONE
-fused jitted step that
+  * ``sweep`` / ``sweep_looped`` — the cold batched path (DESIGN.md §6)
+    and its W-independent-runs reference, now dispatch-table-driven over
+    all seven algorithm modules.
+  * ``serve_batch`` — the multi-tenant entry point: answer a whole
+    QueryBatch over ONE union plan (`engine.plan_batch`; the batch shape
+    signature rides the cache key) and carry a :class:`SweepState` so the
+    next batch advances incrementally.
+  * ``sweep_incremental`` — the single-tenant wrapper (one algorithm, one
+    source, W sliding windows) over the same engine; its legacy
+    state-compatibility gate (same algorithm/source/kwargs or fall cold)
+    is preserved.
 
-  * slides the RING-buffer union view forward (slot identity ``p mod C``
-    over the time-first permutation — global for index plans, heavy-only
-    for hybrid plans) by scattering ONLY the entering positions, with the
-    view buffers donated so the steady state reallocates nothing;
-  * solves only the genuinely new windows (windows_new[1:] ==
-    windows_prev[:-1] under a one-stride advance — the DeltaGraph-style
-    reuse of the time axis), warm-started where the caller explicitly opts
-    in via ``warm_start=`` and soundness allows (DESIGN.md §7.2);
-  * assembles the [W, V] result rows (reused + solved) inside the same
-    program — one dispatch per advance, trace/dispatch-count-tested.
+The steady-state advance is ONE jitted dispatch for the WHOLE batch
+(DESIGN.md §7.3–§7.4): ring delta scatter + every group's solve of only
+its genuinely-new rows + per-group [Q, V] row assembly run in the same
+program, with the ring-view and result buffers DONATED (SweepState is
+single-use / moved-from).  Row reuse is per (algorithm, params, source,
+window) row; warm starts sit behind the explicit ``warm_start=`` flag
+with per-algorithm soundness (EA and cc exact, reachability sound,
+bfs/pagerank/kcore/betweenness refused — DESIGN.md §7.4 soundness table).
 
 Integer-label results are row-identical (bit-exact) to the cold ``sweep``
-under the same plan; pagerank rows match up to float reduction order (sums
-cross edge-view layouts — compare allclose, as everywhere floats cross
-views).
+under the same plan; float rows (pagerank, betweenness) match up to float
+reduction order (sums cross edge-view layouts — compare allclose, as
+everywhere floats cross views).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import warnings
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +55,18 @@ from repro.core.algorithms import (
     overlaps_reachability,
     overlaps_reachability_batched,
     overlaps_reachability_over_view,
+    temporal_bfs,
+    temporal_bfs_batched,
+    temporal_bfs_over_view,
+    temporal_betweenness,
+    temporal_betweenness_batched,
+    temporal_betweenness_over_view,
+    temporal_cc,
+    temporal_cc_batched,
+    temporal_cc_over_view,
+    temporal_kcore,
+    temporal_kcore_batched,
+    temporal_kcore_over_view,
     temporal_pagerank,
     temporal_pagerank_batched,
     temporal_pagerank_over_view,
@@ -71,11 +87,283 @@ from repro.core.tger import (
 from repro.engine.plan import (
     AccessPlan,
     per_vertex_window_budget,
+    plan_batch,
     plan_query,
     rung,
 )
+from repro.engine.queries import QueryBatch, QuerySpec
 
-ALGORITHMS = ("earliest_arrival", "reachability", "pagerank")
+
+# ---------------------------------------------------------------------------
+# the algorithm dispatch table (DESIGN.md §7.4)
+# ---------------------------------------------------------------------------
+
+class _Algo(NamedTuple):
+    """One algorithm's serving contract.
+
+    ``solve(edges, windows, sources, plan, n_vertices, init, kwargs)`` runs
+    the group's rows over a prebuilt (ring) view and returns ``(result,
+    rounds)`` — ``rounds`` is the runner's convergence metric for EA and -1
+    for the vmapped/fixed-iteration algorithms.  ``warm`` builds a
+    containment warm init for new rows (None = warm starts REFUSED — the
+    per-algorithm soundness table of DESIGN.md §7.4).  ``n_outputs`` is the
+    result-tuple arity (1 = bare [Q, V] array)."""
+
+    solve: Callable
+    batched: Callable               # cold batched entry (sweep)
+    single: Callable                # cold single-window entry (sweep_looped)
+    n_outputs: int
+    source_free: bool
+    warm: Optional[Callable]
+
+
+def _solve_ea(edges, windows, sources, plan, n_vertices, init, kwargs):
+    return earliest_arrival_over_view(
+        edges, windows, sources=sources, plan=plan, n_vertices=n_vertices,
+        init=init, with_rounds=True, **kwargs)
+
+
+def _solve_reach(edges, windows, sources, plan, n_vertices, init, kwargs):
+    res = overlaps_reachability_over_view(
+        edges, windows, sources=sources, plan=plan, n_vertices=n_vertices,
+        init=init, **kwargs)
+    return res, jnp.int32(-1)
+
+
+def _solve_pagerank(edges, windows, sources, plan, n_vertices, init, kwargs):
+    res = temporal_pagerank_over_view(
+        edges, windows, plan=plan, n_vertices=n_vertices, init=init, **kwargs)
+    return res, jnp.int32(-1)
+
+
+def _solve_bfs(edges, windows, sources, plan, n_vertices, init, kwargs):
+    res = temporal_bfs_over_view(
+        edges, windows, sources=sources, plan=plan, n_vertices=n_vertices,
+        init=init, **kwargs)
+    return res, jnp.int32(-1)
+
+
+def _solve_cc(edges, windows, sources, plan, n_vertices, init, kwargs):
+    res = temporal_cc_over_view(
+        edges, windows, plan=plan, n_vertices=n_vertices, init=init, **kwargs)
+    return res, jnp.int32(-1)
+
+
+def _solve_kcore(edges, windows, sources, plan, n_vertices, init, kwargs):
+    k, kwargs = _require_k(kwargs)
+    res = temporal_kcore_over_view(
+        edges, windows, plan=plan, n_vertices=n_vertices, k=k, init=init,
+        **kwargs)
+    return res, jnp.int32(-1)
+
+
+def _solve_betweenness(edges, windows, sources, plan, n_vertices, init, kwargs):
+    res = temporal_betweenness_over_view(
+        edges, windows, sources=sources, plan=plan, n_vertices=n_vertices,
+        init=init, **kwargs)
+    return res, jnp.int32(-1)
+
+
+# ---- containment warm starts (DESIGN.md §7.2 / §7.4) -----------------------
+
+def _containment_spans(windows_new, prev_windows):
+    """Shared warm-start precheck: span arrays, or None when no previous
+    window can be strictly contained in any new window.  Equal-span
+    containment is equality, which row matching already consumed — so the
+    steady sliding loop (all widths equal) early-outs here without scanning
+    pairs or building any arrays."""
+    new_spans = windows_new[:, 1].astype(np.int64) - windows_new[:, 0]
+    prev_spans = prev_windows[:, 1].astype(np.int64) - prev_windows[:, 0]
+    if prev_spans.size == 0 or int(prev_spans.min()) >= int(new_spans.max()):
+        return None
+    return new_spans, prev_spans
+
+
+def _best_contained(w, span, source, prev_windows, prev_spans, prev_sources):
+    """Widest previous SAME-SOURCE row whose window is STRICTLY contained
+    in ``w`` (None if none).  ``source`` is None for source-free rows, where
+    any previous row of the group is eligible."""
+    best, best_span = None, -1
+    for p, wp in enumerate(prev_windows):
+        if (prev_sources[p] == source and prev_spans[p] < span
+                and wp[0] >= w[0] and wp[1] <= w[1]
+                and int(prev_spans[p]) > best_span):
+            best, best_span = p, int(prev_spans[p])
+    return best
+
+
+def _ea_warm(new_sources, new_windows, prev_sources, prev_windows,
+             prev_results, n_vertices):
+    """[Qn, V] EA warm start: each new row seeded from a previous SAME-source
+    row it STRICTLY contains (labels witnessed by paths in the contained
+    window remain witnessed, and EA's monotone min fixpoint is unique — so
+    the warm run converges to exactly the cold answer; DESIGN.md §7.2).
+    Returns None when no containment exists (the cold init path is then
+    taken)."""
+    spans = _containment_spans(new_windows, prev_windows)
+    if spans is None:
+        return None
+    new_spans, prev_spans = spans
+    rows, any_warm = [], False
+    for s, w, span in zip(new_sources, new_windows, new_spans):
+        cold = jnp.full(n_vertices, INT_INF, jnp.int32).at[s].set(int(w[0]))
+        best = _best_contained(w, span, s, prev_windows, prev_spans,
+                               prev_sources)
+        if best is None:
+            rows.append(cold)
+        else:
+            any_warm = True
+            rows.append(jnp.minimum(cold, prev_results[best]))
+    return jnp.stack(rows) if any_warm else None
+
+
+def _reach_warm(new_sources, new_windows, prev_sources, prev_windows,
+                prev_results, n_vertices):
+    """([Qn, V] end, [Qn, V] start) overlaps-reachability warm start from
+    contained same-source rows: every warm (end, start) pair is the
+    last-edge interval of a REAL overlaps chain inside the containing new
+    window, so every reported vertex stays truly reachable (sound).  The
+    lexicographic heuristic may settle a different witness pair than a cold
+    run, so this is opt-in behind ``warm_start=`` (DESIGN.md §7.2)."""
+    spans = _containment_spans(new_windows, prev_windows)
+    if spans is None:
+        return None
+    new_spans, prev_spans = spans
+    reach_p, start_p, end_p = prev_results
+    e_rows, s_rows, any_warm = [], [], False
+    for s, w, span in zip(new_sources, new_windows, new_spans):
+        ta = int(w[0])
+        ce = jnp.full(n_vertices, INT_INF, jnp.int32).at[s].set(ta)
+        cs = jnp.full(n_vertices, INT_INF, jnp.int32).at[s].set(ta)
+        best = _best_contained(w, span, s, prev_windows, prev_spans,
+                               prev_sources)
+        if best is None:
+            e_rows.append(ce)
+            s_rows.append(cs)
+        else:
+            any_warm = True
+            pe = jnp.where(reach_p[best], end_p[best], INT_INF)
+            ps = jnp.where(reach_p[best], start_p[best], INT_INF)
+            better = (pe < ce) | ((pe == ce) & (ps < cs))
+            e_rows.append(jnp.where(better, pe, ce))
+            s_rows.append(jnp.where(better, ps, cs))
+    if not any_warm:
+        return None
+    return jnp.stack(e_rows), jnp.stack(s_rows)
+
+
+def _cc_warm(new_sources, new_windows, prev_sources, prev_windows,
+             prev_results, n_vertices):
+    """[Qn, V] hash-min label warm start from contained rows: a contained
+    window's components are SUB-components of the new window's, so its
+    converged labels are member-vertex ids bounding each sub-component's
+    minimum — min-label propagation from them converges to exactly the
+    per-component minimum, i.e. the cold answer (EXACT; DESIGN.md §7.4).
+    Rows without a contained predecessor start from the identity labels."""
+    spans = _containment_spans(new_windows, prev_windows)
+    if spans is None:
+        return None
+    new_spans, prev_spans = spans
+    base = jnp.arange(n_vertices, dtype=jnp.int32)
+    rows, any_warm = [], False
+    for s, w, span in zip(new_sources, new_windows, new_spans):
+        best = _best_contained(w, span, s, prev_windows, prev_spans,
+                               prev_sources)
+        if best is None:
+            rows.append(base)
+        else:
+            any_warm = True
+            rows.append(prev_results[best])
+    return jnp.stack(rows) if any_warm else None
+
+
+def _b_ea(g, s, w, t, plan, kw):
+    return earliest_arrival_batched(g, s, w, t, plan=plan, **kw)
+
+
+def _b_reach(g, s, w, t, plan, kw):
+    return overlaps_reachability_batched(g, s, w, t, plan=plan, **kw)
+
+
+def _b_pagerank(g, s, w, t, plan, kw):
+    return temporal_pagerank_batched(g, w, t, plan=plan, **kw)
+
+
+def _b_bfs(g, s, w, t, plan, kw):
+    return temporal_bfs_batched(g, s, w, t, plan=plan, **kw)
+
+
+def _b_cc(g, s, w, t, plan, kw):
+    return temporal_cc_batched(g, w, t, plan=plan, **kw)
+
+
+def _require_k(kw):
+    if "k" not in kw:
+        raise ValueError("algorithm='kcore' requires the k= parameter")
+    kw = dict(kw)
+    return kw.pop("k"), kw
+
+
+def _b_kcore(g, s, w, t, plan, kw):
+    k, kw = _require_k(kw)
+    return temporal_kcore_batched(g, k, w, t, plan=plan, **kw)
+
+
+def _b_betweenness(g, s, w, t, plan, kw):
+    return temporal_betweenness_batched(g, s, w, t, plan=plan, **kw)
+
+
+def _s_ea(g, s, w, t, plan, kw):
+    return earliest_arrival(g, s, w, t, plan=plan, **kw)
+
+
+def _s_reach(g, s, w, t, plan, kw):
+    return overlaps_reachability(g, s, w, t, plan=plan, **kw)
+
+
+def _s_pagerank(g, s, w, t, plan, kw):
+    return temporal_pagerank(g, w, t, plan=plan, **kw)
+
+
+def _s_bfs(g, s, w, t, plan, kw):
+    return temporal_bfs(g, s, w, t, plan=plan, **kw)
+
+
+def _s_cc(g, s, w, t, plan, kw):
+    return temporal_cc(g, w, t, plan=plan, **kw)
+
+
+def _s_kcore(g, s, w, t, plan, kw):
+    k, kw = _require_k(kw)
+    return temporal_kcore(g, k, w, t, plan=plan, **kw)
+
+
+def _s_betweenness(g, s, w, t, plan, kw):
+    return temporal_betweenness(g, jnp.asarray([s]), w, t, plan=plan, **kw)
+
+
+_ALGOS = {
+    "earliest_arrival": _Algo(_solve_ea, _b_ea, _s_ea, 1, False, _ea_warm),
+    "reachability": _Algo(_solve_reach, _b_reach, _s_reach, 3, False,
+                          _reach_warm),
+    "pagerank": _Algo(_solve_pagerank, _b_pagerank, _s_pagerank, 1, True,
+                      None),
+    "bfs": _Algo(_solve_bfs, _b_bfs, _s_bfs, 2, False, None),
+    "cc": _Algo(_solve_cc, _b_cc, _s_cc, 1, True, _cc_warm),
+    "kcore": _Algo(_solve_kcore, _b_kcore, _s_kcore, 1, True, None),
+    "betweenness": _Algo(_solve_betweenness, _b_betweenness, _s_betweenness,
+                         1, False, None),
+}
+
+ALGORITHMS = tuple(_ALGOS)
+
+
+def _algo(algorithm: str) -> _Algo:
+    try:
+        return _ALGOS[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
 
 
 def sliding_windows(t_end: int, width: int, stride: int, count: int) -> np.ndarray:
@@ -87,22 +375,6 @@ def sliding_windows(t_end: int, width: int, stride: int, count: int) -> np.ndarr
     ends = t_end - stride * np.arange(count, dtype=np.int64)
     wins = np.stack([ends - width, ends], axis=1)
     return wins.astype(np.int32)
-
-
-def _dispatch(algorithm: str, batched: bool):
-    table = {
-        ("earliest_arrival", True): earliest_arrival_batched,
-        ("reachability", True): overlaps_reachability_batched,
-        ("pagerank", True): temporal_pagerank_batched,
-        ("earliest_arrival", False): earliest_arrival,
-        ("reachability", False): overlaps_reachability,
-        ("pagerank", False): temporal_pagerank,
-    }
-    try:
-        return table[(algorithm, batched)]
-    except KeyError:
-        raise ValueError(
-            f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
 
 
 def sweep(
@@ -119,20 +391,18 @@ def sweep(
 ):
     """Answer one query over W windows in a single batched execution.
 
-    Returns [W, V] (earliest_arrival / pagerank) or a tuple of [W, V]
-    arrays (reachability).  ``plan`` defaults to
+    Returns [W, V] (or a tuple of [W, V] arrays for the multi-output
+    algorithms: reachability, bfs).  ``plan`` defaults to
     ``plan_query(..., windows=windows)`` — the union-window plan whose
     budgets cover every member window; pass an explicit plan to pin the
-    method/backend.  ``source`` is ignored by pagerank.
-    """
+    method/backend.  ``source`` is ignored by the source-free algorithms
+    (pagerank, cc, kcore)."""
+    entry = _algo(algorithm)
     windows = np.asarray(windows, np.int32).reshape(-1, 2)
     if plan is None:
         plan = plan_query(g, tger, windows=windows, access=access,
                           backend=backend)
-    fn = _dispatch(algorithm, batched=True)
-    if algorithm == "pagerank":
-        return fn(g, windows, tger, plan=plan, **kwargs)
-    return fn(g, source, windows, tger, plan=plan, **kwargs)
+    return entry.batched(g, source, windows, tger, plan, kwargs)
 
 
 def sweep_looped(
@@ -150,37 +420,35 @@ def sweep_looped(
     """Reference execution: W independent single-window runs under the SAME
     union plan (so batched-vs-looped differ only in amortization, not in
     budgets).  Returns the same [W, ...] stacking as :func:`sweep`."""
+    entry = _algo(algorithm)
     windows = np.asarray(windows, np.int32).reshape(-1, 2)
     if plan is None:
         plan = plan_query(g, tger, windows=windows, access=access,
                           backend=backend)
-    fn = _dispatch(algorithm, batched=False)
     rows = []
     for w in windows:
         win = (int(w[0]), int(w[1]))
-        if algorithm == "pagerank":
-            rows.append(fn(g, win, tger, plan=plan, **kwargs))
-        else:
-            rows.append(fn(g, source, win, tger, plan=plan, **kwargs))
-    if algorithm == "reachability":
+        rows.append(entry.single(g, source, win, tger, plan, kwargs))
+    if entry.n_outputs > 1:
         return tuple(
-            jax.numpy.stack([r[i] for r in rows]) for i in range(3)
+            jnp.stack([r[i] for r in rows]) for i in range(entry.n_outputs)
         )
-    return jax.numpy.stack(rows)
+    return jnp.stack(rows)
 
 
 # ---------------------------------------------------------------------------
-# Incremental sliding-window serving (DESIGN.md §7.2–§7.3)
+# Incremental serving (DESIGN.md §7.2–§7.4)
 # ---------------------------------------------------------------------------
 
 # trace-time events of the fused steps: incremented ONLY when jax traces a
-# new (static-signature) variant.  The soak test pins this after warmup —
+# new (static-signature) variant.  The soak tests pin this after warmup —
 # steady-state advances must not retrace.
 _TRACE_COUNTS: dict = {}
 
 # dispatch-site log: tests install a list here and every device-dispatch
 # site in the incremental path appends a tag — the steady-state advance
-# must log exactly one "fused:<method>" entry (the acceptance property).
+# must log exactly one "fused:<method>" entry (the acceptance property),
+# no matter how many tenants the batch carries.
 _DISPATCH_LOG: Optional[list] = None
 
 
@@ -189,7 +457,7 @@ def fused_trace_count() -> int:
     return sum(_TRACE_COUNTS.values())
 
 
-def _trace_event(tag: str) -> None:
+def _trace_event(tag) -> None:
     _TRACE_COUNTS[tag] = _TRACE_COUNTS.get(tag, 0) + 1
 
 
@@ -215,27 +483,29 @@ def _call_donating(fn, *args, **kwargs):
 
 @dataclasses.dataclass
 class SweepState:
-    """The carry between consecutive ``sweep_incremental`` calls: the served
-    windows + their answers (row reuse), the RING-buffer union edge view
-    (positionally stable across advances — DESIGN.md §7.3), and the
-    host-side position bookkeeping the delta scatter needs.
+    """The carry between consecutive incremental advances: the answered
+    (algorithm × source × window) rows — bucketed into (algorithm, params)
+    groups — their [Q, V] answers (row reuse), the RING-buffer union edge
+    view shared by every tenant (positionally stable across advances —
+    DESIGN.md §7.3), and the host-side position bookkeeping the delta
+    scatter needs.
 
     ``last_advance`` records how the view was obtained — ``cold`` (full
     plan + ring build, no reuse), ``delta`` (fused one-dispatch ring
     advance; index AND hybrid), ``reuse`` (scan view, untouched),
-    ``noop``/``reorder`` (window set unchanged / permuted) — and
-    ``n_solved`` how many windows actually ran a fixpoint.
+    ``noop``/``reorder`` (row set unchanged / permuted) — and ``n_solved``
+    how many ROWS actually ran a fixpoint across all groups.
 
-    Donation contract (DESIGN.md §7.3): passing a state to
-    ``sweep_incremental`` DONATES its view and result buffers to the fused
-    step — the state is MOVED-FROM, single-use.  Reusing a consumed state,
-    or reading result arrays returned before the advance that consumed
-    them, raises jax's "buffer has been deleted or donated" error.  Copy
-    rows out (``np.asarray``) before the next advance if retention is
-    needed."""
+    Donation contract (DESIGN.md §7.3): passing a state to an advance
+    DONATES its view and result buffers to the fused step — the state is
+    MOVED-FROM, single-use.  Reusing a consumed state, or reading result
+    arrays returned before the advance that consumed them, raises jax's
+    "buffer has been deleted or donated" error.  Copy rows out
+    (``np.asarray``) before the next advance if retention is needed."""
 
-    algorithm: str
-    windows: np.ndarray          # i32[W, 2] (host)
+    group_keys: tuple            # ((algorithm, params_token), ...) per group
+    group_sources: tuple         # per group: tuple of source ids (None = source-free)
+    group_windows: tuple         # per group: i32[Qg, 2] (host)
     plan: AccessPlan
     edges: EdgeView              # ring-layout union view (device)
     union: Tuple[int, int]
@@ -243,56 +513,90 @@ class SweepState:
                                  # global order; hybrid: heavy order; -1 scan)
     hi: int                      # end of the VALID position range [lo, hi)
     capacity: int                # ring slot count C (0 for scan)
-    results: Any                 # [W, V] array or tuple of [W, V] (reachability)
+    results: tuple               # per-group [Qg, V] array / tuple (device)
     graph_ref: Any               # strong ref to g.src — pins identity (no id reuse)
-    source_token: Optional[tuple]  # None for source-free algorithms (pagerank)
-    kwargs_token: tuple
     last_advance: str = "cold"
     n_solved: int = 0
     warm_applied: bool = False   # an explicit warm_start= actually seeded rows
-    last_rounds: Any = None      # i32 device scalar (EA only; lazy, no sync)
+    last_rounds: Any = None      # i32 device scalar(s) (EA groups; lazy, no sync)
+
+    # -- single-tenant back-compat views ------------------------------------
+
+    @property
+    def algorithm(self) -> str:
+        """The algorithm of a single-group state (the ``sweep_incremental``
+        wrapper's view; ambiguous — and an error — on multi-group states)."""
+        if len(self.group_keys) != 1:
+            raise ValueError("algorithm is ambiguous on a multi-group state")
+        return self.group_keys[0][0]
+
+    @property
+    def windows(self) -> np.ndarray:
+        """i32[W, 2] windows of a single-group state."""
+        if len(self.group_keys) != 1:
+            raise ValueError("windows is ambiguous on a multi-group state")
+        return self.group_windows[0]
 
 
-def _solve_over_view(algorithm, edges, source, windows, plan, n_vertices,
-                     init, kwargs):
-    """Solve ``windows`` over a prebuilt (ring) view.  Returns
-    ``(results, rounds)`` — ``rounds`` is the runner's convergence metric
-    for EA and -1 for the vmapped/fixed-iteration algorithms."""
-    if algorithm == "earliest_arrival":
-        return earliest_arrival_over_view(
-            edges, source, windows, plan=plan, n_vertices=n_vertices,
-            init_arrival=init, with_rounds=True, **kwargs)
-    if algorithm == "reachability":
-        res = overlaps_reachability_over_view(
-            edges, source, windows, plan=plan, n_vertices=n_vertices,
-            init=init, **kwargs)
-        return res, jnp.int32(-1)
-    if algorithm == "pagerank":
-        res = temporal_pagerank_over_view(
-            edges, windows, plan=plan, n_vertices=n_vertices,
-            init=init, **kwargs)
-        return res, jnp.int32(-1)
-    raise ValueError(f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
-
-
-def _assemble(prev_results, sub, row_map, new_pos, tuple_result):
+def _assemble(prev, sub, row_map, new_pos, n_outputs: int):
     """Row assembly: copy reused rows from the previous sweep (static
     gather), scatter the freshly-solved rows into their positions."""
     rm = jnp.asarray(row_map, jnp.int32)
     npos = jnp.asarray(new_pos, jnp.int32)
 
-    def one(prev, s):
-        return prev[rm].at[npos].set(s)
+    def one(p, s):
+        return p[rm].at[npos].set(s)
 
-    if tuple_result:
-        return tuple(one(prev_results[k], sub[k]) for k in range(3))
-    return one(prev_results, sub)
+    if n_outputs == 1:
+        return one(prev, sub)
+    return tuple(one(prev[i], sub[i]) for i in range(n_outputs))
+
+
+def _gather_rows(prev, row_map, n_outputs: int):
+    """Reused-rows-only groups: a static gather (or the buffer untouched
+    when the map is the FULL identity — the steady multi-tenant case).
+    The identity shortcut must also match the previous row COUNT: a new
+    row set that is a strict prefix of the previous one has an identity
+    row_map but needs the gather to drop the trailing rows."""
+    n_prev = prev.shape[0] if n_outputs == 1 else prev[0].shape[0]
+    if len(row_map) == n_prev and row_map == tuple(range(len(row_map))):
+        return prev
+    rm = jnp.asarray(row_map, jnp.int32)
+    if n_outputs == 1:
+        return prev[rm]
+    return tuple(p[rm] for p in prev)
+
+
+def _solve_groups(edges, plan, n_vertices, schedule, prev_results,
+                  new_windows, new_sources, inits):
+    """The dispatch-table core of the fused step: every group's solve (of
+    only its genuinely-new rows) + row assembly, traced into ONE program
+    over the just-advanced view.  ``schedule`` is static — (algorithm,
+    params, row_map, new_pos) per group — so the group structure
+    specializes the compilation exactly like the budget rungs do."""
+    out, rounds_out = [], []
+    for gi, (algorithm, params, row_map, new_pos) in enumerate(schedule):
+        entry = _ALGOS[algorithm]
+        prev = prev_results[gi]
+        if new_pos:
+            sub, rounds = entry.solve(
+                edges, new_windows[gi], new_sources[gi], plan, n_vertices,
+                inits[gi], dict(params))
+            res = sub if prev is None else _assemble(
+                prev, sub, row_map, new_pos, entry.n_outputs)
+        else:
+            res = _gather_rows(prev, row_map, entry.n_outputs)
+            rounds = jnp.int32(-1)
+        out.append(res)
+        rounds_out.append(rounds)
+    return tuple(out), tuple(rounds_out)
 
 
 # ---------------------------------------------------------------------------
-# fused one-dispatch advance steps (DESIGN.md §7.3): view advance + fixpoint
-# solve + row assembly in ONE jitted program, with the ring and result
-# buffers donated so a steady-state advance reallocates nothing.
+# fused one-dispatch advance steps (DESIGN.md §7.3–§7.4): ring advance + ALL
+# groups' fixpoint solves + row assembly in ONE jitted program, with the
+# ring and result buffers donated so a steady-state advance reallocates
+# nothing.
 # ---------------------------------------------------------------------------
 
 # NB: the fused steps take the five raw edge arrays + the relevant
@@ -308,8 +612,8 @@ _ADVANCE_RING = {
 
 @functools.partial(
     jax.jit,
-    static_argnames=("method", "algorithm", "n_vertices", "capacity",
-                     "delta_budget", "row_map", "new_pos", "kwargs_token"),
+    static_argnames=("method", "n_vertices", "capacity", "delta_budget",
+                     "schedule"),
     donate_argnames=("edges", "prev_results"),
 )
 def _fused_step_ring(
@@ -317,31 +621,25 @@ def _fused_step_ring(
     perm,                           # time-first permutation (global | heavy)
     plan: AccessPlan,
     edges: EdgeView,
-    prev_results,
-    new_windows,
+    prev_results,                   # tuple per group (None = new group)
+    new_windows,                    # tuple per group: i32[Qn, 2] | None
+    new_sources,                    # tuple per group: i32[Qn] | None
+    inits,                          # tuple per group: warm init pytree | None
     positions,                      # i32[3]: (lo_prev, lo_new, hi_new) packed
-    source,
-    init,
     *,
     method: str,
-    algorithm: str,
     n_vertices: int,
     capacity: int,
     delta_budget: int,
-    row_map: tuple,
-    new_pos: tuple,
-    kwargs_token: tuple,
+    schedule: tuple,
 ):
-    _trace_event(
-        f"{method}/{algorithm}/C{capacity}/d{delta_budget}/n{len(new_pos)}")
+    _trace_event((method, capacity, delta_budget, schedule))
     edges = _ADVANCE_RING[method](
         fields, perm, edges, positions[0], positions[1], positions[2],
         capacity=capacity, delta_budget=delta_budget)
-    sub, rounds = _solve_over_view(
-        algorithm, edges, source, new_windows, plan, n_vertices, init,
-        dict(kwargs_token))
-    results = _assemble(prev_results, sub, row_map, new_pos,
-                        algorithm == "reachability")
+    results, rounds = _solve_groups(
+        edges, plan, n_vertices, schedule, prev_results, new_windows,
+        new_sources, inits)
     return results, edges, rounds
 
 
@@ -349,8 +647,7 @@ def _fused_step_ring(
 # graph's own edge arrays, which must outlive every advance.
 @functools.partial(
     jax.jit,
-    static_argnames=("algorithm", "n_vertices", "row_map", "new_pos",
-                     "kwargs_token"),
+    static_argnames=("n_vertices", "schedule"),
     donate_argnames=("prev_results",),
 )
 def _fused_step_scan(
@@ -358,275 +655,242 @@ def _fused_step_scan(
     plan: AccessPlan,
     prev_results,
     new_windows,
-    source,
-    init,
+    new_sources,
+    inits,
     *,
-    algorithm: str,
     n_vertices: int,
-    row_map: tuple,
-    new_pos: tuple,
-    kwargs_token: tuple,
+    schedule: tuple,
 ):
-    _trace_event(f"scan/{algorithm}/n{len(new_pos)}")
+    _trace_event(("scan", schedule))
     edges = EdgeView(*fields, jnp.ones(fields[0].shape[0], dtype=bool))
-    sub, rounds = _solve_over_view(
-        algorithm, edges, source, new_windows, plan, n_vertices,
-        init, dict(kwargs_token))
-    results = _assemble(prev_results, sub, row_map, new_pos,
-                        algorithm == "reachability")
+    results, rounds = _solve_groups(
+        edges, plan, n_vertices, schedule, prev_results, new_windows,
+        new_sources, inits)
     return results, rounds
 
 
-def _containment_spans(windows_new, prev_windows):
-    """Shared warm-start precheck: span arrays, or None when no previous
-    window can be strictly contained in any new window.  Equal-span
-    containment is equality, which row matching already consumed — so the
-    steady sliding loop (all widths equal) early-outs here without scanning
-    pairs or building any arrays."""
-    new_spans = windows_new[:, 1].astype(np.int64) - windows_new[:, 0]
-    prev_spans = prev_windows[:, 1].astype(np.int64) - prev_windows[:, 0]
-    if prev_spans.size == 0 or int(prev_spans.min()) >= int(new_spans.max()):
-        return None
-    return new_spans, prev_spans
+# ---------------------------------------------------------------------------
+# the shared advance engine
+# ---------------------------------------------------------------------------
 
-
-def _best_contained(w, span, prev_windows, prev_spans):
-    """Widest previous window STRICTLY contained in ``w`` (None if none)."""
-    best, best_span = None, -1
-    for p, wp in enumerate(prev_windows):
-        if (prev_spans[p] < span and wp[0] >= w[0] and wp[1] <= w[1]
-                and int(prev_spans[p]) > best_span):
-            best, best_span = p, int(prev_spans[p])
-    return best
-
-
-def _ea_warm_init(windows_new, prev_windows, prev_results, source, n_vertices):
-    """[Wn, V] EA warm start: each new window seeded from a previous window
-    it STRICTLY contains (labels witnessed by paths in the contained window
-    remain witnessed, and EA's monotone min fixpoint is unique — so the
-    warm run converges to exactly the cold answer; DESIGN.md §7.2).
-    Returns None when no containment exists (the cold init path is then
-    taken)."""
-    spans = _containment_spans(windows_new, prev_windows)
-    if spans is None:
-        return None
-    new_spans, prev_spans = spans
-    rows, any_warm = [], False
-    for w, span in zip(windows_new, new_spans):
-        cold = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(int(w[0]))
-        best = _best_contained(w, span, prev_windows, prev_spans)
-        if best is None:
-            rows.append(cold)
-        else:
-            any_warm = True
-            rows.append(jnp.minimum(cold, prev_results[best]))
-    return jnp.stack(rows) if any_warm else None
-
-
-def _reach_warm_init(windows_new, prev_windows, prev_results, source,
-                     n_vertices):
-    """([Wn, V] end, [Wn, V] start) overlaps-reachability warm start from
-    contained previous windows: every warm (end, start) pair is the
-    last-edge interval of a REAL overlaps chain inside the containing new
-    window, so every reported vertex stays truly reachable (sound).  The
-    lexicographic heuristic may settle a different witness pair than a cold
-    run, so this is opt-in behind ``warm_start=`` (DESIGN.md §7.2)."""
-    spans = _containment_spans(windows_new, prev_windows)
-    if spans is None:
-        return None
-    new_spans, prev_spans = spans
-    reach_p, start_p, end_p = prev_results
-    e_rows, s_rows, any_warm = [], [], False
-    for w, span in zip(windows_new, new_spans):
-        ta = int(w[0])
-        ce = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(ta)
-        cs = jnp.full(n_vertices, INT_INF, jnp.int32).at[source].set(ta)
-        best = _best_contained(w, span, prev_windows, prev_spans)
-        if best is None:
-            e_rows.append(ce)
-            s_rows.append(cs)
-        else:
-            any_warm = True
-            pe = jnp.where(reach_p[best], end_p[best], INT_INF)
-            ps = jnp.where(reach_p[best], start_p[best], INT_INF)
-            better = (pe < ce) | ((pe == ce) & (ps < cs))
-            e_rows.append(jnp.where(better, pe, ce))
-            s_rows.append(jnp.where(better, ps, cs))
-    if not any_warm:
-        return None
-    return jnp.stack(e_rows), jnp.stack(s_rows)
-
-
-def _warm_init(algorithm, warm_start, kwargs, sub_windows, state, source,
-               n_vertices):
-    """The explicit ``warm_start=`` gate (DESIGN.md §7.2): EA warm starts
-    are exact (monotone min fixpoint; refused under ``visit_once``, whose
-    visited-blocking breaks re-expansion); reachability warm starts are
-    sound-but-not-bit-stable (opt-in is the consent to that); pagerank warm
-    starts would change the finite-iteration output, so they are refused —
-    the caller observes the refusal via ``state.warm_applied``."""
-    if not warm_start:
-        return None
-    if algorithm == "earliest_arrival" and not kwargs.get("visit_once"):
-        return _ea_warm_init(
-            sub_windows, state.windows, state.results, source, n_vertices)
-    if algorithm == "reachability":
-        return _reach_warm_init(
-            sub_windows, state.windows, state.results, source, n_vertices)
-    return None  # refused: pagerank, or EA under visit_once
-
-
-def sweep_incremental(
-    g: TemporalGraph,
-    source,
-    windows,
-    tger: Optional[TGERIndex] = None,
-    *,
-    algorithm: str = "earliest_arrival",
-    state: Optional[SweepState] = None,
-    access: str = "auto",
-    backend: str = "xla_segment",
-    plan: Optional[AccessPlan] = None,
-    warm_start: bool = False,
-    **kwargs,
-):
-    """Serve ``windows`` reusing the previous sweep's :class:`SweepState`.
-
-    Returns ``(results, state)`` with ``results`` shaped exactly like
-    :func:`sweep`.  Integer-label algorithms (earliest_arrival,
-    reachability) are BIT-identical to the cold execution under the same
-    plan; pagerank rows are numerically identical up to float reduction
-    order (sums cross edge-view layouts — compare allclose, as everywhere
-    floats cross views).  Pass ``state=None`` (or a state from a different
-    graph / source / algorithm / kwargs) for a cold start; pass the
-    returned state back on the next advance.
-
-    A steady-state advance (forward slide within the ring's capacity and
-    delta rung) is ONE jitted dispatch: the fused step scatters only the
-    entering time-first range into the donated ring view, solves only the
-    genuinely new windows, and assembles the [W, V] result rows in the same
-    program (DESIGN.md §7.3).  Index AND hybrid plans delta-advance (the
-    hybrid ring slides over the heavy time-first permutation); scan plans
-    reuse the full view untouched.
-
-    ``warm_start=True`` explicitly opts into containment warm starts:
-    EXACT for the default label-correcting EA (monotone min fixpoint),
-    sound-but-not-bit-stable for reachability, and REFUSED (cold init, with
-    ``state.warm_applied == False``) for pagerank and for EA under
-    ``visit_once`` — the unsound cases of DESIGN.md §7.2.
-    """
-    windows = np.asarray(windows, np.int32).reshape(-1, 2)
-    union = (int(windows[:, 0].min()), int(windows[:, 1].max()))
-    # pagerank is source-free; for the others the answered rows are only
-    # reusable for the SAME source
-    source_token = (
-        None if algorithm == "pagerank"
-        else tuple(np.asarray(source).reshape(-1).tolist())
-    )
-    kwargs_token = tuple(sorted(kwargs.items()))
-    src_arg = 0 if algorithm == "pagerank" else source
-
-    def plan_covers(p):
-        """May a fallback REUSE the previous plan for this union?  Keeping
-        the plan (and hence the ring-capacity rung) stable across cold
-        fallbacks is what pins the fused step's jit cache over a long
-        serving horizon — replan only when coverage actually lapsed."""
-        if p.method == "scan":
-            return True
-        if tger is None:
-            return False
-        if p.method == "index":
-            lo, hi = window_positions_host(tger, union)
-            return hi - lo <= (p.ring_capacity or p.budget)
-        lo, hi = heavy_window_positions_host(tger, union)
-        if p.ring_capacity and hi - lo > p.ring_capacity:
-            return False
-        return per_vertex_window_budget(g, tger, union) <= p.per_vertex_budget
-
-    def cold(prev_plan=None):
-        p = plan
-        if p is None and prev_plan is not None and plan_covers(prev_plan):
-            p = prev_plan
-        if p is None:
-            p = plan_query(
-                g, tger, windows=windows, access=access, backend=backend)
-        _note("cold:view")
-        edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
-        _note("cold:solve")
-        results, rounds = _solve_over_view(
-            algorithm, edges, src_arg, jnp.asarray(windows), p,
-            g.n_vertices, None, kwargs)
-        return results, SweepState(
-            algorithm=algorithm, windows=windows.copy(), plan=p, edges=edges,
-            union=union, lo=lo, hi=hi, capacity=capacity, results=results,
-            graph_ref=g.src, source_token=source_token,
-            kwargs_token=kwargs_token, last_advance="cold",
-            n_solved=len(windows), last_rounds=rounds,
-        )
-
-    reusable = (
-        state is not None
-        and state.algorithm == algorithm
-        and state.graph_ref is g.src      # identity, pinned by the state ref
-        and state.source_token == source_token
-        and state.kwargs_token == kwargs_token
-        and (plan is None or plan.cache_key == state.plan.cache_key)
-    )
-    if not reusable:
-        return cold()
-
-    p = state.plan
-    # ---- match windows against the previous sweep's answered rows ----------
-    # (vectorized: per-element int() conversions are hot-path host latency)
-    eq = (windows[:, None, :] == state.windows[None, :, :]).all(axis=2)
+def _match_rows(new_sources, new_windows, prev_sources, prev_windows):
+    """Vectorized (source, window) row matching within one group: returns
+    per-new-row previous indices (None = row needs solving).  The source
+    mask is skipped when every row on both sides shares one source (the
+    single-tenant steady state — per-advance host latency matters at
+    serving budgets, DESIGN.md §7.3)."""
+    if len(prev_sources) == 0:
+        return [None] * len(new_sources)
+    eq = (new_windows[:, None, :] == prev_windows[None, :, :]).all(axis=2)
+    src_set = set(new_sources)
+    if not (src_set == set(prev_sources) and len(src_set) == 1):
+        ns = np.asarray([-1 if s is None else s for s in new_sources])
+        ps = np.asarray([-1 if s is None else s for s in prev_sources])
+        eq &= ns[:, None] == ps[None, :]
     has = eq.any(axis=1)
     arg = eq.argmax(axis=1)
-    matched = [int(arg[i]) if has[i] else None for i in range(len(windows))]
-    new_idx = [i for i, m in enumerate(matched) if m is None]
-    tuple_result = algorithm == "reachability"
+    return [int(arg[i]) if has[i] else None for i in range(len(new_sources))]
 
-    if not new_idx:
-        # nothing to solve: the window set is unchanged (noop) or a
-        # permutation of answered rows (one gather dispatch)
-        if (len(windows) == len(state.windows)
-                and matched == list(range(len(state.windows)))):
+
+def _plan_covers(g, tger, p: AccessPlan, union) -> bool:
+    """May a fallback REUSE the previous plan for this union?  Keeping the
+    plan (and hence the ring-capacity rung) stable across cold fallbacks is
+    what pins the fused step's jit cache over a long serving horizon —
+    replan only when coverage actually lapsed."""
+    if p.method == "scan":
+        return True
+    if tger is None:
+        return False
+    if p.method == "index":
+        lo, hi = window_positions_host(tger, union)
+        return hi - lo <= (p.ring_capacity or p.budget)
+    lo, hi = heavy_window_positions_host(tger, union)
+    if p.ring_capacity and hi - lo > p.ring_capacity:
+        return False
+    return per_vertex_window_budget(g, tger, union) <= p.per_vertex_budget
+
+
+def _group_warm(key, warm_start, new_sources, new_windows, prev, n_vertices):
+    """The explicit ``warm_start=`` gate (DESIGN.md §7.2/§7.4): EA and cc
+    warm starts are exact, reachability's is sound-but-not-bit-stable
+    (opt-in is the consent to that); bfs (round-indexed hops), pagerank
+    (finite-iteration drift), kcore (peeling cannot resurrect) and
+    betweenness (not a monotone fixpoint) are REFUSED — the caller
+    observes refusals via ``state.warm_applied``."""
+    algorithm, params = key
+    entry = _ALGOS[algorithm]
+    if not warm_start or entry.warm is None or prev is None:
+        return None
+    if algorithm == "earliest_arrival" and dict(params).get("visit_once"):
+        return None  # visited-blocking breaks re-expansion: unsound
+    prev_sources, prev_windows, prev_results = prev
+    return entry.warm(new_sources, new_windows, prev_sources, prev_windows,
+                      prev_results, n_vertices)
+
+
+def _advance(
+    g: TemporalGraph,
+    tger: Optional[TGERIndex],
+    groups,                 # [(key, sources list, i32[Qg,2] windows), ...]
+    state: Optional[SweepState],
+    *,
+    plan_arg: Optional[AccessPlan],
+    plan_builder: Callable[[], AccessPlan],
+    warm_start: bool,
+):
+    """The incremental advance shared by ``serve_batch`` (multi-tenant) and
+    ``sweep_incremental`` (single-tenant wrapper): match every group's rows
+    against the carried state, then answer everything in ONE fused jitted
+    dispatch (ring delta + per-group solves + row assembly), falling back
+    to a cold plan+build+solve only when coverage or direction force it."""
+    union = (
+        min(int(w[:, 0].min()) for _, _, w in groups),
+        max(int(w[:, 1].max()) for _, _, w in groups),
+    )
+    n_rows_total = sum(len(s) for _, s, _ in groups)
+
+    def freeze(plan, edges, lo, hi, capacity, results, advance, n_solved,
+               warm_applied, rounds):
+        return SweepState(
+            group_keys=tuple(k for k, _, _ in groups),
+            group_sources=tuple(tuple(s) for _, s, _ in groups),
+            group_windows=tuple(w.copy() for _, _, w in groups),
+            plan=plan, edges=edges, union=union, lo=lo, hi=hi,
+            capacity=capacity, results=results, graph_ref=g.src,
+            last_advance=advance, n_solved=n_solved,
+            warm_applied=warm_applied,
+            last_rounds=rounds[0] if len(rounds) == 1 else rounds,
+        )
+
+    def cold(prev_plan=None):
+        p = plan_arg
+        if p is None and prev_plan is not None and _plan_covers(
+                g, tger, prev_plan, union):
+            p = prev_plan
+        if p is None:
+            p = plan_builder()
+        _note("cold:view")
+        edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
+        results, rounds = [], []
+        for key, sources, wins in groups:
+            entry = _ALGOS[key[0]]
+            _note("cold:solve")
+            src_dev = (
+                None if entry.source_free
+                else jnp.asarray(sources, jnp.int32)
+            )
+            res, rnd = entry.solve(
+                edges, jnp.asarray(wins), src_dev, p, g.n_vertices, None,
+                dict(key[1]))
+            results.append(res)
+            rounds.append(rnd)
+        return tuple(results), freeze(
+            p, edges, lo, hi, capacity, tuple(results), "cold",
+            n_rows_total, False, rounds)
+
+    if state is None:
+        return cold()
+    p = state.plan
+
+    # ---- match rows against the previous advance's answered groups --------
+    prev_idx = {key: i for i, key in enumerate(state.group_keys)}
+    matched = []                # per group: list of prev-row idx | None
+    for key, sources, wins in groups:
+        pi = prev_idx.get(key)
+        if pi is None:
+            matched.append([None] * len(sources))
+        else:
+            matched.append(_match_rows(
+                sources, wins, state.group_sources[pi],
+                state.group_windows[pi]))
+    total_new = sum(sum(m is None for m in ms) for ms in matched)
+
+    if total_new == 0:
+        # noop only when every group's rows are the FULL identity of the
+        # previous group's rows — matching a strict prefix (fewer rows
+        # than answered) must take the reorder gather, not hand back the
+        # previous, larger result buffers.
+        identical = (
+            tuple(k for k, _, _ in groups) == state.group_keys
+            and all(
+                ms == list(range(len(state.group_sources[pi])))
+                for pi, ms in enumerate(matched)
+            )
+        )
+        if identical:
             return state.results, dataclasses.replace(
                 state, last_advance="noop", n_solved=0, warm_applied=False)
+        # permutation of answered rows: per-group host-level gathers
         _note("reorder")
-        rm = jnp.asarray(matched, jnp.int32)
-        results = (
-            tuple(r[rm] for r in state.results) if tuple_result
-            else state.results[rm]
+        results = tuple(
+            _gather_rows(state.results[prev_idx[key]],
+                         tuple(ms), _ALGOS[key[0]].n_outputs)
+            for (key, _, _), ms in zip(groups, matched)
         )
-        return results, dataclasses.replace(
-            state, windows=windows.copy(), union=union, results=results,
-            last_advance="reorder", n_solved=0, warm_applied=False)
+        return results, freeze(
+            p, state.edges, state.lo, state.hi, state.capacity, results,
+            "reorder", 0, False,
+            [jnp.int32(-1)] * len(groups))
 
-    sub_windows = windows[new_idx]
-    row_map = tuple(0 if m is None else m for m in matched)
-    new_pos = tuple(new_idx)
+    # ---- build the fused schedule -----------------------------------------
+    def build_schedule():
+        schedule, prev_results, new_windows, new_sources, inits = \
+            [], [], [], [], []
+        any_warm = False
+        for (key, sources, wins), ms in zip(groups, matched):
+            entry = _ALGOS[key[0]]
+            new_idx = [i for i, m in enumerate(ms) if m is None]
+            row_map = tuple(0 if m is None else m for m in ms)
+            new_pos = tuple(new_idx)
+            pi = prev_idx.get(key)
+            prev_res = None if pi is None else state.results[pi]
+            if new_idx:
+                sub_sources = [sources[i] for i in new_idx]
+                sub_windows = wins[new_idx]
+                prev = (
+                    None if pi is None else (
+                        state.group_sources[pi], state.group_windows[pi],
+                        state.results[pi])
+                )
+                init = _group_warm(key, warm_start, sub_sources, sub_windows,
+                                   prev, g.n_vertices)
+                if init is not None:
+                    any_warm = True
+                # host np arrays on purpose: the fused call converts them
+                # during jit arg processing — an explicit jnp.asarray here
+                # is a separate device_put dispatch per array per advance
+                new_windows.append(np.ascontiguousarray(sub_windows))
+                new_sources.append(
+                    None if entry.source_free
+                    else np.asarray(sub_sources, np.int32))
+                inits.append(init)
+            else:
+                new_windows.append(None)
+                new_sources.append(None)
+                inits.append(None)
+            schedule.append((key[0], key[1], row_map, new_pos))
+            prev_results.append(prev_res)
+        if any_warm:
+            _note("warm-init")
+        return (tuple(schedule), tuple(prev_results), tuple(new_windows),
+                tuple(new_sources), tuple(inits), any_warm)
+
     fields = (g.src, g.dst, g.t_start, g.t_end, g.weight)
 
-    def make_init():
-        # deferred until the advance is KNOWN to take a fused path: the
-        # warm-init rows are device work that a cold fallback would discard
-        init = _warm_init(algorithm, warm_start, kwargs, sub_windows, state,
-                          source, g.n_vertices)
-        if init is not None:
-            _note("warm-init")
-        return init
-
-    # ---- fused advance: ring slide + solve + assembly, one dispatch --------
+    # ---- fused advance: ring slide + all solves + assembly, one dispatch --
     if p.method == "scan":
-        init = make_init()
+        (schedule, prev_results, new_windows, new_sources, inits,
+         any_warm) = build_schedule()
         _note("fused:scan")
         results, rounds = _call_donating(
             _fused_step_scan,
-            fields, p, state.results, sub_windows, src_arg, init,
-            algorithm=algorithm, n_vertices=g.n_vertices, row_map=row_map,
-            new_pos=new_pos, kwargs_token=kwargs_token)
-        edges, lo_new, hi_new, advance = state.edges, -1, -1, "reuse"
-    elif p.method in ("index", "hybrid") and tger is not None:
+            fields, p, prev_results, new_windows, new_sources, inits,
+            n_vertices=g.n_vertices, schedule=schedule)
+        return results, freeze(
+            p, state.edges, -1, -1, 0, results, "reuse", total_new,
+            any_warm, rounds)
+
+    if p.method in ("index", "hybrid") and tger is not None:
         positions = (window_positions_host if p.method == "index"
                      else heavy_window_positions_host)
         lo_new, hi_new = positions(tger, union)
@@ -650,38 +914,168 @@ def sweep_incremental(
             return cold(prev_plan=p)
         perm = (tger.perm_by_start if p.method == "index"
                 else tger.heavy_perm_by_start)
-        init = make_init()
+        (schedule, prev_results, new_windows, new_sources, inits,
+         any_warm) = build_schedule()
         _note(f"fused:{p.method}")
         # delta rung floored at C/8: at most four delta variants per
         # capacity ever compile, pinning the fused cache over long horizons
         delta_budget = min(max(rung(max(shift, 1)), C // 8), C)
         results, edges, rounds = _call_donating(
             _fused_step_ring,
-            fields, perm, p, state.edges, state.results, sub_windows,
-            np.asarray([state.lo, lo_new, hi_new], np.int32), src_arg,
-            init, method=p.method, algorithm=algorithm,
-            n_vertices=g.n_vertices, capacity=C,
-            delta_budget=delta_budget, row_map=row_map,
-            new_pos=new_pos, kwargs_token=kwargs_token)
-        advance = "delta"
-    else:
-        return cold()
+            fields, perm, p, state.edges, prev_results, new_windows,
+            new_sources, inits,
+            np.asarray([state.lo, lo_new, hi_new], np.int32),
+            method=p.method, n_vertices=g.n_vertices, capacity=C,
+            delta_budget=delta_budget, schedule=schedule)
+        return results, freeze(
+            p, edges, lo_new, hi_new, C, results, "delta", total_new,
+            any_warm, rounds)
 
-    return results, SweepState(
-        algorithm=algorithm, windows=windows.copy(), plan=p, edges=edges,
-        union=union, lo=lo_new, hi=hi_new, capacity=state.capacity,
-        results=results, graph_ref=g.src, source_token=source_token,
-        kwargs_token=kwargs_token, last_advance=advance,
-        n_solved=len(new_idx), warm_applied=init is not None,
-        last_rounds=rounds,
+    return cold()
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def serve_batch(
+    g: TemporalGraph,
+    batch: QueryBatch,
+    tger: Optional[TGERIndex] = None,
+    *,
+    state: Optional[SweepState] = None,
+    access: str = "auto",
+    backend: str = "xla_segment",
+    plan: Optional[AccessPlan] = None,
+    warm_start: bool = False,
+):
+    """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
+    multi-tenant entry point (DESIGN.md §7.4).
+
+    Returns ``(results, state)``: ``results`` is a tuple with one entry
+    per (algorithm, params) GROUP of the batch (first-appearance order,
+    matching ``batch.groups()``), each a [Q_g, V] array (or tuple of
+    arrays for the multi-output algorithms), rows in group row order.
+
+    A steady-state advance — same batch shape, windows slid forward — is
+    ONE jitted dispatch no matter how many tenants the batch carries: the
+    fused step scatters only the entering time-first range into the
+    donated ring view, solves only the genuinely-new rows of every group,
+    and assembles all [Q, V] results in the same program.  Integer-label
+    rows are BIT-identical to the corresponding cold single-query sweeps
+    under the same plan; float rows match allclose.
+
+    A state from a different graph or an incompatible explicit ``plan``
+    falls back to a cold serve (the mismatched state is NOT consumed).
+    ``warm_start=True`` opts into the per-algorithm containment warm
+    starts (EA/cc exact, reachability sound; refused elsewhere)."""
+    if not isinstance(batch, QueryBatch):
+        batch = QueryBatch.make(batch)
+    for spec in batch.specs:
+        _algo(spec.algorithm)       # fail fast on unknown algorithms
+    groups = [
+        (key, [r.source for r in rows],
+         np.asarray([r.window for r in rows], np.int32))
+        for key, rows in batch.groups().items()
+    ]
+    if state is not None and (
+        state.graph_ref is not g.src
+        or (plan is not None and plan.cache_key != state.plan.cache_key)
+    ):
+        state = None
+    return _advance(
+        g, tger, groups, state,
+        plan_arg=plan,
+        plan_builder=lambda: plan_batch(
+            g, tger, batch, access=access, backend=backend),
+        warm_start=warm_start,
     )
+
+
+def sweep_incremental(
+    g: TemporalGraph,
+    source,
+    windows,
+    tger: Optional[TGERIndex] = None,
+    *,
+    algorithm: str = "earliest_arrival",
+    state: Optional[SweepState] = None,
+    access: str = "auto",
+    backend: str = "xla_segment",
+    plan: Optional[AccessPlan] = None,
+    warm_start: bool = False,
+    **kwargs,
+):
+    """Serve ``windows`` reusing the previous sweep's :class:`SweepState` —
+    the single-tenant (one algorithm, one source) wrapper over the same
+    fused engine ``serve_batch`` drives.
+
+    Returns ``(results, state)`` with ``results`` shaped exactly like
+    :func:`sweep`.  Integer-label algorithms are BIT-identical to the cold
+    execution under the same plan; float rows (pagerank) are numerically
+    identical up to float reduction order.  Pass ``state=None`` (or a
+    state from a different graph / source / algorithm / kwargs — the
+    legacy single-tenant compatibility gate, under which a mismatched
+    state is NOT consumed) for a cold start; pass the returned state back
+    on the next advance.
+
+    A steady-state advance (forward slide within the ring's capacity and
+    delta rung) is ONE jitted dispatch (DESIGN.md §7.3).  Index AND hybrid
+    plans delta-advance; scan plans reuse the full view untouched.
+
+    ``warm_start=True`` explicitly opts into containment warm starts:
+    EXACT for the default label-correcting EA (monotone min fixpoint) and
+    for cc (hash-min labels), sound-but-not-bit-stable for reachability,
+    and REFUSED (cold init, with ``state.warm_applied == False``) for
+    pagerank, bfs, kcore, betweenness and for EA under ``visit_once`` —
+    the unsound cases of DESIGN.md §7.2/§7.4.
+    """
+    entry = _algo(algorithm)
+    windows = np.asarray(windows, np.int32).reshape(-1, 2)
+    params = tuple(sorted(kwargs.items()))
+    if entry.source_free:
+        src = None
+    else:
+        flat = np.asarray(source).reshape(-1)
+        if flat.size != 1:
+            raise ValueError(
+                "serving rows take ONE source each (multi-seed source sets "
+                "are not supported); submit separate per-source queries — "
+                "e.g. a QueryBatch of one-source rows to serve_batch, whose "
+                "rows are independent answers, not a joint multi-seed run")
+        src = int(flat[0])
+    key = (algorithm, params)
+    groups = [(key, [src] * len(windows), windows)]
+
+    # the legacy single-tenant gate: a state from a different single-tenant
+    # stream (other algorithm / source / kwargs / graph / plan) is not
+    # reused — and, critically, NOT consumed: only a reused state donates
+    # its buffers to the fused step.
+    reusable = (
+        state is not None
+        and state.group_keys == (key,)
+        and state.graph_ref is g.src      # identity, pinned by the state ref
+        and all(s == src for s in state.group_sources[0])
+        and (plan is None or plan.cache_key == state.plan.cache_key)
+    )
+    results, new_state = _advance(
+        g, tger, groups, state if reusable else None,
+        plan_arg=plan,
+        plan_builder=lambda: plan_query(
+            g, tger, windows=windows, access=access, backend=backend),
+        warm_start=warm_start,
+    )
+    return results[0], new_state
 
 
 __all__ = [
     "sweep",
     "sweep_looped",
     "sweep_incremental",
+    "serve_batch",
     "SweepState",
+    "QueryBatch",
+    "QuerySpec",
     "sliding_windows",
     "fused_trace_count",
     "ALGORITHMS",

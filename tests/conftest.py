@@ -61,7 +61,7 @@ except ImportError:
     _st = types.ModuleType("hypothesis.strategies")
     for _name in (
         "integers", "floats", "booleans", "lists", "tuples",
-        "sampled_from", "just", "one_of", "text",
+        "sampled_from", "just", "one_of", "text", "data",
     ):
         setattr(_st, _name, _strategy)
 

@@ -1,0 +1,546 @@
+"""Multi-tenant query engine tests (DESIGN.md §7.4): QueryBatch planning,
+multi-source batched solves, and the fused one-dispatch batch advance.
+
+Three layers:
+
+1. **Row parity** — a multi-source batched ``*_over_view`` solve is
+   row-identical to per-source single solves across {EA, bfs, cc,
+   reachability} × {scan, index, hybrid}: deterministic seeded cases
+   always run; the hypothesis property (random (source, window) rows)
+   runs under the dev extra.
+2. **QueryBatch / plan_batch** — row expansion, group bucketing order,
+   the batch-shape signature riding the plan cache key (and NOT keying on
+   window bounds or sources — jit-cache pinning).
+3. **The multi-tenant soak** (the PR's acceptance property) — a 16-query
+   mixed-algorithm batch with staggered windows served over >= 100
+   advances: every advance's rows bit-identical to the corresponding cold
+   single-query sweeps (floats allclose), steady state served in exactly
+   ONE fused dispatch per advance (``dispatches_per_advance == 1``,
+   log-asserted), zero fused-step retraces after warmup, plus warm-start
+   semantics (cc exact fires; bfs refused) and the non-consuming
+   mismatched-state fallback.
+
+``MT_SOAK_ADVANCES`` defaults to 110 and drops to 36 under CI (the ``CI``
+env var; ``scripts/ci.sh`` exports it) to bound tier-1 wall clock.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edgemap import union_window, view_for_plan
+from repro.core.tger import build_tger
+from repro.data.generators import power_law_temporal_graph
+from repro.engine import QueryBatch, QuerySpec, plan_batch, plan_query
+from repro.serve import serve_batch, sliding_windows, sweep
+from repro.serve import window_sweep as ws
+
+import jax.numpy as jnp
+
+MT_SOAK_ADVANCES = int(os.environ.get(
+    "MT_SOAK_ADVANCES", "36" if os.environ.get("CI") else "110"))
+
+_CASE = {}
+
+
+def _case():
+    if not _CASE:
+        g = power_law_temporal_graph(200, 5000, seed=8)
+        idx = build_tger(g, degree_cutoff=48)
+        ts = np.asarray(g.t_start)
+        _CASE["v"] = (
+            g, idx, int(ts.min()), int(np.asarray(g.t_end).max()),
+        )
+    return _CASE["v"]
+
+
+# ---------------------------------------------------------------------------
+# 1. multi-source row parity (deterministic + hypothesis)
+# ---------------------------------------------------------------------------
+
+_PARITY_ALGS = ("earliest_arrival", "bfs", "cc", "reachability")
+
+
+def _batched_rows(g, idx, alg, sources, wins, plan):
+    """[Q]-row solve through the uniform *_over_view entry point."""
+    from repro.core.algorithms import (
+        earliest_arrival_over_view,
+        overlaps_reachability_over_view,
+        temporal_bfs_over_view,
+        temporal_cc_over_view,
+    )
+
+    edges = view_for_plan(g, idx, union_window(jnp.asarray(wins)), plan)
+    wins = jnp.asarray(wins)
+    srcs = jnp.asarray(sources, jnp.int32)
+    if alg == "earliest_arrival":
+        return (earliest_arrival_over_view(
+            edges, wins, sources=srcs, plan=plan, n_vertices=g.n_vertices),)
+    if alg == "bfs":
+        return temporal_bfs_over_view(
+            edges, wins, sources=srcs, plan=plan, n_vertices=g.n_vertices)
+    if alg == "cc":
+        return (temporal_cc_over_view(
+            edges, wins, plan=plan, n_vertices=g.n_vertices),)
+    return overlaps_reachability_over_view(
+        edges, wins, sources=srcs, plan=plan, n_vertices=g.n_vertices)
+
+
+def _single_rows(g, idx, alg, sources, wins, plan):
+    """The same rows as independent single-window runs."""
+    from repro.core.algorithms import (
+        earliest_arrival,
+        overlaps_reachability,
+        temporal_bfs,
+        temporal_cc,
+    )
+
+    rows = []
+    for s, w in zip(sources, wins):
+        win = (int(w[0]), int(w[1]))
+        if alg == "earliest_arrival":
+            rows.append((earliest_arrival(g, int(s), win, idx, plan=plan),))
+        elif alg == "bfs":
+            rows.append(temporal_bfs(g, int(s), win, idx, plan=plan))
+        elif alg == "cc":
+            rows.append((temporal_cc(g, win, idx, plan=plan),))
+        else:
+            rows.append(overlaps_reachability(g, int(s), win, idx, plan=plan))
+    return rows
+
+
+def _assert_rows_equal(batched, singles, ctx):
+    for q, single in enumerate(singles):
+        for i, part in enumerate(single):
+            assert (np.asarray(batched[i][q]) == np.asarray(part)).all(), (
+                f"{ctx}: row {q} output {i} diverges from the single solve")
+
+
+@pytest.mark.parametrize("alg", _PARITY_ALGS)
+@pytest.mark.parametrize("access", ["scan", "index", "hybrid"])
+def test_multi_source_rows_match_single_solves(alg, access):
+    """Deterministic parity matrix: every (source, window) row of a
+    batched multi-source solve is bit-identical to its per-source single
+    solve, for every access method."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    rng = np.random.default_rng(hash((alg, access)) % 2**32)
+    Q = 5
+    sources = rng.integers(0, g.n_vertices, Q)
+    starts = rng.integers(t_min, t_max - span // 4, Q)
+    widths = rng.integers(max(span // 40, 2), span // 4, Q)
+    wins = np.stack([starts, starts + widths], axis=1).astype(np.int32)
+    plan = plan_query(g, idx, windows=wins, access=access)
+    batched = _batched_rows(g, idx, alg, sources, wins, plan)
+    singles = _single_rows(g, idx, alg, sources, wins, plan)
+    _assert_rows_equal(batched, singles, f"{alg}/{access}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    data=st.data(),
+    alg=st.sampled_from(_PARITY_ALGS),
+    access=st.sampled_from(["scan", "index", "hybrid"]),
+)
+def test_multi_source_row_parity_property(data, alg, access):
+    """Hypothesis property (dev extra): arbitrary (source, window) row sets
+    solve row-identically batched vs single."""
+    g, idx, t_min, t_max = _case()
+    Q = data.draw(st.integers(1, 6), label="Q")
+    sources = [
+        data.draw(st.integers(0, g.n_vertices - 1), label=f"src{i}")
+        for i in range(Q)
+    ]
+    wins = []
+    for i in range(Q):
+        a = data.draw(st.integers(t_min, t_max - 1), label=f"a{i}")
+        b = data.draw(st.integers(a + 1, t_max), label=f"b{i}")
+        wins.append((a, b))
+    wins = np.asarray(wins, np.int32)
+    plan = plan_query(g, idx, windows=wins, access=access)
+    batched = _batched_rows(g, idx, alg, sources, wins, plan)
+    singles = _single_rows(g, idx, alg, sources, wins, plan)
+    _assert_rows_equal(batched, singles, f"{alg}/{access}/property")
+
+
+# ---------------------------------------------------------------------------
+# 2. QueryBatch / plan_batch
+# ---------------------------------------------------------------------------
+
+def test_queryspec_expansion_and_groups():
+    w0, w1 = (0, 10), (5, 20)
+    batch = QueryBatch.make([
+        QuerySpec.make("earliest_arrival", w0, sources=[3, 5]),
+        QuerySpec.make("cc", w1),
+        QuerySpec.make("earliest_arrival", w1, sources=7),
+        QuerySpec.make("earliest_arrival", w0, sources=9, max_rounds=3),
+    ])
+    rows = batch.rows()
+    assert batch.n_rows == len(rows) == 5
+    groups = batch.groups()
+    # first-appearance order; the max_rounds=3 spec is its OWN group
+    keys = list(groups)
+    assert keys[0][0] == "earliest_arrival" and keys[1][0] == "cc"
+    assert len(keys) == 3 and keys[2][1] == (("max_rounds", 3),)
+    assert [r.source for r in groups[keys[0]]] == [3, 5, 7]
+    assert batch.union() == (0, 20)
+    assert batch.windows() == [w0, w1]
+
+
+def test_source_free_registry_agreement():
+    """queries.SOURCE_FREE (spec validation) and the serving dispatch
+    table's per-algorithm source_free flags are two views of one fact —
+    pin them together so they cannot drift."""
+    from repro.engine.queries import SOURCE_FREE
+
+    assert set(ws._ALGOS) == set(ws.ALGORITHMS)
+    for alg, entry in ws._ALGOS.items():
+        assert entry.source_free == (alg in SOURCE_FREE), alg
+
+
+def test_kcore_without_k_raises_a_clear_error():
+    g, idx, t_min, t_max = _case()
+    wins = np.asarray([[t_min, t_max]], np.int32)
+    with pytest.raises(ValueError, match="k="):
+        sweep(g, 0, wins, idx, algorithm="kcore")
+
+
+def test_queryspec_source_validation():
+    with pytest.raises(ValueError, match="source-free"):
+        QuerySpec.make("pagerank", (0, 5), sources=1)
+    with pytest.raises(ValueError, match="source"):
+        QuerySpec.make("earliest_arrival", (0, 5))
+
+
+def test_batch_signature_keys_shape_not_values():
+    """The signature (and hence the plan cache key) must key on GROUP
+    STRUCTURE, not on window bounds or source ids — the jit-cache pinning
+    property of the serving horizon."""
+    def mk(base, src):
+        return QueryBatch.make([
+            QuerySpec.make("earliest_arrival", (base, base + 10), sources=src),
+            QuerySpec.make("cc", (base + 2, base + 8)),
+        ])
+
+    assert mk(0, 3).signature() == mk(100, 7).signature()
+    # different group shape -> different signature
+    other = QueryBatch.make([
+        QuerySpec.make("earliest_arrival", (0, 10), sources=[3, 4]),
+        QuerySpec.make("cc", (2, 8)),
+    ])
+    assert other.signature() != mk(0, 3).signature()
+
+
+def test_plan_batch_signature_rides_cache_key():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    batch = QueryBatch.make([
+        QuerySpec.make("earliest_arrival", (t_min, t_min + span // 4),
+                       sources=1),
+        QuerySpec.make("cc", (t_min + span // 8, t_min + span // 3)),
+    ])
+    p = plan_batch(g, idx, batch, access="index")
+    assert p.batch_sig == batch.signature()
+    assert p.cache_key.endswith(f"/q{batch.signature()}")
+    # the underlying union plan is unchanged apart from the signature
+    p0 = plan_query(g, idx, windows=batch.windows(), access="index")
+    assert p.budget == p0.budget and p.method == p0.method
+
+
+# ---------------------------------------------------------------------------
+# 3. the multi-tenant soak (acceptance property)
+# ---------------------------------------------------------------------------
+
+def _sixteen_query_batch(g, base, width, stride):
+    """16 rows of mixed algorithms with STAGGERED windows: tenants slide
+    together but sit at different offsets/widths, so the batch exercises
+    cross-tenant row reuse (a row entering one tenant's window set may have
+    been another tenant's answer)."""
+    V = g.n_vertices
+    w = lambda off, wd: (int(base - off - wd), int(base - off))
+    return QueryBatch.make([
+        QuerySpec.make("earliest_arrival", w(0, width), sources=[1, 3, 5]),
+        QuerySpec.make("earliest_arrival", w(stride, width), sources=1),
+        QuerySpec.make("earliest_arrival", w(2 * stride, width), sources=7),
+        QuerySpec.make("bfs", w(0, width), sources=[2, 9]),
+        QuerySpec.make("bfs", w(stride, width), sources=2),
+        QuerySpec.make("cc", w(0, width)),
+        QuerySpec.make("cc", w(stride, 2 * width)),
+        QuerySpec.make("reachability", w(0, width), sources=[4, 11]),
+        QuerySpec.make("reachability", w(stride, width), sources=4),
+        QuerySpec.make("kcore", w(0, width), k=2),
+        QuerySpec.make("pagerank", w(0, width), n_iters=6),
+        QuerySpec.make("pagerank", w(stride, width), n_iters=6),
+    ])
+
+
+_FLOAT_ALGS = ("pagerank", "betweenness")
+
+
+def _assert_batch_matches_cold(g, idx, batch, results, plan, step):
+    """Every row bit-identical (floats allclose) to the corresponding cold
+    SINGLE-query sweep under the same plan — the acceptance criterion's
+    row-identity clause."""
+    for gi, (key, rows) in enumerate(batch.groups().items()):
+        alg, params = key
+        res = results[gi]
+        for qi, row in enumerate(rows):
+            cold = sweep(
+                g, 0 if row.source is None else row.source,
+                np.asarray([row.window], np.int32), idx, algorithm=alg,
+                plan=plan, **dict(params))
+            if alg in _FLOAT_ALGS:
+                np.testing.assert_allclose(
+                    np.asarray(res[qi]), np.asarray(cold[0]),
+                    rtol=1e-5, atol=1e-7,
+                    err_msg=f"step {step}: {alg} row {qi}")
+            elif isinstance(res, tuple):
+                for i in range(len(res)):
+                    assert (np.asarray(res[i][qi])
+                            == np.asarray(cold[i][0])).all(), (
+                        f"step {step}: {alg} row {qi} output {i} diverged")
+            else:
+                assert (np.asarray(res[qi]) == np.asarray(cold[0])).all(), (
+                    f"step {step}: {alg} row {qi} diverged")
+
+
+@pytest.mark.parametrize("access", ["index", "scan"])
+def test_multi_tenant_soak(access):
+    """>= 100 advances of a 16-query mixed-algorithm batch: bit-identity vs
+    cold sweeps at EVERY advance, exactly ONE fused dispatch per
+    steady-state advance, and zero fused-step retraces after warmup."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 50, 4)
+    stride = max(width // 4, 1)
+    # short laps: the base range wraps every ~20 advances, so the soak
+    # visits its whole position range (and the wrap-around cold triggers)
+    # SEVERAL times before the warmup cutoff — the static variant set
+    # (capacity x delta-rung x row-match schedule) must saturate by then
+    # for the zero-retrace assertion to be meaningful.
+    base0 = t_max - 30 * stride
+    base = base0
+    rng = np.random.default_rng(1)
+    state = None
+    counts = {"cold": 0, "fused": 0}
+    warmup = (MT_SOAK_ADVANCES * 3) // 4
+    traces_at_warmup = None
+    dispatches = []
+
+    for step in range(MT_SOAK_ADVANCES):
+        base += int(rng.integers(1, 3)) * stride
+        if base > t_max + width:
+            base = base0 + int(rng.integers(0, stride))   # cold trigger
+        batch = _sixteen_query_batch(g, base, width, stride)
+        assert batch.n_rows == 16
+        ws._DISPATCH_LOG = log = []
+        try:
+            results, state = serve_batch(
+                g, batch, idx, state=state, access=access)
+        finally:
+            ws._DISPATCH_LOG = None
+        _assert_batch_matches_cold(g, idx, batch, results, state.plan, step)
+        if state.last_advance == "cold":
+            counts["cold"] += 1
+        else:
+            counts["fused"] += 1
+            assert state.last_advance == (
+                "reuse" if access == "scan" else "delta")
+            # the acceptance criterion: the whole 16-query batch advanced
+            # in exactly ONE jitted dispatch
+            expected = "fused:scan" if access == "scan" else f"fused:{access}"
+            assert log == [expected], (
+                f"step {step}: batch advance dispatched {log}")
+            dispatches.append(len(log))
+        if step == warmup:
+            traces_at_warmup = ws.fused_trace_count()
+
+    assert counts["fused"] > 4 * max(counts["cold"], 1), counts
+    assert dispatches and int(np.median(dispatches)) == 1
+    assert ws.fused_trace_count() == traces_at_warmup, (
+        f"fused steps kept tracing after warmup "
+        f"({traces_at_warmup} -> {ws.fused_trace_count()})")
+
+
+def test_cross_tenant_row_reuse():
+    """A row entering one tenant's window set that another tenant already
+    answered (same algorithm/params/source/window) is NOT re-solved."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 4)
+    stride = max(width // 4, 1)
+    base = t_min + 4 * width
+
+    def mk(b):
+        return QueryBatch.make([
+            QuerySpec.make("earliest_arrival", (b - width, b), sources=1),
+            QuerySpec.make("earliest_arrival", (b - stride - width, b - stride),
+                           sources=1),
+        ])
+
+    _, state = serve_batch(g, mk(base), idx, access="index")
+    # slide by one stride: tenant 2's new window IS tenant 1's old window
+    results, state = serve_batch(g, mk(base + stride), idx, state=state,
+                                 access="index")
+    assert state.last_advance == "delta"
+    assert state.n_solved == 1, (
+        f"cross-tenant reuse failed: solved {state.n_solved} rows, expected 1")
+
+
+def test_prefix_shrink_batch_returns_exactly_the_requested_rows():
+    """A batch whose rows are a strict PREFIX of the previous advance's
+    rows must return exactly those rows (a reorder gather), never the
+    previous, larger result buffer."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    b = t_min + span // 2
+    wins = [(b - span // 8, b), (b - span // 6, b - span // 16),
+            (b - span // 4, b - span // 8)]
+    mk = lambda ws_: QueryBatch.make(
+        [QuerySpec.make("earliest_arrival", w, sources=1) for w in ws_])
+    _, state = serve_batch(g, mk(wins), idx, access="index")
+    results, state = serve_batch(g, mk(wins[:2]), idx, state=state,
+                                 access="index")
+    assert state.last_advance == "reorder" and state.n_solved == 0
+    assert results[0].shape[0] == 2, (
+        f"requested 2 rows, got {results[0].shape[0]}")
+    _assert_batch_matches_cold(g, idx, mk(wins[:2]), results, state.plan,
+                               "prefix-shrink")
+
+
+def test_prefix_shrink_group_in_fused_advance():
+    """Same prefix-shrink guard inside the fused step: one group shrinks
+    to a prefix while another group has a genuinely new row."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 4)
+    stride = max(width // 4, 1)
+    b = t_min + span // 2
+
+    def mk(shift, n_cc):
+        specs = [QuerySpec.make("earliest_arrival",
+                                (b + shift - width, b + shift), sources=1)]
+        specs += [QuerySpec.make("cc", (b - i * stride - width, b - i * stride))
+                  for i in range(n_cc)]
+        return QueryBatch.make(specs)
+
+    _, state = serve_batch(g, mk(0, 3), idx, access="index")
+    results, state = serve_batch(g, mk(stride, 2), idx, state=state,
+                                 access="index")
+    assert state.last_advance == "delta" and state.n_solved == 1
+    assert results[1].shape[0] == 2, (
+        f"cc group requested 2 rows, got {results[1].shape[0]}")
+    _assert_batch_matches_cold(g, idx, mk(stride, 2), results, state.plan,
+                               "fused-prefix-shrink")
+
+
+def test_betweenness_serving_row_identity():
+    """betweenness rides the same dispatch table: incremental advances
+    (single-tenant wrapper AND a serve_batch spec) match the cold sweep
+    allclose (float rows), with delta advances and warm refusal."""
+    from repro.serve import sweep_incremental
+
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 4)
+    stride = max(width // 4, 1)
+    base = t_min + span // 2
+    kw = dict(n_buckets=16)
+    state = None
+    for k in range(3):
+        wins = sliding_windows(base + k * stride, width=width, stride=stride,
+                               count=3)
+        res, state = sweep_incremental(
+            g, 1, wins, idx, algorithm="betweenness", state=state,
+            access="index", warm_start=True, **kw)
+        cold = sweep(g, 1, wins, idx, algorithm="betweenness",
+                     plan=state.plan, **kw)
+        np.testing.assert_allclose(np.asarray(res), np.asarray(cold),
+                                   rtol=1e-5, atol=1e-7)
+        if k > 0:
+            assert state.last_advance == "delta" and state.n_solved == 1
+            assert not state.warm_applied  # refused: not a monotone fixpoint
+    # and through a QueryBatch alongside another group
+    b = base + 4 * stride
+    batch = QueryBatch.make([
+        QuerySpec.make("betweenness", (b - width, b), sources=1, **kw),
+        QuerySpec.make("cc", (b - width, b)),
+    ])
+    _, state = serve_batch(g, batch, idx, access="index")
+    batch2 = QueryBatch.make([
+        QuerySpec.make("betweenness", (b + stride - width, b + stride),
+                       sources=1, **kw),
+        QuerySpec.make("cc", (b + stride - width, b + stride)),
+    ])
+    results, state = serve_batch(g, batch2, idx, state=state, access="index")
+    assert state.last_advance == "delta"
+    _assert_batch_matches_cold(g, idx, batch2, results, state.plan,
+                               "betweenness-batch")
+
+
+def test_serve_batch_mismatched_state_falls_cold_without_consuming():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    b = t_min + span // 2
+    batch = QueryBatch.make(
+        [QuerySpec.make("earliest_arrival", (b - span // 8, b), sources=1)])
+    _, state = serve_batch(g, batch, idx, access="index")
+    g2 = power_law_temporal_graph(150, 2000, seed=9)
+    idx2 = build_tger(g2, degree_cutoff=32)
+    ts2 = np.asarray(g2.t_start)
+    b2 = int(np.asarray(g2.t_end).max())
+    batch2 = QueryBatch.make([QuerySpec.make(
+        "earliest_arrival", (int(ts2.min()), b2), sources=1)])
+    _, s2 = serve_batch(g2, batch2, idx2, state=state, access="index")
+    assert s2.last_advance == "cold"
+    # the mismatched state was NOT consumed: reusing it on ITS graph works
+    res, s3 = serve_batch(g, batch, idx, state=state, access="index")
+    assert s3.last_advance == "noop"
+
+
+def test_unknown_algorithm_rejected():
+    g, idx, t_min, t_max = _case()
+    with pytest.raises(ValueError, match="algorithm"):
+        serve_batch(g, QueryBatch.make(
+            [QuerySpec.make("nope", (t_min, t_max), sources=1)]), idx)
+
+
+# ---------------------------------------------------------------------------
+# warm-start semantics on the batch path (DESIGN.md §7.4 soundness table)
+# ---------------------------------------------------------------------------
+
+def _widening(alg, **params):
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    lo, mid = t_min, t_min + span // 2
+    sources = None if alg in ("cc", "pagerank", "kcore") else 1
+    mk = lambda w: QuerySpec.make(alg, w, sources=sources, **params)
+    b0 = QueryBatch.make([mk((lo, mid)), mk((lo + span // 4, mid))])
+    b1 = QueryBatch.make(
+        [mk((lo, mid)), mk((lo + span // 8, mid + span // 8))])
+    return g, idx, b0, b1
+
+
+def test_warm_start_cc_exact():
+    """cc containment warm starts fire and stay BIT-identical to the cold
+    sweep (hash-min propagation converges to the per-component min of the
+    warm labels = the true component min)."""
+    g, idx, b0, b1 = _widening("cc")
+    _, state = serve_batch(g, b0, idx, access="index", warm_start=True)
+    results, state = serve_batch(g, b1, idx, state=state, access="index",
+                                 warm_start=True)
+    assert state.warm_applied and state.n_solved == 1
+    _assert_batch_matches_cold(g, idx, b1, results, state.plan, "cc-warm")
+
+
+def test_warm_start_bfs_refused():
+    """bfs warm starts are REFUSED (hop counts are round-indexed; a wider
+    window can shorten them, which warm labels cannot express) — and the
+    cold-init solve stays bit-identical."""
+    g, idx, b0, b1 = _widening("bfs")
+    _, state = serve_batch(g, b0, idx, access="index", warm_start=True)
+    results, state = serve_batch(g, b1, idx, state=state, access="index",
+                                 warm_start=True)
+    assert not state.warm_applied
+    _assert_batch_matches_cold(g, idx, b1, results, state.plan, "bfs-warm")
