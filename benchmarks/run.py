@@ -15,7 +15,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table4,fig7,fig8,fig9,plans,sweep,"
-                         "fixpoint,estimator,roofline")
+                         "fixpoint,multitenant,estimator,roofline "
+                         "(multitenant regenerates only BENCH_fixpoint.json "
+                         "parts 3/4 — multi-tenant qps + sharded devices)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -58,9 +60,24 @@ def main() -> None:
     if want("fixpoint"):
         from benchmarks import bench_fixpoint
         if args.quick:
-            bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2)
+            bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2,
+                               dev_counts=(1, 2), shard_steps=8,
+                               shard_cands=96)
         else:
             bench_fixpoint.run()
+
+    if wanted is not None and "multitenant" in wanted:
+        # explicit-only (a full run already covers parts 3/4 via fixpoint):
+        # regenerates multi-tenant qps + sharded device scaling; the JSON
+        # merge keeps parts 1/2 from the last full run intact.
+        from benchmarks import bench_fixpoint
+        if args.quick:
+            bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2,
+                               parts=("multi_tenant", "sharded"),
+                               dev_counts=(1, 2), shard_steps=8,
+                               shard_cands=96)
+        else:
+            bench_fixpoint.run(parts=("multi_tenant", "sharded"))
 
     if want("estimator"):
         from benchmarks import bench_estimator

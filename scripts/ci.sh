@@ -11,10 +11,19 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export CI="${CI:-1}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
+# forced-multi-device leg: the query-mesh sharding paths (DESIGN.md §7.5)
+# only exercise real device boundaries when XLA fakes >1 host device, so
+# rerun the distributed + sharded-serving suites under a 4-device CPU
+# backend.  The workflow matrix runs this script under both the jax 0.4.37
+# floor and jax-latest, so the shard_map compat shims get both pins.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q tests/test_distributed.py tests/test_sharded_serving.py
+
 # smoke the perf trajectory: gather-once vs re-gather + FUSED incremental
-# sweeps + the multi-tenant 1/4/16-tenant queries-per-second regime
-# (one-dispatch advances asserted against the dispatch-site log at every
-# batch size, result-identity asserted before timing; emits
-# BENCH_fixpoint.json at the repo root, including the tiny-budget
-# crossover regime)
+# sweeps + the multi-tenant 1/4/16-tenant queries-per-second regime + the
+# sharded qps-vs-device-count chain (one-dispatch advances asserted against
+# the dispatch-site log at every batch size and device count,
+# result-identity asserted before timing; emits BENCH_fixpoint.json at the
+# repo root, including the tiny-budget crossover regime)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint

@@ -82,6 +82,36 @@ def power_law_temporal_graph(
     return from_edges(src, dst, t_start, t_start + dur, weight, n_vertices=n_vertices)
 
 
+def transit_temporal_graph(
+    n_vertices: int,
+    n_edges: int,
+    k: int = 1,
+    headway: int = 500,
+    seed: int = 0,
+    t_max: int = 100_000,
+    max_duration: int = 1,
+    weighted: bool = False,
+) -> TemporalGraph:
+    """Schedule-driven ring network, the transport/timetable regime: vertex
+    ``p`` departs toward ``p+1..p+k`` at ``p * headway + jitter (mod
+    t_max)``, so time-respecting paths chain hop-by-hop around the ring and
+    earliest-arrival depth inside a window is ``~ window_width / headway``
+    — genuinely deep fixpoints, unlike random graphs whose temporal
+    diameter stays logarithmic.  Vertices whose scheduled slot falls
+    outside a query window have no edges there at all, so windows mix
+    deep sources with many zero-reach ones: the depth-asymmetric workload
+    the sharded serving benchmark measures."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, size=n_edges)
+    hop = rng.integers(1, k + 1, size=n_edges)
+    dst = (src + hop) % n_vertices
+    jitter = rng.integers(0, max(headway // 2, 1), size=n_edges)
+    t_start = (src.astype(np.int64) * headway + jitter) % t_max
+    dur = rng.integers(0, max_duration + 1, size=n_edges)
+    weight = rng.uniform(0.5, 2.0, size=n_edges).astype(np.float32) if weighted else None
+    return from_edges(src, dst, t_start, t_start + dur, weight, n_vertices=n_vertices)
+
+
 def molecule_batch_graph(n_nodes: int, n_edges: int, batch: int, seed: int = 0):
     """Batched small graphs (GNN 'molecule' shape): returns COO edges over a
     disjoint union of ``batch`` molecules plus the graph-id of each node."""

@@ -5,3 +5,10 @@ from repro.distributed.sharding import (  # noqa: F401
     use_mesh,
     current_mesh,
 )
+from repro.distributed.query_shard import (  # noqa: F401
+    query_axis,
+    query_mesh,
+    replicate,
+    replicated_arrays,
+    row_partition,
+)

@@ -23,6 +23,7 @@ from repro.engine.queries import (  # noqa: F401
     QueryRow,
     QuerySpec,
     SOURCE_FREE,
+    dedup_rows,
 )
 from repro.engine.backends import (  # noqa: F401
     ExecutionBackend,

@@ -371,6 +371,7 @@ def plan_batch(
     model: CostModel = CostModel(),
     access: str = "auto",
     backend: str = "xla_segment",
+    shards: Optional[int] = None,
     **kw,
 ) -> AccessPlan:
     """Plan ONE union AccessPlan for a whole :class:`~repro.engine.queries.
@@ -381,12 +382,21 @@ def plan_batch(
     riding the cache key (``AccessPlan.batch_sig``).  The signature keys
     group structure and row counts, never sources or window bounds, so a
     shape-stable tenant stream reuses one plan (and hence one fused-step
-    jit entry) across its whole serving horizon."""
+    jit entry) across its whole serving horizon.
+
+    ``shards`` (the query-mesh device count, DESIGN.md §7.5) rides the
+    signature too: the sharded fused step pads each group's row axis to a
+    per-device capacity derived from the shard count, so a plan made for
+    one mesh shape must not silently satisfy a state carried under
+    another — switching mesh shape falls cold instead of mis-aliasing the
+    jit cache."""
     plan = plan_query(
         g, tger, windows=batch.windows(), model=model, access=access,
         backend=backend, **kw,
     )
     sig = batch.signature()
+    if shards is not None:
+        sig += f"@q{int(shards)}"
     return dataclasses.replace(
         plan,
         batch_sig=sig,

@@ -177,4 +177,36 @@ class QueryBatch:
         return "+".join(parts) + f"#{crc:08x}"
 
 
-__all__ = ["QuerySpec", "QueryRow", "QueryBatch", "SOURCE_FREE"]
+def dedup_rows(sources, windows):
+    """Cross-query row dedup within one (algorithm, params) group: rows
+    with identical ``(source, window)`` collapse to ONE solved row.
+
+    ``sources`` is a sequence of source ids (None entries for source-free
+    rows); ``windows`` an i32[Q, 2] array.  Returns ``(unique_sources,
+    unique_windows, inverse)`` — unique rows in first-appearance order and
+    a ``tuple`` mapping every original row to its unique row, so the
+    engine solves the unique rows and FANS OUT at assembly
+    (``solved[inverse]``).  Identical tenants (the common many-users-one-
+    dashboard shape) then cost one fixpoint row, not Q — and the sharded
+    row partition (``distributed.query_shard.row_partition``) operates on
+    the already-deduplicated axis."""
+    windows = np.asarray(windows, np.int32).reshape(-1, 2)
+    seen: Dict[Tuple[Any, int, int], int] = {}
+    u_sources: List[Any] = []
+    u_windows: List[Tuple[int, int]] = []
+    inverse: List[int] = []
+    for s, w in zip(sources, windows):
+        key = (s, int(w[0]), int(w[1]))
+        j = seen.get(key)
+        if j is None:
+            j = len(u_sources)
+            seen[key] = j
+            u_sources.append(s)
+            u_windows.append((int(w[0]), int(w[1])))
+        inverse.append(j)
+    return (u_sources, np.asarray(u_windows, np.int32).reshape(-1, 2),
+            tuple(inverse))
+
+
+__all__ = ["QuerySpec", "QueryRow", "QueryBatch", "SOURCE_FREE",
+           "dedup_rows"]

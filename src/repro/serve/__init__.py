@@ -3,6 +3,7 @@ from repro.serve.window_sweep import (  # noqa: F401
     QueryBatch,
     QuerySpec,
     SweepState,
+    query_mesh,
     serve_batch,
     sliding_windows,
     sweep,

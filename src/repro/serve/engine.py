@@ -1,12 +1,20 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engines.
 
-Fixed-size slot array; each slot holds one request's KV state and current
-length.  Each engine step decodes every active slot in one fused
-``decode_step``; finished slots (EOS or max-tokens) are refilled from the
-queue via ``prefill`` into the slot's cache rows.  This is the standard
-continuous-batching loop (vLLM-style scheduling, KV in dense slots rather
-than paged blocks — paging is block-table indirection inside the cache,
-orthogonal to the engine loop).
+``ServeEngine``: LM continuous batching.  Fixed-size slot array; each slot
+holds one request's KV state and current length.  Each engine step decodes
+every active slot in one fused ``decode_step``; finished slots (EOS or
+max-tokens) are refilled from the queue via ``prefill`` into the slot's
+cache rows.  This is the standard continuous-batching loop (vLLM-style
+scheduling, KV in dense slots rather than paged blocks — paging is
+block-table indirection inside the cache, orthogonal to the engine loop).
+
+``GraphBatchServer``: the temporal-graph analogue.  One server holds the
+moved-from ``SweepState`` of a :func:`repro.serve.serve_batch` advance
+chain (ring-buffer edge view + donated result buffers), the query mesh
+when the tenant axis is sharded across devices (DESIGN.md §7.5), and
+running advance/dispatch stats.  It owns the donation contract so callers
+don't have to: results handed out are host snapshots, safe to keep after
+the next advance consumes the device buffers.
 """
 from __future__ import annotations
 
@@ -118,3 +126,79 @@ class ServeEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.stats
+
+
+# ---------------------------------------------------------------------------
+# Temporal-graph batch serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphServeStats:
+    advances: int = 0
+    cold_advances: int = 0
+    rows_served: int = 0
+    rows_solved: int = 0            # post-dedup rows actually solved
+    dispatches: int = 0             # all dispatch-site hits (cold + fused)
+    fused_dispatches: int = 0       # one per steady-state advance (per
+                                    # device group, not per device)
+
+
+class GraphBatchServer:
+    """Continuous batch serving for temporal-graph queries.
+
+    One ``advance(batch)`` call per tick: the whole (algorithm x source x
+    window) :class:`~repro.engine.queries.QueryBatch` rides ONE ring
+    advance and one fused dispatch (per device, when ``mesh`` shards the
+    tenant axis — pass a device count or a ``jax.sharding.Mesh``).  The
+    server carries the single-use ``SweepState`` between ticks and snaps
+    results to host arrays before handing them out, because the next
+    advance DONATES the previous device buffers (DESIGN.md §7.3).
+    """
+
+    def __init__(self, graph, tger=None, *, access: str = "auto",
+                 backend: str = "xla_segment", plan=None, mesh=None,
+                 warm_start: bool = False):
+        self.graph = graph
+        self.tger = tger
+        self.access = access
+        self.backend = backend
+        self.plan = plan
+        self.mesh = mesh
+        self.warm_start = warm_start
+        self.state = None
+        self.stats = GraphServeStats()
+
+    def advance(self, batch) -> List:
+        """Serve one batch tick; returns host-snapshot per-group results
+        (same grouping as :func:`repro.serve.serve_batch`)."""
+        from repro.serve import window_sweep as ws
+
+        outer = ws._DISPATCH_LOG
+        ws._DISPATCH_LOG = log = []
+        try:
+            results, self.state = ws.serve_batch(
+                self.graph, batch, self.tger, state=self.state,
+                access=self.access, backend=self.backend, plan=self.plan,
+                warm_start=self.warm_start, mesh=self.mesh)
+        finally:
+            ws._DISPATCH_LOG = outer
+        snapped = [
+            tuple(np.asarray(x) for x in r) if isinstance(r, tuple)
+            else np.asarray(r)
+            for r in results
+        ]
+        self.stats.advances += 1
+        if self.state.last_advance == "cold":
+            self.stats.cold_advances += 1
+        self.stats.rows_served += int(batch.n_rows)
+        self.stats.rows_solved += int(self.state.n_solved_unique)
+        self.stats.dispatches += len(log)
+        self.stats.fused_dispatches += sum(
+            1 for t in log if t.startswith("fused:"))
+        return snapped
+
+    @property
+    def devices(self) -> int:
+        return 1 if self.state is None or self.state.mesh is None else (
+            self.state.mesh.size)

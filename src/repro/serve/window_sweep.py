@@ -28,9 +28,17 @@ The steady-state advance is ONE jitted dispatch for the WHOLE batch
 its genuinely-new rows + per-group [Q, V] row assembly run in the same
 program, with the ring-view and result buffers DONATED (SweepState is
 single-use / moved-from).  Row reuse is per (algorithm, params, source,
-window) row; warm starts sit behind the explicit ``warm_start=`` flag
-with per-algorithm soundness (EA and cc exact, reachability sound,
+window) row; identical rows across tenants DEDUP to one solved row and
+fan out at assembly; warm starts sit behind the explicit ``warm_start=``
+flag with per-algorithm soundness (EA and cc exact, reachability sound,
 bfs/pagerank/kcore/betweenness refused — DESIGN.md §7.4 soundness table).
+
+``serve_batch(..., mesh=D)`` SHARDS the batch's row axis across a query
+mesh (DESIGN.md §7.5): ring view and carried results replicated per
+device, each device solving only its contiguous (padded) row chunk under
+its own convergence loop inside the same fused SPMD program — one
+dispatch per device per advance, rows still bit-identical to the
+single-device engine.
 
 Integer-label results are row-identical (bit-exact) to the cold ``sweep``
 under the same plan; float rows (pagerank, betweenness) match up to float
@@ -47,6 +55,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.algorithms import (
     earliest_arrival,
@@ -91,7 +100,14 @@ from repro.engine.plan import (
     plan_query,
     rung,
 )
-from repro.engine.queries import QueryBatch, QuerySpec
+from repro.distributed.compat import shard_map as _compat_shard_map
+from repro.distributed.query_shard import (
+    query_mesh,
+    replicate,
+    replicated_arrays,
+    row_partition,
+)
+from repro.engine.queries import QueryBatch, QuerySpec, dedup_rows
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +535,8 @@ class SweepState:
     n_solved: int = 0
     warm_applied: bool = False   # an explicit warm_start= actually seeded rows
     last_rounds: Any = None      # i32 device scalar(s) (EA groups; lazy, no sync)
+    mesh: Any = None             # query Mesh of a SHARDED stream (DESIGN.md §7.5)
+    n_solved_unique: int = 0     # rows that actually ran a fixpoint after dedup
 
     # -- single-tenant back-compat views ------------------------------------
 
@@ -567,21 +585,88 @@ def _gather_rows(prev, row_map, n_outputs: int):
     return tuple(p[rm] for p in prev)
 
 
+def _gather_solved(sub, solve_map, n_outputs: int):
+    """Dedup/padding fan-out: map the solved UNIQUE (and, sharded, padded)
+    rows back onto the full new-row axis — one static gather inside the
+    fused program.  Identity maps are short-circuited to ``solve_map is
+    None`` at schedule build, so the steady no-duplicate batch pays
+    nothing."""
+    sm = jnp.asarray(solve_map, jnp.int32)
+    if n_outputs == 1:
+        return sub[sm]
+    return tuple(s[sm] for s in sub)
+
+
+def _solve_rows_sharded(entry, params, plan, n_vertices, mesh, edges,
+                        windows, sources, init):
+    """One group's new-row solve with the (padded) row axis SHARDED over
+    the query mesh (DESIGN.md §7.5): each device runs the group fixpoint
+    over ONLY its contiguous row chunk — its own while_loop, so a device
+    whose rows converge early exits early instead of idling in a joint
+    loop until the globally deepest row settles — then the solved rows are
+    constrained back to replicated (the per-advance gather), keeping row
+    reuse and assembly on later advances device-local.  The view and plan
+    stay replicated; windows/sources/warm-inits are row-sharded."""
+    ax = mesh.axis_names[0]
+    row, rep = PartitionSpec(ax), PartitionSpec()
+    has_src, has_init = sources is not None, init is not None
+    args, specs = [windows], [row]
+    if has_src:
+        args.append(sources)
+        specs.append(row)
+    if has_init:
+        args.append(init)
+        specs.append(row)
+    args.append(edges)
+    specs.append(rep)
+
+    def body(*a):
+        it = iter(a)
+        w_l = next(it)
+        s_l = next(it) if has_src else None
+        i_l = next(it) if has_init else None
+        e_l = next(it)
+        sub, rounds = entry.solve(e_l, w_l, s_l, plan, n_vertices, i_l,
+                                  dict(params))
+        sub = sub if isinstance(sub, tuple) else (sub,)
+        # per-device round counts concatenate along the row axis; the max
+        # restores the joint-loop scalar semantics of `last_rounds`
+        return sub, jnp.reshape(jnp.asarray(rounds, jnp.int32), (1,))
+
+    f = _compat_shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                          out_specs=(row, row))
+    sub, rounds = f(*args)
+    sub = jax.lax.with_sharding_constraint(
+        sub, NamedSharding(mesh, PartitionSpec()))
+    return (sub[0] if entry.n_outputs == 1 else sub), jnp.max(rounds)
+
+
 def _solve_groups(edges, plan, n_vertices, schedule, prev_results,
-                  new_windows, new_sources, inits):
+                  new_windows, new_sources, inits, mesh=None):
     """The dispatch-table core of the fused step: every group's solve (of
     only its genuinely-new rows) + row assembly, traced into ONE program
     over the just-advanced view.  ``schedule`` is static — (algorithm,
-    params, row_map, new_pos) per group — so the group structure
-    specializes the compilation exactly like the budget rungs do."""
+    params, row_map, new_pos, solve_map) per group — so the group
+    structure specializes the compilation exactly like the budget rungs
+    do.  ``solve_map`` (None = identity) maps the full new-row axis onto
+    the deduplicated (and, under a query mesh, padded) solved rows; with a
+    ``mesh`` the solve itself row-shards across devices."""
     out, rounds_out = [], []
-    for gi, (algorithm, params, row_map, new_pos) in enumerate(schedule):
+    for gi, (algorithm, params, row_map, new_pos, solve_map) \
+            in enumerate(schedule):
         entry = _ALGOS[algorithm]
         prev = prev_results[gi]
         if new_pos:
-            sub, rounds = entry.solve(
-                edges, new_windows[gi], new_sources[gi], plan, n_vertices,
-                inits[gi], dict(params))
+            if mesh is None:
+                sub, rounds = entry.solve(
+                    edges, new_windows[gi], new_sources[gi], plan,
+                    n_vertices, inits[gi], dict(params))
+            else:
+                sub, rounds = _solve_rows_sharded(
+                    entry, params, plan, n_vertices, mesh, edges,
+                    new_windows[gi], new_sources[gi], inits[gi])
+            if solve_map is not None:
+                sub = _gather_solved(sub, solve_map, entry.n_outputs)
             res = sub if prev is None else _assemble(
                 prev, sub, row_map, new_pos, entry.n_outputs)
         else:
@@ -613,7 +698,7 @@ _ADVANCE_RING = {
 @functools.partial(
     jax.jit,
     static_argnames=("method", "n_vertices", "capacity", "delta_budget",
-                     "schedule"),
+                     "schedule", "mesh"),
     donate_argnames=("edges", "prev_results"),
 )
 def _fused_step_ring(
@@ -632,14 +717,18 @@ def _fused_step_ring(
     capacity: int,
     delta_budget: int,
     schedule: tuple,
+    mesh: Optional[Mesh] = None,
 ):
-    _trace_event((method, capacity, delta_budget, schedule))
+    _trace_event((method, capacity, delta_budget, schedule, mesh))
+    # under a query mesh the inputs are replicated, so the delta scatter
+    # runs per device on that device's whole ring replica — the SPMD
+    # program is still ONE dispatch per device per advance (§7.5)
     edges = _ADVANCE_RING[method](
         fields, perm, edges, positions[0], positions[1], positions[2],
         capacity=capacity, delta_budget=delta_budget)
     results, rounds = _solve_groups(
         edges, plan, n_vertices, schedule, prev_results, new_windows,
-        new_sources, inits)
+        new_sources, inits, mesh=mesh)
     return results, edges, rounds
 
 
@@ -647,7 +736,7 @@ def _fused_step_ring(
 # graph's own edge arrays, which must outlive every advance.
 @functools.partial(
     jax.jit,
-    static_argnames=("n_vertices", "schedule"),
+    static_argnames=("n_vertices", "schedule", "mesh"),
     donate_argnames=("prev_results",),
 )
 def _fused_step_scan(
@@ -660,12 +749,13 @@ def _fused_step_scan(
     *,
     n_vertices: int,
     schedule: tuple,
+    mesh: Optional[Mesh] = None,
 ):
-    _trace_event(("scan", schedule))
+    _trace_event(("scan", schedule, mesh))
     edges = EdgeView(*fields, jnp.ones(fields[0].shape[0], dtype=bool))
     results, rounds = _solve_groups(
         edges, plan, n_vertices, schedule, prev_results, new_windows,
-        new_sources, inits)
+        new_sources, inits, mesh=mesh)
     return results, rounds
 
 
@@ -737,12 +827,16 @@ def _advance(
     plan_arg: Optional[AccessPlan],
     plan_builder: Callable[[], AccessPlan],
     warm_start: bool,
+    mesh: Optional[Mesh] = None,
 ):
     """The incremental advance shared by ``serve_batch`` (multi-tenant) and
     ``sweep_incremental`` (single-tenant wrapper): match every group's rows
     against the carried state, then answer everything in ONE fused jitted
     dispatch (ring delta + per-group solves + row assembly), falling back
-    to a cold plan+build+solve only when coverage or direction force it."""
+    to a cold plan+build+solve only when coverage or direction force it.
+    With a query ``mesh`` the fused step row-shards every group's solve
+    across the mesh devices (DESIGN.md §7.5) — still one dispatch per
+    device per advance."""
     union = (
         min(int(w[:, 0].min()) for _, _, w in groups),
         max(int(w[:, 1].max()) for _, _, w in groups),
@@ -750,7 +844,7 @@ def _advance(
     n_rows_total = sum(len(s) for _, s, _ in groups)
 
     def freeze(plan, edges, lo, hi, capacity, results, advance, n_solved,
-               warm_applied, rounds):
+               warm_applied, rounds, n_unique=0):
         return SweepState(
             group_keys=tuple(k for k, _, _ in groups),
             group_sources=tuple(tuple(s) for _, s, _ in groups),
@@ -760,6 +854,7 @@ def _advance(
             last_advance=advance, n_solved=n_solved,
             warm_applied=warm_applied,
             last_rounds=rounds[0] if len(rounds) == 1 else rounds,
+            mesh=mesh, n_solved_unique=n_unique,
         )
 
     def cold(prev_plan=None):
@@ -771,22 +866,35 @@ def _advance(
             p = plan_builder()
         _note("cold:view")
         edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
-        results, rounds = [], []
+        if mesh is not None and p.method != "scan":
+            # replicate the ring ONCE at the cold build: every later fused
+            # input/output keeps the replicated layout (sharding-stable
+            # jit cache from the first sharded advance).  The scan view
+            # aliases the graph arrays and is never delta-advanced, so it
+            # stays wherever the graph lives.
+            edges = replicate(edges, mesh)
+        results, rounds, n_unique = [], [], 0
         for key, sources, wins in groups:
             entry = _ALGOS[key[0]]
             _note("cold:solve")
+            u_sources, u_windows, inverse = dedup_rows(sources, wins)
+            n_unique += len(u_sources)
             src_dev = (
                 None if entry.source_free
-                else jnp.asarray(sources, jnp.int32)
+                else jnp.asarray(u_sources, jnp.int32)
             )
             res, rnd = entry.solve(
-                edges, jnp.asarray(wins), src_dev, p, g.n_vertices, None,
-                dict(key[1]))
+                edges, jnp.asarray(u_windows), src_dev, p, g.n_vertices,
+                None, dict(key[1]))
+            if inverse != tuple(range(len(sources))):
+                res = _gather_solved(res, inverse, entry.n_outputs)
             results.append(res)
             rounds.append(rnd)
+        if mesh is not None:
+            results = [replicate(r, mesh) for r in results]
         return tuple(results), freeze(
             p, edges, lo, hi, capacity, tuple(results), "cold",
-            n_rows_total, False, rounds)
+            n_rows_total, False, rounds, n_unique=n_unique)
 
     if state is None:
         return cold()
@@ -819,7 +927,8 @@ def _advance(
         )
         if identical:
             return state.results, dataclasses.replace(
-                state, last_advance="noop", n_solved=0, warm_applied=False)
+                state, last_advance="noop", n_solved=0, warm_applied=False,
+                n_solved_unique=0)
         # permutation of answered rows: per-group host-level gathers
         _note("reorder")
         results = tuple(
@@ -837,6 +946,7 @@ def _advance(
         schedule, prev_results, new_windows, new_sources, inits = \
             [], [], [], [], []
         any_warm = False
+        n_unique = 0
         for (key, sources, wins), ms in zip(groups, matched):
             entry = _ALGOS[key[0]]
             new_idx = [i for i, m in enumerate(ms) if m is None]
@@ -844,51 +954,77 @@ def _advance(
             new_pos = tuple(new_idx)
             pi = prev_idx.get(key)
             prev_res = None if pi is None else state.results[pi]
+            solve_map = None
             if new_idx:
-                sub_sources = [sources[i] for i in new_idx]
-                sub_windows = wins[new_idx]
+                # cross-query dedup: identical (source, window) rows across
+                # tenants collapse to ONE solved row; solve_map fans the
+                # solved rows back out inside the fused program
+                u_sources, u_windows, inverse = dedup_rows(
+                    [sources[i] for i in new_idx], wins[new_idx])
+                n_unique += len(u_sources)
                 prev = (
                     None if pi is None else (
                         state.group_sources[pi], state.group_windows[pi],
                         state.results[pi])
                 )
-                init = _group_warm(key, warm_start, sub_sources, sub_windows,
+                init = _group_warm(key, warm_start, u_sources, u_windows,
                                    prev, g.n_vertices)
                 if init is not None:
                     any_warm = True
+                if mesh is not None:
+                    # pad-and-mask row partition (DESIGN.md §7.5): pad the
+                    # unique rows to cap * D so uneven counts never drop a
+                    # row or retrace; real row j keeps global index j, so
+                    # `inverse` is layout-oblivious and doubles as the
+                    # padding-dropping gather
+                    _, pad_map = row_partition(len(u_sources), mesh.size)
+                    u_windows = u_windows[pad_map]
+                    u_sources = [u_sources[j] for j in pad_map]
+                    if init is not None:
+                        init = jax.tree_util.tree_map(
+                            lambda a: a[jnp.asarray(pad_map)], init)
+                solve_map = inverse
+                if solve_map == tuple(range(len(u_sources))):
+                    solve_map = None    # identity AND unpadded: no gather
                 # host np arrays on purpose: the fused call converts them
                 # during jit arg processing — an explicit jnp.asarray here
                 # is a separate device_put dispatch per array per advance
-                new_windows.append(np.ascontiguousarray(sub_windows))
+                new_windows.append(np.ascontiguousarray(u_windows))
                 new_sources.append(
                     None if entry.source_free
-                    else np.asarray(sub_sources, np.int32))
+                    else np.asarray(u_sources, np.int32))
                 inits.append(init)
             else:
                 new_windows.append(None)
                 new_sources.append(None)
                 inits.append(None)
-            schedule.append((key[0], key[1], row_map, new_pos))
+            schedule.append((key[0], key[1], row_map, new_pos, solve_map))
             prev_results.append(prev_res)
         if any_warm:
             _note("warm-init")
         return (tuple(schedule), tuple(prev_results), tuple(new_windows),
-                tuple(new_sources), tuple(inits), any_warm)
+                tuple(new_sources), tuple(inits), any_warm, n_unique)
 
     fields = (g.src, g.dst, g.t_start, g.t_end, g.weight)
+    if mesh is not None:
+        # identity-cached replication: the graph arrays transfer once per
+        # (graph, mesh), and the fused step's input shardings are stable
+        # from the first sharded advance
+        fields = replicated_arrays(mesh, *fields)
+    shard_tag = "" if mesh is None else f"@q{mesh.size}"
 
     # ---- fused advance: ring slide + all solves + assembly, one dispatch --
     if p.method == "scan":
         (schedule, prev_results, new_windows, new_sources, inits,
-         any_warm) = build_schedule()
-        _note("fused:scan")
+         any_warm, n_unique) = build_schedule()
+        _note(f"fused:scan{shard_tag}")
         results, rounds = _call_donating(
             _fused_step_scan,
             fields, p, prev_results, new_windows, new_sources, inits,
-            n_vertices=g.n_vertices, schedule=schedule)
+            n_vertices=g.n_vertices, schedule=schedule, mesh=mesh)
         return results, freeze(
             p, state.edges, -1, -1, 0, results, "reuse", total_new,
-            any_warm, rounds)
+            any_warm, rounds, n_unique=n_unique)
 
     if p.method in ("index", "hybrid") and tger is not None:
         positions = (window_positions_host if p.method == "index"
@@ -914,9 +1050,11 @@ def _advance(
             return cold(prev_plan=p)
         perm = (tger.perm_by_start if p.method == "index"
                 else tger.heavy_perm_by_start)
+        if mesh is not None:
+            (perm,) = replicated_arrays(mesh, perm)
         (schedule, prev_results, new_windows, new_sources, inits,
-         any_warm) = build_schedule()
-        _note(f"fused:{p.method}")
+         any_warm, n_unique) = build_schedule()
+        _note(f"fused:{p.method}{shard_tag}")
         # delta rung floored at C/8: at most four delta variants per
         # capacity ever compile, pinning the fused cache over long horizons
         delta_budget = min(max(rung(max(shift, 1)), C // 8), C)
@@ -926,10 +1064,10 @@ def _advance(
             new_sources, inits,
             np.asarray([state.lo, lo_new, hi_new], np.int32),
             method=p.method, n_vertices=g.n_vertices, capacity=C,
-            delta_budget=delta_budget, schedule=schedule)
+            delta_budget=delta_budget, schedule=schedule, mesh=mesh)
         return results, freeze(
             p, edges, lo_new, hi_new, C, results, "delta", total_new,
-            any_warm, rounds)
+            any_warm, rounds, n_unique=n_unique)
 
     return cold()
 
@@ -948,6 +1086,7 @@ def serve_batch(
     backend: str = "xla_segment",
     plan: Optional[AccessPlan] = None,
     warm_start: bool = False,
+    mesh: Optional[Any] = None,
 ):
     """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
     multi-tenant entry point (DESIGN.md §7.4).
@@ -960,10 +1099,22 @@ def serve_batch(
     A steady-state advance — same batch shape, windows slid forward — is
     ONE jitted dispatch no matter how many tenants the batch carries: the
     fused step scatters only the entering time-first range into the
-    donated ring view, solves only the genuinely-new rows of every group,
-    and assembles all [Q, V] results in the same program.  Integer-label
-    rows are BIT-identical to the corresponding cold single-query sweeps
-    under the same plan; float rows match allclose.
+    donated ring view, solves only the genuinely-new rows of every group
+    (identical (source, window) rows across tenants dedup to one solved
+    row and fan out at assembly), and assembles all [Q, V] results in the
+    same program.  Integer-label rows are BIT-identical to the
+    corresponding cold single-query sweeps under the same plan; float
+    rows match allclose.
+
+    ``mesh`` opts into SHARDED batch serving (DESIGN.md §7.5): pass a
+    device count or a one-axis ``jax.sharding.Mesh`` and every group's
+    new-row axis partitions across the mesh devices — ring view and
+    result rows replicated per device, each device solving only its
+    contiguous row chunk under its own convergence loop, results gathered
+    (constrained replicated) in the same program.  The steady-state
+    advance stays ONE fused dispatch per device, and results remain
+    row-bit-identical to the single-device engine.  A carried state is
+    mesh-shape-bound: switching mesh (or toggling sharding) falls cold.
 
     A state from a different graph or an incompatible explicit ``plan``
     falls back to a cold serve (the mismatched state is NOT consumed).
@@ -973,6 +1124,8 @@ def serve_batch(
         batch = QueryBatch.make(batch)
     for spec in batch.specs:
         _algo(spec.algorithm)       # fail fast on unknown algorithms
+    if mesh is not None and not isinstance(mesh, Mesh):
+        mesh = query_mesh(int(mesh))
     groups = [
         (key, [r.source for r in rows],
          np.asarray([r.window for r in rows], np.int32))
@@ -980,6 +1133,7 @@ def serve_batch(
     ]
     if state is not None and (
         state.graph_ref is not g.src
+        or state.mesh != mesh
         or (plan is not None and plan.cache_key != state.plan.cache_key)
     ):
         state = None
@@ -987,8 +1141,10 @@ def serve_batch(
         g, tger, groups, state,
         plan_arg=plan,
         plan_builder=lambda: plan_batch(
-            g, tger, batch, access=access, backend=backend),
+            g, tger, batch, access=access, backend=backend,
+            shards=None if mesh is None else mesh.size),
         warm_start=warm_start,
+        mesh=mesh,
     )
 
 
@@ -1055,6 +1211,7 @@ def sweep_incremental(
         state is not None
         and state.group_keys == (key,)
         and state.graph_ref is g.src      # identity, pinned by the state ref
+        and state.mesh is None            # sharded states belong to serve_batch
         and all(s == src for s in state.group_sources[0])
         and (plan is None or plan.cache_key == state.plan.cache_key)
     )
@@ -1076,6 +1233,7 @@ __all__ = [
     "SweepState",
     "QueryBatch",
     "QuerySpec",
+    "query_mesh",
     "sliding_windows",
     "fused_trace_count",
     "ALGORITHMS",

@@ -7,6 +7,7 @@ from repro.data.generators import (
     molecule_batch_graph,
     power_law_temporal_graph,
     synthetic_temporal_graph,
+    transit_temporal_graph,
 )
 from repro.data.samplers import NeighborSampler
 from repro.data.tokens import MarkovCorpus
@@ -14,9 +15,25 @@ from repro.data.tokens import MarkovCorpus
 
 def test_generators_valid():
     for g in (synthetic_temporal_graph(50, 300, seed=0),
-              power_law_temporal_graph(50, 300, seed=0)):
+              power_law_temporal_graph(50, 300, seed=0),
+              transit_temporal_graph(50, 300, seed=0)):
         validate(g)
         assert np.asarray(g.src).max() < 50
+
+
+def test_transit_schedule_follows_position():
+    # departures track ring position: edge start times sit inside the
+    # vertex's headway slot, and consecutive hops are time-respecting
+    # (next departure strictly after the previous arrival), which is what
+    # makes earliest-arrival depth scale with window width / headway.
+    H = 100
+    g = transit_temporal_graph(500, 3000, k=1, headway=H, seed=3,
+                               t_max=50_000, max_duration=1)
+    src = np.asarray(g.src)
+    t0 = np.asarray(g.t_start)
+    slot = (src.astype(np.int64) * H) % 50_000
+    assert ((t0 - slot) >= 0).all() and ((t0 - slot) < H // 2).all()
+    assert (np.asarray(g.dst) == (src + 1) % 500).all()
 
 
 def test_power_law_is_skewed():

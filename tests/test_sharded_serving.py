@@ -1,0 +1,448 @@
+"""Sharded batch serving (DESIGN.md §7.5): query-mesh row partitioning,
+cross-query dedup, and sharded `serve_batch` parity with the single-device
+engine.
+
+1. **Partition/dedup units** — `row_partition` pad-and-mask invariants
+   (1-row, prime-row, rows<devices — pad, never drop) and `dedup_rows`
+   collapse/fan-out maps, plus the hypothesis property over random
+   (n_rows, n_shards).
+2. **In-process engine checks** (any device count) — dedup observable
+   through `SweepState.n_solved_unique` with bit-identical duplicate rows;
+   a D=1 query mesh drives the full sharded code path (shard_map solve,
+   pad/gather layout, replicated state) and must match the unsharded
+   engine bit-for-bit; mesh/state compatibility gates.
+3. **The multi-device soak** (subprocess, 4 forced host devices — the
+   same isolation pattern as tests/test_distributed.py): a 60-advance
+   mixed 5-algorithm chain at D∈{1,2,4}, every advance asserted
+   row-bit-identical to the single-device engine, exactly ONE fused
+   dispatch per advance (one SPMD program per device), zero retraces
+   after warmup, and ring wrap-around covered.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.generators import power_law_temporal_graph
+from repro.core.tger import build_tger
+from repro.distributed.query_shard import query_axis, query_mesh, row_partition
+from repro.engine import QueryBatch, QuerySpec
+from repro.engine.queries import dedup_rows
+from repro.serve import serve_batch, sweep
+from repro.serve import window_sweep as ws
+
+
+# ---------------------------------------------------------------------------
+# 1. partition / dedup units
+# ---------------------------------------------------------------------------
+
+def test_row_partition_even():
+    cap, pad_map = row_partition(8, 4)
+    assert cap == 2
+    assert pad_map.tolist() == list(range(8))
+
+
+def test_row_partition_one_row_many_shards():
+    cap, pad_map = row_partition(1, 4)
+    assert cap == 1
+    assert pad_map.tolist() == [0, 0, 0, 0]
+
+
+def test_row_partition_prime_rows():
+    cap, pad_map = row_partition(7, 4)
+    assert cap == 2
+    assert pad_map.tolist() == [0, 1, 2, 3, 4, 5, 6, 6]
+
+
+def test_row_partition_fewer_rows_than_devices():
+    cap, pad_map = row_partition(3, 4)
+    assert cap == 1
+    # pad repeats the LAST real row — a real solve, dropped at fan-out
+    assert pad_map.tolist() == [0, 1, 2, 2]
+
+
+def test_row_partition_rejects_empty():
+    with pytest.raises(ValueError):
+        row_partition(0, 4)
+    with pytest.raises(ValueError):
+        row_partition(4, 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_rows=st.integers(1, 97), n_shards=st.integers(1, 8))
+def test_row_partition_property(n_rows, n_shards):
+    cap, pad_map = row_partition(n_rows, n_shards)
+    assert cap * n_shards >= n_rows            # pad, never drop
+    assert (cap - 1) * n_shards < n_rows       # minimal capacity
+    assert pad_map.shape == (cap * n_shards,)
+    # real row j keeps global index j (contiguous-chunk layout)
+    assert pad_map[:n_rows].tolist() == list(range(n_rows))
+    assert (pad_map[n_rows:] == n_rows - 1).all()
+
+
+def test_dedup_rows_collapses_and_fans_out():
+    sources = [3, 5, 3, None, 5, 3]
+    windows = np.asarray(
+        [[0, 10], [0, 10], [0, 10], [0, 10], [2, 10], [0, 10]], np.int32)
+    u_src, u_win, inverse = dedup_rows(sources, windows)
+    assert u_src == [3, 5, None, 5]
+    assert u_win.tolist() == [[0, 10], [0, 10], [0, 10], [2, 10]]
+    assert inverse == (0, 1, 0, 2, 3, 0)
+
+
+def test_dedup_rows_identity_when_unique():
+    u_src, u_win, inverse = dedup_rows(
+        [1, 2], np.asarray([[0, 5], [0, 5]], np.int32))
+    assert inverse == (0, 1)
+
+
+def test_query_mesh_rejects_oversubscription():
+    import jax
+    with pytest.raises(ValueError):
+        query_mesh(jax.device_count() + 1)
+    assert query_mesh(1).axis_names == (query_axis(),)
+
+
+# ---------------------------------------------------------------------------
+# 2. in-process engine checks
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=1)
+def _case():
+    g = power_law_temporal_graph(200, 5000, seed=8)
+    idx = build_tger(g, degree_cutoff=48)
+    ts = np.asarray(g.t_start)
+    return g, idx, int(ts.min()), int(np.asarray(g.t_end).max())
+
+
+def _mixed_batch(base, width, stride, n=16, dup=2):
+    """n mixed 5-algorithm tenants + `dup` exact duplicates of the first
+    tenants (the cross-query dedup population)."""
+    algs = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank")
+    specs = []
+    for i in range(n):
+        alg = algs[i % len(algs)]
+        off = (i % 2) * stride
+        win = (int(base - off - width), int(base - off))
+        if alg == "cc":
+            specs.append(QuerySpec.make(alg, win))
+        elif alg == "pagerank":
+            specs.append(QuerySpec.make(alg, win, n_iters=8))
+        else:
+            specs.append(QuerySpec.make(alg, win, sources=(3 * i) % 200))
+    specs.extend(specs[:dup])
+    return QueryBatch.make(specs)
+
+
+def _snap(results):
+    """Copy result rows out (the donation contract: buffers are consumed
+    by the next advance)."""
+    return [
+        tuple(np.asarray(x) for x in (r if isinstance(r, tuple) else (r,)))
+        for r in results
+    ]
+
+
+def _chain(g, idx, mk_batch, steps, mesh, **kw):
+    state, out = None, []
+    for k in range(steps):
+        ws._DISPATCH_LOG = log = []
+        res, state = serve_batch(g, mk_batch(k), idx, state=state, mesh=mesh,
+                                 **kw)
+        ws._DISPATCH_LOG = None
+        out.append((_snap(res), state.last_advance, tuple(log),
+                    state.n_solved, state.n_solved_unique))
+    return out, state
+
+
+def test_dedup_solves_once_and_results_identical():
+    """Duplicate (source, window) rows across tenants: one solved row,
+    duplicate result rows bit-identical, n_solved_unique < n_solved."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 60, 1), max(span // 240, 1)
+    base0 = t_max - 8 * stride
+    mk = lambda k: _mixed_batch(base0 + k * stride, width, stride)
+    out, state = _chain(g, idx, mk, 3, mesh=None, access="index")
+    snaps, advance, log, n_solved, n_unique = out[-1]
+    assert advance == "delta"
+    assert n_unique < n_solved, (
+        f"dedup invisible: solved {n_solved} rows, {n_unique} unique")
+    # the duplicate tenants' rows — spec 16 duplicates spec 0 (EA group
+    # row 0), spec 17 duplicates spec 2 (bfs group row 0)
+    batch = mk(2)
+    rows_by_group = list(batch.groups().values())
+    for gi, rows in enumerate(rows_by_group):
+        seen = {}
+        for qi, row in enumerate(rows):
+            key = (row.source, row.window)
+            if key in seen:
+                for arr in snaps[gi]:
+                    assert (arr[qi] == arr[seen[key]]).all()
+            seen.setdefault(key, qi)
+    # and a genuine duplicate pair exists in at least one group
+    assert any(
+        len({(r.source, r.window) for r in rows}) < len(rows)
+        for rows in rows_by_group)
+
+
+def test_dedup_matches_cold_sweep():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 60, 1), max(span // 240, 1)
+    base0 = t_max - 6 * stride
+    mk = lambda k: _mixed_batch(base0 + k * stride, width, stride, n=6, dup=3)
+    out, state = _chain(g, idx, mk, 3, mesh=None, access="index")
+    snaps = out[-1][0]
+    batch = mk(2)
+    for gi, (key, rows) in enumerate(batch.groups().items()):
+        alg, params = key
+        for qi, row in enumerate(rows):
+            cold = sweep(g, 0 if row.source is None else row.source,
+                         np.asarray([row.window], np.int32), idx,
+                         algorithm=alg, plan=state.plan, **dict(params))
+            cold = cold if isinstance(cold, tuple) else (cold,)
+            for oi, arr in enumerate(snaps[gi]):
+                if alg == "pagerank":
+                    np.testing.assert_allclose(
+                        arr[qi], np.asarray(cold[oi][0]), rtol=1e-5,
+                        atol=1e-7)
+                else:
+                    assert (arr[qi] == np.asarray(cold[oi][0])).all()
+
+
+def test_sharded_d1_bit_identical_to_unsharded():
+    """A 1-device query mesh drives the whole sharded path (shard_map
+    solve, pad layout, replicated placement) and must match the unsharded
+    engine bit-for-bit on every advance — including the uneven 18-row
+    batch (18 rows, 1 'chunk')."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 60, 1), max(span // 240, 1)
+    base0 = t_max - 10 * stride
+    mk = lambda k: _mixed_batch(base0 + k * stride, width, stride)
+    un, _ = _chain(g, idx, mk, 6, mesh=None, access="index")
+    sh, state = _chain(g, idx, mk, 6, mesh=query_mesh(1), access="index")
+    assert state.mesh is not None
+    for k, ((ru, au, lu, _, _), (rs, as_, ls, _, _)) in enumerate(zip(un, sh)):
+        assert au == as_
+        if au == "delta":
+            assert lu == ("fused:index",) and ls == ("fused:index@q1",)
+        for a, b in zip(ru, rs):
+            for x, y in zip(a, b):
+                assert (x == y).all(), f"sharded D=1 diverges at step {k}"
+
+
+def test_sharded_single_row_batch():
+    """1-row batches (rows < devices even at D=1's padding floor) serve
+    and advance without dropping or retracing."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 60, 1), max(span // 240, 1)
+    base0 = t_max - 8 * stride
+    mk = lambda k: QueryBatch.make([QuerySpec.make(
+        "earliest_arrival",
+        (int(base0 + k * stride - width), int(base0 + k * stride)),
+        sources=7)])
+    un, _ = _chain(g, idx, mk, 4, mesh=None, access="index")
+    sh, _ = _chain(g, idx, mk, 4, mesh=query_mesh(1), access="index")
+    for (ru, *_), (rs, *_) in zip(un, sh):
+        for a, b in zip(ru, rs):
+            for x, y in zip(a, b):
+                assert (x == y).all()
+
+
+def test_mesh_switch_falls_cold_without_consuming():
+    """A state carried under one mesh shape must not be consumed by a
+    serve under another (or under no mesh) — the mesh-bound plan/cache
+    contract of DESIGN.md §7.5."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 60, 1)
+    base = t_max - 4
+    batch = QueryBatch.make([QuerySpec.make(
+        "earliest_arrival", (base - width, base), sources=3)])
+    _, state = serve_batch(g, batch, idx, access="index", mesh=query_mesh(1))
+    assert state.mesh is not None
+    # unsharded serve with the sharded state: cold, state NOT consumed
+    _, s2 = serve_batch(g, batch, idx, state=state, access="index")
+    assert s2.last_advance == "cold" and s2.mesh is None
+    # the original sharded state is still usable afterwards
+    _, s3 = serve_batch(g, batch, idx, state=state, access="index",
+                        mesh=query_mesh(1))
+    assert s3.last_advance == "noop"
+    # sharded plan signatures are mesh-shape-bound
+    assert "@q1" in state.plan.cache_key
+    assert "@q1" not in s2.plan.cache_key
+
+
+def test_sweep_incremental_refuses_sharded_state():
+    """The single-tenant wrapper never consumes a sharded state (its fused
+    path is unsharded) — it falls cold instead."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 60, 1)
+    base = t_max - 4
+    batch = QueryBatch.make([QuerySpec.make(
+        "earliest_arrival", (base - width, base), sources=3)])
+    plan_pin = None
+    _, state = serve_batch(g, batch, idx, access="index", mesh=query_mesh(1))
+    res, s2 = ws.sweep_incremental(
+        g, 3, np.asarray([[base - width, base]], np.int32), idx,
+        state=state)
+    assert s2.mesh is None and s2.last_advance == "cold"
+
+
+def test_graph_batch_server_parity_and_stats():
+    """GraphBatchServer (serve/engine.py) carries the moved-from state and
+    snapshots results; rows must match the bare serve_batch chain and the
+    stats must reflect 1 cold + fused steady advances."""
+    from repro.serve.engine import GraphBatchServer
+
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 60, 1), max(span // 240, 1)
+    base0 = t_max - 8 * stride
+    mk = lambda k: _mixed_batch(base0 + k * stride, width, stride)
+    steps = 5
+
+    ref, _ = _chain(g, idx, mk, steps, mesh=None, access="index")
+    server = GraphBatchServer(g, idx, access="index", mesh=query_mesh(1))
+    outs = [server.advance(mk(k)) for k in range(steps)]
+    for (ref_snap, *_), got in zip(ref, outs):
+        for a, b in zip(ref_snap, got):
+            b = b if isinstance(b, tuple) else (b,)
+            for x, y in zip(a, b):
+                assert (x == y).all()
+    s = server.stats
+    assert s.advances == steps
+    assert s.cold_advances == 1
+    assert s.fused_dispatches == steps - 1
+    assert s.rows_served == steps * 18
+    assert 0 < s.rows_solved <= s.rows_served
+    assert server.devices == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. multi-device soak (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+_SOAK_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.data.generators import power_law_temporal_graph
+    from repro.core.tger import build_tger
+    from repro.engine import QueryBatch, QuerySpec
+    from repro.serve import serve_batch, query_mesh
+    from repro.serve import window_sweep as ws
+
+    g = power_law_temporal_graph(200, 5000, seed=8)
+    idx = build_tger(g, degree_cutoff=48)
+    ts = np.asarray(g.t_start)
+    t_max = int(np.asarray(g.t_end).max())
+    span = int(ts.max() - ts.min())
+    # span//100 keeps every sliding union inside one index budget rung for
+    # the full 64-step horizon (wider windows fall cold mid-chain as the
+    # slide reaches the recent-dense tail of the power-law graph).
+    width, stride = max(span // 100, 1), max(span // 400, 1)
+    algs = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank")
+
+    def mk(base):
+        specs = []
+        for i in range(16):
+            alg = algs[i % len(algs)]
+            off = (i % 2) * stride
+            win = (int(base - off - width), int(base - off))
+            if alg == "cc":
+                specs.append(QuerySpec.make(alg, win))
+            elif alg == "pagerank":
+                specs.append(QuerySpec.make(alg, win, n_iters=8))
+            else:
+                specs.append(QuerySpec.make(alg, win, sources=(3 * i) % 200))
+        specs.extend(specs[:2])     # duplicate rows: dedup-aware partition
+        return QueryBatch.make(specs)
+
+    def snap(results):
+        return [tuple(np.asarray(x)
+                      for x in (r if isinstance(r, tuple) else (r,)))
+                for r in results]
+
+    # WARM must sit past the last NEW delta-size bucket: the ring delta is
+    # padded to pow2 buckets and this chain sees {64, 128}, the 128 bucket
+    # first at step 7 — warmup is over once every bucket has traced.
+    STEPS, WARM = 64, 10
+    base0 = t_max - (STEPS + 2) * stride
+
+    def chain(mesh, expect_tag):
+        ws._TRACE_COUNTS.clear()
+        state, rows, advances = None, [], []
+        warm_traces = None
+        for k in range(STEPS):
+            ws._DISPATCH_LOG = log = []
+            res, state = serve_batch(g, mk(base0 + k * stride), idx,
+                                     state=state, access="index", mesh=mesh)
+            jax.block_until_ready(res)
+            ws._DISPATCH_LOG = None
+            rows.append(snap(res))
+            advances.append((state.last_advance, tuple(log)))
+            if k == WARM:
+                warm_traces = ws.fused_trace_count()
+        return rows, advances, warm_traces, ws.fused_trace_count(), state
+
+    ref_rows, ref_adv, _, _, ref_state = chain(None, "fused:index")
+    out = {"steps": STEPS, "warm": WARM, "capacity": ref_state.capacity,
+           "final_lo": ref_state.lo, "devices": jax.device_count(),
+           "parity": {}, "one_dispatch": {}, "zero_retrace": {},
+           "ref_steady": all(a == ("delta", ("fused:index",))
+                             for a in ref_adv[1:])}
+    for D in (1, 2, 4):
+        rows, adv, warm_traces, end_traces, state = chain(
+            query_mesh(D), f"fused:index@q{D}")
+        ident = all(
+            (x == y).all()
+            for r, s in zip(ref_rows, rows)
+            for a, b in zip(r, s)
+            for x, y in zip(a, b))
+        out["parity"][str(D)] = bool(ident)
+        out["one_dispatch"][str(D)] = all(
+            a == ("delta", (f"fused:index@q{D}",)) for a in adv[1:])
+        out["zero_retrace"][str(D)] = bool(end_traces == warm_traces)
+    print(json.dumps(out))
+    """
+)
+
+
+def test_sharded_soak_4dev_subprocess():
+    """The acceptance soak: 64 advances (wrap-around included), D∈{1,2,4}
+    all row-bit-identical to the single-device engine on EVERY advance,
+    one fused dispatch per advance, zero retraces after warmup."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SOAK_PROG],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 4
+    assert res["ref_steady"], "unsharded reference chain not steady-state"
+    assert res["final_lo"] > res["capacity"], (
+        "soak too short to wrap the ring")
+    for D in ("1", "2", "4"):
+        assert res["parity"][D], f"D={D}: sharded rows != single-device rows"
+        assert res["one_dispatch"][D], (
+            f"D={D}: advances not one-fused-dispatch")
+        assert res["zero_retrace"][D], f"D={D}: retraced after warmup"
