@@ -1,9 +1,10 @@
 """Gather-once fixpoint execution vs per-round re-gather, cold vs
 incremental sliding-window serving (DESIGN.md §7), the multi-tenant
-queries-per-second regime (DESIGN.md §7.4), and sharded batch serving
-across forced host devices (DESIGN.md §7.5).
+queries-per-second regime (DESIGN.md §7.4), sharded batch serving
+across forced host devices (DESIGN.md §7.5), and the async-admission
+serving daemon under Poisson tenant churn (DESIGN.md §7.6).
 
-Four measurements, all asserted result-identical before timing:
+Five measurements, all asserted result-identical before timing:
 
 1. **rounds x re-gather vs gather-once** — earliest arrival under index AND
    hybrid plans, once with the pre-runner loop shape (``temporal_edge_map``
@@ -59,9 +60,22 @@ Four measurements, all asserted result-identical before timing:
    chunk; with one convergence-check round on top of depth R the
    expected ceiling is D*(R+1)/(R+2*D-1).
 
+5. **async-admission daemon (DESIGN.md §7.6)** — two measurements.  (a)
+   Admission cost, bucketed vs naive replan: two otherwise-identical
+   multi-tenant chains admit tenants one at a time inside a power-of-two
+   admission bucket; the bucketed chain's dynamic-map schedule keys only
+   the padded capacities, so every admission advance is a jit-cache HIT,
+   while the naive chain's exact-shape schedule changes on every
+   admission and pays retrace + compile.  The ratio is asserted >= 5x
+   (it is really compile-vs-dispatch, orders of magnitude apart).  (b)
+   p50/p99 per-advance latency of a ``GraphBatchServer`` tick loop under
+   seeded Poisson arrivals/departures across all five cost-classed
+   algorithms — cheap class every tick, deep classes round-robin — with
+   warmup-tick latencies excluded from the percentiles.
+
 Besides the usual CSV rows, writes machine-readable ``BENCH_fixpoint.json``
 at the repo root (the start of the perf trajectory; CI runs this at smoke
-sizes so the path cannot rot).  ``parts=`` regenerates a subset of the four
+sizes so the path cannot rot).  ``parts=`` regenerates a subset of the five
 sections; the JSON is MERGED with the existing file so a partial rerun
 (``benchmarks/run.py --only multitenant``) preserves the other parts.  The
 header records the host device count and jax version the numbers were
@@ -86,12 +100,18 @@ from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.tger import build_tger
 from repro.data.generators import power_law_temporal_graph
 from repro.engine import QueryBatch, QuerySpec, plan_batch, plan_query
-from repro.serve import serve_batch, sliding_windows, sweep, sweep_incremental
+from repro.serve import (
+    GraphBatchServer,
+    serve_batch,
+    sliding_windows,
+    sweep,
+    sweep_incremental,
+)
 from repro.serve import window_sweep as _ws
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-PARTS = ("gather_once", "incremental", "multi_tenant", "sharded")
+PARTS = ("gather_once", "incremental", "multi_tenant", "sharded", "daemon")
 
 # Part 4 runs one subprocess per device count: XLA fixes the host device
 # count at backend init, so each D needs a fresh process.  The program
@@ -228,7 +248,8 @@ def _ea_regather(g, source, window, tger, plan, max_rounds):
 
 def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         iters=3, tenants=(1, 4, 16), out_json="BENCH_fixpoint.json",
-        parts=PARTS, dev_counts=(1, 2, 4), shard_steps=12, shard_cands=384):
+        parts=PARTS, dev_counts=(1, 2, 4), shard_steps=12, shard_cands=384,
+        daemon_ticks=24, daemon_admits=3):
     """Narrow (selective, index-plan) and broader window regimes, mirroring
     the Fig. 9 selectivity axis the re-gather cost scales with.  The default
     fracs are chosen so the union of the W sliding windows still plans
@@ -253,7 +274,7 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         "jax_version": jax.__version__,
     })
 
-    if {"gather_once", "incremental", "multi_tenant"} & set(parts):
+    if {"gather_once", "incremental", "multi_tenant", "daemon"} & set(parts):
         g = power_law_temporal_graph(n_v, n_e, seed=4)
         # one TGER serving both regimes: the index path uses the global
         # time-first order regardless of the cutoff; the cutoff only has
@@ -572,6 +593,158 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
                        "width_frac": s_frac, "stride_div": s_sdiv,
                        "tenants": s_q, "steps": shard_steps},
             "rows": rows4,
+        }
+
+    # ---- 5: async-admission daemon (DESIGN.md §7.6) ------------------------
+    # (a) bucketed vs naive-replan admission cost on otherwise-identical
+    # chains, (b) p50/p99 per-advance latency under Poisson tenant churn.
+    if "daemon" in parts:
+        frac5 = width_fracs[0]
+        width = max(int(span * frac5), 1)
+        stride = max(width // 4, 1)
+        algs5 = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank")
+        algs_base = ("reachability", "bfs", "cc", "pagerank")
+        T_ea0, warm5 = 5, 3
+        # EA rows 5 -> bucket capacity 8: every admission must stay INSIDE
+        # the bucket, or the bucketed chain pays a (legitimate) transition
+        # retrace and the A/B stops isolating admission cost
+        assert T_ea0 + daemon_admits <= 8, "admissions must stay in-bucket"
+
+        def spec5(alg, i, base):
+            win = (int(base - width), int(base))
+            if alg == "cc":
+                return QuerySpec.make(alg, win)
+            if alg == "pagerank":
+                return QuerySpec.make(alg, win, n_iters=10)
+            return QuerySpec.make(alg, win, sources=(src + 7 * i) % n_v)
+
+        def mk5(base, n_ea):
+            specs = [spec5(a, 50 + j, base) for j, a in enumerate(algs_base)]
+            specs += [spec5("earliest_arrival", j, base) for j in range(n_ea)]
+            return QueryBatch.make(specs)
+
+        # horizon-pinned plan (the part-3 pattern): budgets cover the whole
+        # chain so no mid-chain cold fallback pollutes the admission A/B
+        steps5 = max(warm5 + daemon_admits, daemon_ticks) + 2
+        base5 = t_max - steps5 * stride
+
+        def pin_plan():
+            horizon = QueryBatch.make([QuerySpec.make(
+                "earliest_arrival",
+                (int(base5 - 3 * stride - width),
+                 int(base5 + steps5 * stride)),
+                sources=src)])
+            return plan_batch(g, idx, horizon, access="index")
+
+        pin5 = pin_plan()
+
+        def admission_chain(admission):
+            """Warm a 4-algorithm + T_ea0-EA-tenant chain, then admit one
+            EA tenant per advance and time exactly the admitting advances.
+            Returns (per-admission times, final batch, results, state)."""
+            state = None
+            for k in range(warm5):
+                res, state = serve_batch(
+                    g, mk5(base5 + k * stride, T_ea0), idx, state=state,
+                    plan=pin5, admission=admission)
+                jax.block_until_ready(res)
+            times = []
+            for j in range(daemon_admits):
+                batch = mk5(base5 + (warm5 + j) * stride, T_ea0 + 1 + j)
+                tic = time.perf_counter()
+                res, state = serve_batch(
+                    g, batch, idx, state=state, plan=pin5,
+                    admission=admission)
+                jax.block_until_ready(res)
+                times.append(time.perf_counter() - tic)
+                assert state.last_advance == "delta", state.last_advance
+            return times, batch, res, state
+
+        t_naive, batch_n, res_n, _ = admission_chain(None)
+        t_buck, batch_b, res_b, st_b = admission_chain("bucketed")
+        # identity before timing claims: the bucketed chain's final
+        # admission advance, sliced to real rows, matches the naive one
+        for gi, (key, rows) in enumerate(batch_b.groups().items()):
+            a = np.asarray(res_b[gi])[:len(rows)]
+            b = np.asarray(res_n[gi])
+            if key[0] == "pagerank":
+                np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+            elif isinstance(res_b[gi], tuple):
+                for ii in range(len(res_b[gi])):
+                    assert (np.asarray(res_b[gi][ii])[:len(rows)]
+                            == np.asarray(res_n[gi][ii])).all()
+            else:
+                assert (a == b).all(), key
+        adm_naive = float(np.median(t_naive))
+        adm_buck = float(np.median(t_buck))
+        adm_ratio = adm_naive / max(adm_buck, 1e-12)
+        assert adm_ratio >= 5.0, (
+            f"bucketed admission must be >=5x cheaper than a naive replan "
+            f"(got {adm_ratio:.1f}x: naive {adm_naive*1e6:.0f}us vs "
+            f"bucketed {adm_buck*1e6:.0f}us)")
+        emit(
+            f"fixpoint/daemon/admission/sel{frac5}", adm_buck,
+            f"bucketed_us={adm_buck*1e6:.0f};"
+            f"naive_replan_us={adm_naive*1e6:.0f};"
+            f"ratio={adm_ratio:.1f}x;admissions={daemon_admits}",
+        )
+
+        # (b) the daemon tick loop under seeded Poisson churn: cheap class
+        # every tick, deep classes round-robin, per-class bucketed chains
+        # (the same horizon pin keeps every tick's union inside the ring)
+        server = GraphBatchServer(g, idx, plan=pin5)
+        rng5 = np.random.default_rng(7)
+        live, n_sp = [], 0
+
+        def fresh_spec():
+            nonlocal n_sp
+            s = spec5(algs5[n_sp % len(algs5)], n_sp, width)
+            n_sp += 1
+            return s
+
+        for _ in range(10):                  # resident base population
+            live.append(server.submit(fresh_spec()))
+        warm_ticks = min(5, daemon_ticks // 2)
+        skip = 0
+        for k in range(daemon_ticks):
+            server.tick(base5 + k * stride)
+            if k == warm_ticks - 1:
+                skip = len(server.latencies)
+            for _ in range(rng5.poisson(0.4)):
+                live.append(server.submit(fresh_spec()))
+            for _ in range(rng5.poisson(0.2)):
+                if len(live) > 2:
+                    server.retire(live.pop(int(rng5.integers(len(live)))))
+        lat = np.asarray(server.latencies[skip:]) * 1e6
+        p50 = float(np.percentile(lat, 50))
+        p99 = float(np.percentile(lat, 99))
+        s5 = server.stats
+        emit(
+            f"fixpoint/daemon/poisson/sel{frac5}", p50 * 1e-6,
+            f"ticks={s5.ticks};advances={s5.advances};"
+            f"cold={s5.cold_advances};admissions={s5.admissions};"
+            f"retirements={s5.retirements};p50_us={p50:.0f};"
+            f"p99_us={p99:.0f}",
+        )
+        report["daemon"] = {
+            "width_frac": frac5,
+            "admission": {
+                "bucketed_us": adm_buck * 1e6,
+                "naive_replan_us": adm_naive * 1e6,
+                "ratio": adm_ratio,
+                "admissions_timed": daemon_admits,
+            },
+            "poisson": {
+                "ticks": int(s5.ticks),
+                "arrival_rate": 0.4,
+                "depart_rate": 0.2,
+                "advances": int(s5.advances),
+                "cold_advances": int(s5.cold_advances),
+                "admissions": int(s5.admissions),
+                "retirements": int(s5.retirements),
+                "advance_latency_p50_us": p50,
+                "advance_latency_p99_us": p99,
+            },
         }
 
     with open(path, "w") as f:

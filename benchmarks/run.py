@@ -62,7 +62,7 @@ def main() -> None:
         if args.quick:
             bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2,
                                dev_counts=(1, 2), shard_steps=8,
-                               shard_cands=96)
+                               shard_cands=96, daemon_ticks=12)
         else:
             bench_fixpoint.run()
 

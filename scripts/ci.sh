@@ -5,9 +5,10 @@ cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 # CI marker: the long-horizon serving soaks (tests/test_serving_soak.py:
-# 220 -> 60 advances; tests/test_multitenant.py: 110 -> 36 advances) are
-# reduced under CI to bound wall clock.  GitHub Actions sets CI=true
-# already; export it here so local ci.sh runs match.
+# 220 -> 60 advances; tests/test_multitenant.py: 110 -> 36 advances;
+# tests/test_daemon.py churn soak: 80 -> 24 ticks) are reduced under CI
+# to bound wall clock.  GitHub Actions sets CI=true already; export it
+# here so local ci.sh runs match.
 export CI="${CI:-1}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
@@ -20,10 +21,21 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_distributed.py tests/test_sharded_serving.py
 
+# smoke the serving daemon end to end (DESIGN.md §7.6): a short tick loop
+# with Poisson tenant churn, bucketed async admission and cost-class
+# round-robin — the launch-path wiring the daemon soak in tier-1 above
+# (tests/test_daemon.py, CI-reduced) does not cover.  Runs on both legs
+# of the jax version matrix like everything else in this script.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.serve --graph --daemon --ticks 8 --tenants 8 \
+  --n-vertices 500 --n-edges 10000
+
 # smoke the perf trajectory: gather-once vs re-gather + FUSED incremental
 # sweeps + the multi-tenant 1/4/16-tenant queries-per-second regime + the
-# sharded qps-vs-device-count chain (one-dispatch advances asserted against
-# the dispatch-site log at every batch size and device count,
-# result-identity asserted before timing; emits BENCH_fixpoint.json at the
-# repo root, including the tiny-budget crossover regime)
+# sharded qps-vs-device-count chain + the async-admission daemon part
+# (bucketed-vs-naive admission cost and Poisson p50/p99 — one-dispatch
+# advances asserted against the dispatch-site log at every batch size and
+# device count, result-identity asserted before timing; emits
+# BENCH_fixpoint.json at the repo root, including the tiny-budget
+# crossover regime)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint

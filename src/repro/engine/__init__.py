@@ -19,10 +19,14 @@ from repro.engine.plan import (  # noqa: F401
     rung,
 )
 from repro.engine.queries import (  # noqa: F401
+    DEEP_ALGORITHMS,
+    DEFAULT_COST_CLASS,
     QueryBatch,
     QueryRow,
     QuerySpec,
     SOURCE_FREE,
+    bucket_capacity,
+    cost_class_for,
     dedup_rows,
 )
 from repro.engine.backends import (  # noqa: F401
@@ -43,6 +47,10 @@ __all__ = [
     "QueryRow",
     "QuerySpec",
     "SOURCE_FREE",
+    "DEEP_ALGORITHMS",
+    "DEFAULT_COST_CLASS",
+    "cost_class_for",
+    "bucket_capacity",
     "plan_query",
     "plan_batch",
     "make_plan",

@@ -372,6 +372,7 @@ def plan_batch(
     access: str = "auto",
     backend: str = "xla_segment",
     shards: Optional[int] = None,
+    bucketed: bool = False,
     **kw,
 ) -> AccessPlan:
     """Plan ONE union AccessPlan for a whole :class:`~repro.engine.queries.
@@ -389,12 +390,17 @@ def plan_batch(
     per-device capacity derived from the shard count, so a plan made for
     one mesh shape must not silently satisfy a state carried under
     another — switching mesh shape falls cold instead of mis-aliasing the
-    jit cache."""
+    jit cache.
+
+    ``bucketed`` keys the signature on the BUCKETED per-group row
+    capacities (the admission ladder of DESIGN.md §7.6) instead of exact
+    counts, so tenant churn inside a bucket replans to the same cache
+    key."""
     plan = plan_query(
         g, tger, windows=batch.windows(), model=model, access=access,
         backend=backend, **kw,
     )
-    sig = batch.signature()
+    sig = batch.signature(bucketed=bucketed)
     if shards is not None:
         sig += f"@q{int(shards)}"
     return dataclasses.replace(

@@ -37,6 +37,33 @@ import numpy as np
 # serve validates against its own registry again at dispatch time.
 SOURCE_FREE = ("pagerank", "cc", "kcore")
 
+# Default cost class per algorithm (DESIGN.md §7.6): "deep" tenants run
+# long fixpoints (pagerank's fixed iteration ladder, betweenness's
+# two-pass DAG accumulation) and would stall the fused dispatch every
+# cheap tenant shares; the serving daemon splits fused schedules by class
+# and round-robins the deep classes across advances.  A QuerySpec may
+# override with an explicit ``cost_class=``.
+DEEP_ALGORITHMS = ("pagerank", "betweenness")
+DEFAULT_COST_CLASS = "cheap"
+
+
+def cost_class_for(algorithm: str) -> str:
+    return "deep" if algorithm in DEEP_ALGORITHMS else DEFAULT_COST_CLASS
+
+
+def bucket_capacity(n: int, prev_cap: int = 0) -> int:
+    """The admission bucket ladder (DESIGN.md §7.6): group row counts pad
+    to power-of-two capacities so a tenant admitted (or retired) INSIDE a
+    bucket changes no static shape — the fused step's jit cache hits and
+    the donated state is consumed warm.  ``prev_cap`` applies hysteresis:
+    a resident group keeps its capacity while ``prev_cap // 4 < n <=
+    prev_cap`` (shrinking the bucket on every departure would thrash the
+    cache the ladder exists to pin)."""
+    n = max(int(n), 1)
+    if prev_cap and prev_cap // 4 < n <= prev_cap:
+        return int(prev_cap)
+    return 1 << (n - 1).bit_length()
+
 
 def _params_token(params) -> Tuple[Tuple[str, Any], ...]:
     if isinstance(params, dict):
@@ -57,11 +84,16 @@ class QuerySpec:
     window: Tuple[int, int]
     sources: Tuple[int, ...] = ()
     params: Tuple[Tuple[str, Any], ...] = ()
+    cost_class: Optional[str] = None    # None = derive from the algorithm
 
     @classmethod
-    def make(cls, algorithm: str, window, sources=None, **params) -> "QuerySpec":
+    def make(cls, algorithm: str, window, sources=None, cost_class=None,
+             **params) -> "QuerySpec":
         """Normalizing constructor: scalar/sequence sources, any window
-        pair, kwargs as params."""
+        pair, kwargs as params.  ``cost_class`` overrides the per-algorithm
+        default (DEEP_ALGORITHMS -> "deep", else "cheap") — it tags the
+        spec for the serving daemon's class-split scheduling and is NOT
+        part of the group key or the batch signature."""
         if sources is None:
             src: Tuple[int, ...] = ()
         elif np.ndim(sources) == 0:
@@ -77,7 +109,13 @@ class QuerySpec:
             window=(int(window[0]), int(window[1])),
             sources=src,
             params=_params_token(params),
+            cost_class=None if cost_class is None else str(cost_class),
         )
+
+    @property
+    def resolved_cost_class(self) -> str:
+        return (self.cost_class if self.cost_class is not None
+                else cost_class_for(self.algorithm))
 
     @property
     def n_rows(self) -> int:
@@ -160,19 +198,34 @@ class QueryBatch:
             seen.setdefault(s.window, None)
         return list(seen)
 
-    def signature(self) -> str:
+    def by_cost_class(self) -> Dict[str, "QueryBatch"]:
+        """Specs split into per-cost-class sub-batches, first-appearance
+        class order — the unit the serving daemon schedules round-robin
+        (DESIGN.md §7.6): each class gets its own fused schedule and
+        advance chain, so a deep tenant's 100-iteration while_loop never
+        sits in the dispatch a cheap tenant's latency waits on."""
+        out: Dict[str, List[QuerySpec]] = {}
+        for spec in self.specs:
+            out.setdefault(spec.resolved_cost_class, []).append(spec)
+        return {c: QueryBatch.make(s) for c, s in out.items()}
+
+    def signature(self, bucketed: bool = False) -> str:
         """The static batch-SHAPE descriptor that rides the AccessPlan
         cache key: per-group algorithm names + row counts (readable) plus
         a crc of the full (algorithm, params, n_rows) group structure
         (collision-safe for distinct param sets).  Window bounds and
         source ids are deliberately EXCLUDED — they are dynamic arguments
         of the fused step, and keying on them would defeat the jit-cache
-        pinning the serving soak asserts."""
+        pinning the serving soak asserts.  ``bucketed=True`` keys the
+        BUCKETED row capacities instead of the exact counts (the admission
+        ladder of DESIGN.md §7.6), so tenant churn inside a bucket reuses
+        the same plan."""
         parts = []
         desc = []
         for (alg, params), rows in self.groups().items():
-            parts.append(f"{alg}x{len(rows)}")
-            desc.append((alg, params, len(rows)))
+            n = bucket_capacity(len(rows)) if bucketed else len(rows)
+            parts.append(f"{alg}x{n}{'b' if bucketed else ''}")
+            desc.append((alg, params, n))
         crc = zlib.crc32(repr(desc).encode()) & 0xFFFFFFFF
         return "+".join(parts) + f"#{crc:08x}"
 
@@ -209,4 +262,5 @@ def dedup_rows(sources, windows):
 
 
 __all__ = ["QuerySpec", "QueryRow", "QueryBatch", "SOURCE_FREE",
-           "dedup_rows"]
+           "DEEP_ALGORITHMS", "DEFAULT_COST_CLASS", "cost_class_for",
+           "bucket_capacity", "dedup_rows"]

@@ -9,6 +9,11 @@ sliding-window temporal-graph batch serving.
   # XLA_FLAGS=--xla_force_host_platform_device_count=N on a 1-device host)
   PYTHONPATH=src python -m repro.launch.serve --graph --tenants 16 \
       --advances 24 --shard-queries 2
+
+  # daemon mode (DESIGN.md §7.6): long-lived tick loop with Poisson tenant
+  # arrivals/departures, bucketed async admission, cost-class round-robin
+  PYTHONPATH=src python -m repro.launch.serve --graph --daemon \
+      --ticks 40 --arrival-rate 0.5 --depart-rate 0.1
 """
 from __future__ import annotations
 
@@ -70,6 +75,67 @@ def run_graph(args) -> None:
     )
 
 
+def run_daemon(args) -> None:
+    """The long-lived serving daemon (DESIGN.md §7.6): Poisson tenant
+    arrivals/departures over all five cost-classed algorithms, async
+    admission at tick boundaries, per-class bucketed advance chains."""
+    from repro.core.tger import build_tger
+    from repro.data.generators import power_law_temporal_graph
+    from repro.engine import QuerySpec
+
+    g = power_law_temporal_graph(args.n_vertices, args.n_edges,
+                                 seed=args.seed)
+    idx = build_tger(g, degree_cutoff=max(args.n_edges // 800, 16))
+    ts = np.asarray(g.t_start)
+    t_max = int(np.asarray(g.t_end).max())
+    span = int(ts.max() - ts.min())
+    width = max(span // 80, 1)
+    stride = max(width // 8, 1)
+    t_base = t_max - (args.ticks + 2) * stride
+    algs = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank")
+    rng = np.random.default_rng(args.seed)
+
+    def fresh_spec(i: int) -> QuerySpec:
+        alg = algs[i % len(algs)]
+        w = (0, width)
+        if alg == "cc":
+            return QuerySpec.make(alg, w)
+        if alg == "pagerank":
+            return QuerySpec.make(alg, w, n_iters=8)
+        return QuerySpec.make(alg, w, sources=(7 * i) % args.n_vertices)
+
+    server = GraphBatchServer(g, idx, access="index")
+    live: list = []
+    for i in range(args.tenants):            # the resident base load
+        live.append(server.submit(fresh_spec(i)))
+    n_spawned = args.tenants
+
+    t0 = time.perf_counter()
+    for k in range(args.ticks):
+        rep = server.tick(t_base + k * stride)
+        for _ in range(rng.poisson(args.arrival_rate)):
+            live.append(server.submit(fresh_spec(n_spawned)))
+            n_spawned += 1
+        for _ in range(rng.poisson(args.depart_rate)):
+            if len(live) > 1:
+                server.retire(live.pop(rng.integers(len(live))))
+    dt = time.perf_counter() - t0
+
+    s = server.stats
+    lat = np.asarray(server.latencies)
+    print(
+        f"daemon: {s.ticks} ticks, {s.advances} class advances "
+        f"({s.cold_advances} cold, {s.fused_dispatches} fused), "
+        f"{s.admissions} admissions / {s.retirements} retirements, "
+        f"{s.rows_served} rows served in {dt:.2f}s"
+    )
+    print(
+        f"per-advance latency: p50 {1e3 * np.percentile(lat, 50):.2f} ms, "
+        f"p99 {1e3 * np.percentile(lat, 99):.2f} ms "
+        f"({len(server.tenants)} tenants live at exit)"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -87,8 +153,18 @@ def main():
     ap.add_argument("--n-edges", type=int, default=50_000)
     ap.add_argument("--shard-queries", type=int, default=None,
                     help="shard the tenant axis over N devices")
+    ap.add_argument("--daemon", action="store_true",
+                    help="graph daemon mode: tick loop with Poisson churn")
+    ap.add_argument("--ticks", type=int, default=40)
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="Poisson tenant arrivals per tick")
+    ap.add_argument("--depart-rate", type=float, default=0.25,
+                    help="Poisson tenant departures per tick")
     args = ap.parse_args()
 
+    if args.daemon:
+        run_daemon(args)
+        return
     if args.graph:
         run_graph(args)
         return

@@ -3,10 +3,18 @@ from repro.serve.window_sweep import (  # noqa: F401
     QueryBatch,
     QuerySpec,
     SweepState,
+    dispatch_log,
+    fused_trace_count,
     query_mesh,
     serve_batch,
     sliding_windows,
     sweep,
     sweep_incremental,
     sweep_looped,
+)
+from repro.serve.engine import (  # noqa: F401
+    GraphBatchServer,
+    GraphServeStats,
+    ServeEngine,
+    TickReport,
 )

@@ -15,17 +15,29 @@ when the tenant axis is sharded across devices (DESIGN.md §7.5), and
 running advance/dispatch stats.  It owns the donation contract so callers
 don't have to: results handed out are host snapshots, safe to keep after
 the next advance consumes the device buffers.
+
+Since DESIGN.md §7.6 the graph server is also a long-lived DAEMON:
+``submit``/``retire`` queue tenant churn asynchronously, and ``tick``
+applies the pending admissions, rebuilds every live tenant's sliding
+window at the tick's ``t_now``, and serves the instantaneous batch split
+by COST CLASS — the cheap class every tick, the deep classes (pagerank,
+betweenness, or any explicit ``cost_class=`` tag) round-robin one per
+tick — each class on its own bucketed-admission advance chain, so
+within-bucket churn is a jit-cache hit and a deep tenant's long fixpoint
+never sits in the dispatch a cheap tenant's latency waits on.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.queries import DEFAULT_COST_CLASS, QueryBatch, QuerySpec
 from repro.models.transformer import LMConfig, decode_step, init_cache, prefill
 
 
@@ -71,8 +83,15 @@ class ServeEngine:
 
     def _fill_slots(self):
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
+            if self.active[s] is not None:
+                continue
+            while self.queue:
                 req = self.queue.popleft()
+                if req.max_new_tokens <= 0:
+                    # zero-budget request: completes with no tokens — it
+                    # never even prefills, and the slot stays free
+                    self.stats.requests_completed += 1
+                    continue
                 prompt = jnp.asarray(req.prompt)[None, :]
                 logits, pcache = prefill(self.params, prompt, self.cfg, max_seq=self.max_seq)
                 # copy this request's cache rows into slot s
@@ -81,10 +100,17 @@ class ServeEngine:
                 tok = int(jnp.argmax(logits[0]))
                 req.generated.append(tok)
                 self.stats.tokens_generated += 1  # first token (from prefill)
+                if req.max_new_tokens == 1:
+                    # the prefill token IS the whole budget: finish at fill
+                    # time — occupying a slot would run a decode step and
+                    # emit a second token past max_new_tokens
+                    self.stats.requests_completed += 1
+                    continue
                 self.active[s] = req
                 self.lengths[s] = len(req.prompt)
                 self.last_tokens[s] = tok
                 self.budget[s] = req.max_new_tokens - 1
+                break
 
     # -- engine loop ------------------------------------------------------------
 
@@ -142,23 +168,58 @@ class GraphServeStats:
     dispatches: int = 0             # all dispatch-site hits (cold + fused)
     fused_dispatches: int = 0       # one per steady-state advance (per
                                     # device group, not per device)
+    ticks: int = 0                  # daemon ticks served
+    admissions: int = 0             # tenants admitted by the daemon
+    retirements: int = 0            # tenants retired by the daemon
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one daemon tick did: the churn it applied, the cost classes it
+    served, and host-snapshot per-tenant results for the SERVED classes
+    (tenants whose deep class was skipped this round keep their previous
+    answer — that is the round-robin contract)."""
+
+    tick: int
+    t_now: int
+    classes_served: Tuple[str, ...]
+    admitted: Tuple[int, ...]
+    retired: Tuple[int, ...]
+    results: Dict[int, Any]         # tenant id -> [n_rows, V] host rows
+                                    # (tuple of arrays for multi-output)
+    latency_s: float
 
 
 class GraphBatchServer:
     """Continuous batch serving for temporal-graph queries.
 
-    One ``advance(batch)`` call per tick: the whole (algorithm x source x
-    window) :class:`~repro.engine.queries.QueryBatch` rides ONE ring
-    advance and one fused dispatch (per device, when ``mesh`` shards the
-    tenant axis — pass a device count or a ``jax.sharding.Mesh``).  The
-    server carries the single-use ``SweepState`` between ticks and snaps
-    results to host arrays before handing them out, because the next
-    advance DONATES the previous device buffers (DESIGN.md §7.3).
+    Two modes share the server.  The batch mode is one ``advance(batch)``
+    call per tick: the whole (algorithm x source x window)
+    :class:`~repro.engine.queries.QueryBatch` rides ONE ring advance and
+    one fused dispatch (per device, when ``mesh`` shards the tenant axis —
+    pass a device count or a ``jax.sharding.Mesh``).  The server carries
+    the single-use ``SweepState`` between ticks and snaps results to host
+    arrays before handing them out, because the next advance DONATES the
+    previous device buffers (DESIGN.md §7.3).  If an advance raises
+    mid-flight the state is INVALIDATED (the fused step may already have
+    consumed the donated buffers — a moved-from state must not be offered
+    again), so the next advance runs cold instead of crashing on deleted
+    buffers.
+
+    The daemon mode (DESIGN.md §7.6) is ``submit``/``retire``/``tick``:
+    tenants are long-lived sliding-window subscriptions, churn queues
+    asynchronously and is applied at tick boundaries, and each tick serves
+    the instantaneous batch split by COST CLASS — the cheap class every
+    tick, deep classes round-robin one per tick — with each class chain
+    running ``admission="bucketed"`` so within-bucket churn never
+    retraces and never consumes donated state cold.  Daemon mode is
+    single-device (bucketed admission and the query mesh are mutually
+    exclusive).
     """
 
     def __init__(self, graph, tger=None, *, access: str = "auto",
                  backend: str = "xla_segment", plan=None, mesh=None,
-                 warm_start: bool = False):
+                 warm_start: bool = False, admission: Optional[str] = None):
         self.graph = graph
         self.tger = tger
         self.access = access
@@ -166,23 +227,39 @@ class GraphBatchServer:
         self.plan = plan
         self.mesh = mesh
         self.warm_start = warm_start
+        self.admission = admission
         self.state = None
         self.stats = GraphServeStats()
+        self.latencies: List[float] = []    # per class-serve seconds
+        # -- daemon registries (tick mode) ---------------------------------
+        self._tenants: Dict[int, QuerySpec] = {}    # tid -> template spec
+        self._pending_admit: Deque[Tuple[int, QuerySpec]] = deque()
+        self._pending_retire: Deque[int] = deque()
+        self._next_tid = 0
+        self._class_states: Dict[str, Any] = {}     # cost class -> SweepState
+        self._rr = 0                                # deep-class round-robin
+
+    # -- batch mode ---------------------------------------------------------
 
     def advance(self, batch) -> List:
         """Serve one batch tick; returns host-snapshot per-group results
         (same grouping as :func:`repro.serve.serve_batch`)."""
         from repro.serve import window_sweep as ws
 
-        outer = ws._DISPATCH_LOG
-        ws._DISPATCH_LOG = log = []
-        try:
-            results, self.state = ws.serve_batch(
-                self.graph, batch, self.tger, state=self.state,
-                access=self.access, backend=self.backend, plan=self.plan,
-                warm_start=self.warm_start, mesh=self.mesh)
-        finally:
-            ws._DISPATCH_LOG = outer
+        with ws.dispatch_log() as log:
+            try:
+                results, self.state = ws.serve_batch(
+                    self.graph, batch, self.tger, state=self.state,
+                    access=self.access, backend=self.backend, plan=self.plan,
+                    warm_start=self.warm_start, mesh=self.mesh,
+                    admission=self.admission)
+            except BaseException:
+                # the donation contract (DESIGN.md §7.3): the fused step
+                # may have consumed the state's buffers before raising, so
+                # the carried state is moved-from either way — drop it and
+                # let the retry run cold rather than reuse donated buffers
+                self.state = None
+                raise
         snapped = [
             tuple(np.asarray(x) for x in r) if isinstance(r, tuple)
             else np.asarray(r)
@@ -197,6 +274,121 @@ class GraphBatchServer:
         self.stats.fused_dispatches += sum(
             1 for t in log if t.startswith("fused:"))
         return snapped
+
+    # -- daemon mode (DESIGN.md §7.6) ---------------------------------------
+
+    def submit(self, spec: QuerySpec) -> int:
+        """Queue a tenant for ASYNC admission; returns its tenant id.  The
+        spec is a template: its window's WIDTH is the subscription, the
+        bounds re-anchor to every tick's ``t_now``.  Admission happens at
+        the next ``tick`` — submitting never replans, retraces, or touches
+        device state."""
+        tid = self._next_tid
+        self._next_tid += 1
+        self._pending_admit.append((tid, spec))
+        return tid
+
+    def retire(self, tid: int) -> None:
+        """Queue a tenant for retirement at the next ``tick`` (unknown or
+        already-retired ids are ignored there)."""
+        self._pending_retire.append(tid)
+
+    @property
+    def tenants(self) -> Dict[int, QuerySpec]:
+        """The LIVE tenant registry (admitted, not retired) — a copy."""
+        return dict(self._tenants)
+
+    def _serve_class(self, cls: str, sub: QueryBatch, tids: List[int],
+                     results: Dict[int, Any]) -> None:
+        from repro.serve import window_sweep as ws
+
+        t0 = time.perf_counter()
+        with ws.dispatch_log() as log:
+            try:
+                res, st = ws.serve_batch(
+                    self.graph, sub, self.tger,
+                    state=self._class_states.get(cls),
+                    access=self.access, backend=self.backend,
+                    plan=self.plan, admission="bucketed")
+            except BaseException:
+                self._class_states.pop(cls, None)   # moved-from: force-cold
+                raise
+        self._class_states[cls] = st
+        self.stats.advances += 1
+        if st.last_advance == "cold":
+            self.stats.cold_advances += 1
+        self.stats.rows_served += int(sub.n_rows)
+        self.stats.rows_solved += int(st.n_solved_unique)
+        self.stats.dispatches += len(log)
+        self.stats.fused_dispatches += sum(
+            1 for t in log if t.startswith("fused:"))
+        # host-snapshot per tenant, sliced to the group's REAL rows (the
+        # bucketed buffers are padded to the bucket capacity)
+        for gi, (key, rows) in enumerate(sub.groups().items()):
+            r = res[gi]
+            host = tuple(
+                np.asarray(x)
+                for x in (r if isinstance(r, tuple) else (r,)))
+            per_spec: Dict[int, List[int]] = {}
+            for j, row in enumerate(rows):
+                per_spec.setdefault(row.spec_index, []).append(j)
+            for si, row_ids in per_spec.items():
+                picked = tuple(h[row_ids] for h in host)
+                results[tids[si]] = (
+                    picked[0] if len(picked) == 1 else picked)
+        self.latencies.append(time.perf_counter() - t0)
+
+    def tick(self, t_now: int) -> TickReport:
+        """One daemon tick: apply pending churn, re-anchor every live
+        tenant's window to end at ``t_now``, and serve the instantaneous
+        batch by cost class (cheap every tick, deep classes round-robin
+        one per tick).  Returns a :class:`TickReport`; served tenants'
+        results are host snapshots sliced to their real rows."""
+        t_start = time.perf_counter()
+        admitted: List[int] = []
+        while self._pending_admit:
+            tid, spec = self._pending_admit.popleft()
+            self._tenants[tid] = spec
+            admitted.append(tid)
+            self.stats.admissions += 1
+        retired: List[int] = []
+        while self._pending_retire:
+            tid = self._pending_retire.popleft()
+            if self._tenants.pop(tid, None) is not None:
+                retired.append(tid)
+                self.stats.retirements += 1
+        self.stats.ticks += 1
+        tick_no = self.stats.ticks
+        results: Dict[int, Any] = {}
+        classes_served: Tuple[str, ...] = ()
+        if self._tenants:
+            # the instantaneous batch: every live tenant's window slid to
+            # end at t_now (width preserved from the submitted template)
+            tids_all: List[int] = []
+            specs: List[QuerySpec] = []
+            for tid, spec in self._tenants.items():
+                width = int(spec.window[1]) - int(spec.window[0])
+                specs.append(dataclasses.replace(
+                    spec, window=(int(t_now) - width, int(t_now))))
+                tids_all.append(tid)
+            by_cls: Dict[str, List[int]] = {}
+            for i, spec in enumerate(specs):
+                by_cls.setdefault(spec.resolved_cost_class, []).append(i)
+            serve_now = [c for c in by_cls if c == DEFAULT_COST_CLASS]
+            deep = [c for c in by_cls if c != DEFAULT_COST_CLASS]
+            if deep:
+                serve_now.append(deep[self._rr % len(deep)])
+                self._rr += 1
+            for cls in serve_now:
+                idxs = by_cls[cls]
+                sub = QueryBatch.make([specs[i] for i in idxs])
+                self._serve_class(cls, sub, [tids_all[i] for i in idxs],
+                                  results)
+            classes_served = tuple(serve_now)
+        return TickReport(
+            tick=tick_no, t_now=int(t_now), classes_served=classes_served,
+            admitted=tuple(admitted), retired=tuple(retired),
+            results=results, latency_s=time.perf_counter() - t_start)
 
     @property
     def devices(self) -> int:

@@ -47,6 +47,8 @@ everywhere floats cross views).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import functools
 import warnings
@@ -107,7 +109,12 @@ from repro.distributed.query_shard import (
     replicated_arrays,
     row_partition,
 )
-from repro.engine.queries import QueryBatch, QuerySpec, dedup_rows
+from repro.engine.queries import (
+    QueryBatch,
+    QuerySpec,
+    bucket_capacity,
+    dedup_rows,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -465,7 +472,33 @@ _TRACE_COUNTS: dict = {}
 # site in the incremental path appends a tag — the steady-state advance
 # must log exactly one "fused:<method>" entry (the acceptance property),
 # no matter how many tenants the batch carries.
+#
+# Two handles coexist.  The module global is the legacy test hook
+# (``ws._DISPATCH_LOG = log = []``); the contextvar is the REENTRANT
+# handle :func:`dispatch_log` manages — nested scopes (a GraphBatchServer
+# tick inside a test that also reads the log) each observe every tag
+# without the save/swap/restore dance that used to clobber concurrent
+# readers, and contextvars give each thread/async context its own stack.
 _DISPATCH_LOG: Optional[list] = None
+
+_DISPATCH_LOG_VAR: "contextvars.ContextVar[tuple]" = contextvars.ContextVar(
+    "repro_serve_dispatch_logs", default=())
+
+
+@contextlib.contextmanager
+def dispatch_log():
+    """Collect dispatch-site tags for the enclosed calls: ``with
+    dispatch_log() as log: ...``.  Re-entrant — nested scopes STACK, every
+    enclosing log receives the tags of its whole extent (an outer observer
+    is not blinded by an inner scope the way the old module-global swap
+    blinded it), and the contextvar scoping keeps concurrent servers on
+    different threads from clobbering each other's logs."""
+    log: list = []
+    token = _DISPATCH_LOG_VAR.set(_DISPATCH_LOG_VAR.get() + (log,))
+    try:
+        yield log
+    finally:
+        _DISPATCH_LOG_VAR.reset(token)
 
 
 def fused_trace_count() -> int:
@@ -478,7 +511,11 @@ def _trace_event(tag) -> None:
 
 
 def _note(tag: str) -> None:
-    if _DISPATCH_LOG is not None:
+    logs = _DISPATCH_LOG_VAR.get()
+    for log in logs:
+        log.append(tag)
+    if _DISPATCH_LOG is not None and all(
+            _DISPATCH_LOG is not log for log in logs):
         _DISPATCH_LOG.append(tag)
 
 
@@ -537,6 +574,11 @@ class SweepState:
     last_rounds: Any = None      # i32 device scalar(s) (EA groups; lazy, no sync)
     mesh: Any = None             # query Mesh of a SHARDED stream (DESIGN.md §7.5)
     n_solved_unique: int = 0     # rows that actually ran a fixpoint after dedup
+    group_caps: tuple = ()       # per-group BUCKETED row capacity (§7.6;
+                                 # empty = exact-shape static schedule mode)
+    last_schedule: Any = None    # static schedule of the last fused advance
+                                 # (None after cold/noop/reorder) — the churn
+                                 # soak keys retrace accounting on it
 
     # -- single-tenant back-compat views ------------------------------------
 
@@ -642,7 +684,7 @@ def _solve_rows_sharded(entry, params, plan, n_vertices, mesh, edges,
 
 
 def _solve_groups(edges, plan, n_vertices, schedule, prev_results,
-                  new_windows, new_sources, inits, mesh=None):
+                  new_windows, new_sources, inits, maps=None, mesh=None):
     """The dispatch-table core of the fused step: every group's solve (of
     only its genuinely-new rows) + row assembly, traced into ONE program
     over the just-advanced view.  ``schedule`` is static — (algorithm,
@@ -650,12 +692,43 @@ def _solve_groups(edges, plan, n_vertices, schedule, prev_results,
     structure specializes the compilation exactly like the budget rungs
     do.  ``solve_map`` (None = identity) maps the full new-row axis onto
     the deduplicated (and, under a query mesh, padded) solved rows; with a
-    ``mesh`` the solve itself row-shards across devices."""
+    ``mesh`` the solve itself row-shards across devices.
+
+    A group may instead carry a BUCKETED entry ``(algorithm, params,
+    "bucket", cap, n_new_cap)`` (the §7.6 admission ladder): its row maps
+    are DYNAMIC i32[cap] arrays in ``maps`` rather than static schedule
+    fields, so the trace signature keys only the padded capacities — a
+    tenant admitted or retired inside the bucket changes no static shape.
+    Assembly is one gather over the concatenated (previous-buffer ‖
+    freshly-solved) row pool; pad slots replicate the last real row."""
     out, rounds_out = [], []
-    for gi, (algorithm, params, row_map, new_pos, solve_map) \
-            in enumerate(schedule):
+    for gi, entry_s in enumerate(schedule):
+        algorithm, params = entry_s[0], entry_s[1]
         entry = _ALGOS[algorithm]
         prev = prev_results[gi]
+        if entry_s[2] == "bucket":
+            n_new_cap = entry_s[4]
+            sel = jnp.asarray(maps[gi], jnp.int32)
+            if n_new_cap:
+                sub, rounds = entry.solve(
+                    edges, new_windows[gi], new_sources[gi], plan,
+                    n_vertices, inits[gi], dict(params))
+                subs = sub if isinstance(sub, tuple) else (sub,)
+                if prev is None:
+                    pool = subs
+                else:
+                    prevs = prev if isinstance(prev, tuple) else (prev,)
+                    pool = tuple(
+                        jnp.concatenate([p, s], axis=0)
+                        for p, s in zip(prevs, subs))
+            else:
+                rounds = jnp.int32(-1)
+                pool = prev if isinstance(prev, tuple) else (prev,)
+            picked = tuple(p[sel] for p in pool)
+            out.append(picked[0] if entry.n_outputs == 1 else picked)
+            rounds_out.append(rounds)
+            continue
+        row_map, new_pos, solve_map = entry_s[2], entry_s[3], entry_s[4]
         if new_pos:
             if mesh is None:
                 sub, rounds = entry.solve(
@@ -710,6 +783,7 @@ def _fused_step_ring(
     new_windows,                    # tuple per group: i32[Qn, 2] | None
     new_sources,                    # tuple per group: i32[Qn] | None
     inits,                          # tuple per group: warm init pytree | None
+    maps,                           # tuple per group: i32[cap] sel | None
     positions,                      # i32[3]: (lo_prev, lo_new, hi_new) packed
     *,
     method: str,
@@ -728,7 +802,7 @@ def _fused_step_ring(
         capacity=capacity, delta_budget=delta_budget)
     results, rounds = _solve_groups(
         edges, plan, n_vertices, schedule, prev_results, new_windows,
-        new_sources, inits, mesh=mesh)
+        new_sources, inits, maps=maps, mesh=mesh)
     return results, edges, rounds
 
 
@@ -746,6 +820,7 @@ def _fused_step_scan(
     new_windows,
     new_sources,
     inits,
+    maps,                           # tuple per group: i32[cap] sel | None
     *,
     n_vertices: int,
     schedule: tuple,
@@ -755,7 +830,7 @@ def _fused_step_scan(
     edges = EdgeView(*fields, jnp.ones(fields[0].shape[0], dtype=bool))
     results, rounds = _solve_groups(
         edges, plan, n_vertices, schedule, prev_results, new_windows,
-        new_sources, inits, mesh=mesh)
+        new_sources, inits, maps=maps, mesh=mesh)
     return results, rounds
 
 
@@ -828,6 +903,7 @@ def _advance(
     plan_builder: Callable[[], AccessPlan],
     warm_start: bool,
     mesh: Optional[Mesh] = None,
+    bucketed: bool = False,
 ):
     """The incremental advance shared by ``serve_batch`` (multi-tenant) and
     ``sweep_incremental`` (single-tenant wrapper): match every group's rows
@@ -836,15 +912,34 @@ def _advance(
     to a cold plan+build+solve only when coverage or direction force it.
     With a query ``mesh`` the fused step row-shards every group's solve
     across the mesh devices (DESIGN.md §7.5) — still one dispatch per
-    device per advance."""
+    device per advance.
+
+    ``bucketed=True`` is the §7.6 admission-ladder mode the serving daemon
+    drives: every group's result buffer is PADDED to its power-of-two
+    :func:`~repro.engine.queries.bucket_capacity` (pad slots replicate the
+    last real row) and the fused schedule carries only the padded
+    capacities statically — row assignment travels as dynamic i32[cap]
+    gather maps — so tenant churn inside a bucket is a jit-cache HIT that
+    consumes the donated state warm."""
     union = (
         min(int(w[:, 0].min()) for _, _, w in groups),
         max(int(w[:, 1].max()) for _, _, w in groups),
     )
     n_rows_total = sum(len(s) for _, s, _ in groups)
 
+    caps: tuple = ()
+    if bucketed:
+        prev_caps = (
+            {} if state is None
+            else dict(zip(state.group_keys, state.group_caps))
+        )
+        caps = tuple(
+            bucket_capacity(len(s), prev_caps.get(key, 0))
+            for key, s, _ in groups
+        )
+
     def freeze(plan, edges, lo, hi, capacity, results, advance, n_solved,
-               warm_applied, rounds, n_unique=0):
+               warm_applied, rounds, n_unique=0, last_schedule=None):
         return SweepState(
             group_keys=tuple(k for k, _, _ in groups),
             group_sources=tuple(tuple(s) for _, s, _ in groups),
@@ -854,7 +949,8 @@ def _advance(
             last_advance=advance, n_solved=n_solved,
             warm_applied=warm_applied,
             last_rounds=rounds[0] if len(rounds) == 1 else rounds,
-            mesh=mesh, n_solved_unique=n_unique,
+            mesh=mesh, n_solved_unique=n_unique, group_caps=caps,
+            last_schedule=last_schedule,
         )
 
     def cold(prev_plan=None):
@@ -874,7 +970,7 @@ def _advance(
             # stays wherever the graph lives.
             edges = replicate(edges, mesh)
         results, rounds, n_unique = [], [], 0
-        for key, sources, wins in groups:
+        for gi, (key, sources, wins) in enumerate(groups):
             entry = _ALGOS[key[0]]
             _note("cold:solve")
             u_sources, u_windows, inverse = dedup_rows(sources, wins)
@@ -886,8 +982,14 @@ def _advance(
             res, rnd = entry.solve(
                 edges, jnp.asarray(u_windows), src_dev, p, g.n_vertices,
                 None, dict(key[1]))
-            if inverse != tuple(range(len(sources))):
-                res = _gather_solved(res, inverse, entry.n_outputs)
+            out_map = tuple(inverse)
+            if bucketed:
+                # pad the buffer to the bucket capacity, replicating the
+                # last real row (pad rows converge identically — they ARE
+                # a real row — and never surface: the daemon slices)
+                out_map = out_map + (out_map[-1],) * (caps[gi] - len(out_map))
+            if out_map != tuple(range(len(u_sources))):
+                res = _gather_solved(res, out_map, entry.n_outputs)
             results.append(res)
             rounds.append(rnd)
         if mesh is not None:
@@ -929,13 +1031,18 @@ def _advance(
             return state.results, dataclasses.replace(
                 state, last_advance="noop", n_solved=0, warm_applied=False,
                 n_solved_unique=0)
-        # permutation of answered rows: per-group host-level gathers
+        # permutation of answered rows: per-group host-level gathers (in
+        # bucketed mode the gather maps pad back out to the — possibly
+        # hysteresis-shrunk — bucket capacity)
         _note("reorder")
-        results = tuple(
-            _gather_rows(state.results[prev_idx[key]],
-                         tuple(ms), _ALGOS[key[0]].n_outputs)
-            for (key, _, _), ms in zip(groups, matched)
-        )
+        results = []
+        for gi, ((key, _, _), ms) in enumerate(zip(groups, matched)):
+            mm = tuple(ms)
+            if bucketed:
+                mm = mm + (mm[-1],) * (caps[gi] - len(mm))
+            results.append(_gather_rows(
+                state.results[prev_idx[key]], mm, _ALGOS[key[0]].n_outputs))
+        results = tuple(results)
         return results, freeze(
             p, state.edges, state.lo, state.hi, state.capacity, results,
             "reorder", 0, False,
@@ -1005,6 +1112,83 @@ def _advance(
         return (tuple(schedule), tuple(prev_results), tuple(new_windows),
                 tuple(new_sources), tuple(inits), any_warm, n_unique)
 
+    # ---- the §7.6 bucketed schedule: static capacities, dynamic maps ------
+    def build_schedule_bucketed():
+        """Admission-ladder variant of ``build_schedule``: the schedule
+        entry is ``(algorithm, params, "bucket", cap, K)`` — ONLY the
+        padded bucket capacity and the solve-capacity rung are static.
+        Row assignment travels as a dynamic i32[cap] gather map over the
+        concatenated (previous padded buffer ‖ freshly solved rows) pool,
+        so admitting/retiring a tenant inside the bucket reuses the exact
+        compiled program and consumes the donated state warm."""
+        schedule, prev_results, new_windows, new_sources, inits, maps = \
+            [], [], [], [], [], []
+        n_unique = 0
+        for gi, ((key, sources, wins), ms) in enumerate(zip(groups, matched)):
+            entry = _ALGOS[key[0]]
+            cap = caps[gi]
+            pi = prev_idx.get(key)
+            prev_res = None if pi is None else state.results[pi]
+            if pi is not None and state.group_caps[pi] != cap:
+                # bucket transition: re-pad the carried buffer to the NEW
+                # capacity (one host-level gather, only when the bucket
+                # itself changes) so the fused step's input shapes key
+                # ONLY the current capacities — the transition costs one
+                # retrace, every within-bucket advance after it none
+                needed = sorted({m for m in ms if m is not None}) or [0]
+                remap = {m: j for j, m in enumerate(needed)}
+                rm = tuple(needed) + (needed[-1],) * (cap - len(needed))
+                _note("rebucket")
+                prev_res = _gather_rows(prev_res, rm, entry.n_outputs)
+                ms = [None if m is None else remap[m] for m in ms]
+            new_idx = [i for i, m in enumerate(ms) if m is None]
+            inverse: tuple = ()
+            K = 0
+            if new_idx:
+                u_sources, u_windows, inverse = dedup_rows(
+                    [sources[i] for i in new_idx], wins[new_idx])
+                m_u = len(u_sources)
+                n_unique += m_u
+                # the new-row solve pads to the FULL bucket capacity: one
+                # has-new-rows variant per capacity ever compiles, so
+                # within-bucket churn can never shift a solve rung
+                K = cap
+                if K != m_u:
+                    pad_map = list(range(m_u)) + [m_u - 1] * (K - m_u)
+                    u_windows = u_windows[pad_map]
+                    u_sources = [u_sources[j] for j in pad_map]
+                new_windows.append(np.ascontiguousarray(u_windows))
+                new_sources.append(
+                    None if entry.source_free
+                    else np.asarray(u_sources, np.int32))
+            else:
+                new_windows.append(None)
+                new_sources.append(None)
+            inits.append(None)      # warm starts are refused in bucketed mode
+            offset = 0 if pi is None else cap
+            pos = {i: j for j, i in enumerate(new_idx)}
+            sel = [
+                m if m is not None else offset + inverse[pos[i]]
+                for i, m in enumerate(ms)
+            ]
+            sel.extend([sel[-1]] * (cap - len(sel)))
+            maps.append(np.asarray(sel, np.int32))
+            schedule.append((key[0], key[1], "bucket", cap, K))
+            prev_results.append(prev_res)
+        return (tuple(schedule), tuple(prev_results), tuple(new_windows),
+                tuple(new_sources), tuple(inits), tuple(maps), n_unique)
+
+    def built():
+        if bucketed:
+            (schedule, prev_results, new_windows, new_sources, inits,
+             maps_t, n_unique) = build_schedule_bucketed()
+            return (schedule, prev_results, new_windows, new_sources,
+                    inits, maps_t, False, n_unique)
+        (schedule, prev_results, new_windows, new_sources, inits,
+         any_warm, n_unique) = build_schedule()
+        return (schedule, prev_results, new_windows, new_sources, inits,
+                None, any_warm, n_unique)
+
     fields = (g.src, g.dst, g.t_start, g.t_end, g.weight)
     if mesh is not None:
         # identity-cached replication: the graph arrays transfer once per
@@ -1016,15 +1200,15 @@ def _advance(
     # ---- fused advance: ring slide + all solves + assembly, one dispatch --
     if p.method == "scan":
         (schedule, prev_results, new_windows, new_sources, inits,
-         any_warm, n_unique) = build_schedule()
+         maps_t, any_warm, n_unique) = built()
         _note(f"fused:scan{shard_tag}")
         results, rounds = _call_donating(
             _fused_step_scan,
             fields, p, prev_results, new_windows, new_sources, inits,
-            n_vertices=g.n_vertices, schedule=schedule, mesh=mesh)
+            maps_t, n_vertices=g.n_vertices, schedule=schedule, mesh=mesh)
         return results, freeze(
             p, state.edges, -1, -1, 0, results, "reuse", total_new,
-            any_warm, rounds, n_unique=n_unique)
+            any_warm, rounds, n_unique=n_unique, last_schedule=schedule)
 
     if p.method in ("index", "hybrid") and tger is not None:
         positions = (window_positions_host if p.method == "index"
@@ -1053,7 +1237,7 @@ def _advance(
         if mesh is not None:
             (perm,) = replicated_arrays(mesh, perm)
         (schedule, prev_results, new_windows, new_sources, inits,
-         any_warm, n_unique) = build_schedule()
+         maps_t, any_warm, n_unique) = built()
         _note(f"fused:{p.method}{shard_tag}")
         # delta rung floored at C/8: at most four delta variants per
         # capacity ever compile, pinning the fused cache over long horizons
@@ -1061,13 +1245,13 @@ def _advance(
         results, edges, rounds = _call_donating(
             _fused_step_ring,
             fields, perm, p, state.edges, prev_results, new_windows,
-            new_sources, inits,
+            new_sources, inits, maps_t,
             np.asarray([state.lo, lo_new, hi_new], np.int32),
             method=p.method, n_vertices=g.n_vertices, capacity=C,
             delta_budget=delta_budget, schedule=schedule, mesh=mesh)
         return results, freeze(
             p, edges, lo_new, hi_new, C, results, "delta", total_new,
-            any_warm, rounds, n_unique=n_unique)
+            any_warm, rounds, n_unique=n_unique, last_schedule=schedule)
 
     return cold()
 
@@ -1087,6 +1271,7 @@ def serve_batch(
     plan: Optional[AccessPlan] = None,
     warm_start: bool = False,
     mesh: Optional[Any] = None,
+    admission: Optional[str] = None,
 ):
     """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
     multi-tenant entry point (DESIGN.md §7.4).
@@ -1116,10 +1301,37 @@ def serve_batch(
     row-bit-identical to the single-device engine.  A carried state is
     mesh-shape-bound: switching mesh (or toggling sharding) falls cold.
 
+    ``admission="bucketed"`` opts into the §7.6 admission ladder the
+    serving daemon drives: every group's result buffer is PADDED to its
+    power-of-two :func:`~repro.engine.queries.bucket_capacity` (slice
+    each group to its real row count — ``len(batch.groups()[key])`` —
+    before reading), resident groups keep the carried state's schedule
+    order (sticky ordering; results are returned in THIS batch's group
+    order regardless), and row assignment rides dynamic gather maps so
+    tenant churn inside a bucket is a jit-cache hit on the fused step.
+    Bucketed admission is mutually exclusive with ``mesh`` and
+    ``warm_start``, and a carried state only transfers between calls on
+    the same side of the admission toggle (else the serve falls cold
+    without consuming it).
+
     A state from a different graph or an incompatible explicit ``plan``
     falls back to a cold serve (the mismatched state is NOT consumed).
     ``warm_start=True`` opts into the per-algorithm containment warm
     starts (EA/cc exact, reachability sound; refused elsewhere)."""
+    if admission not in (None, "bucketed"):
+        raise ValueError(
+            f"admission must be None or 'bucketed', got {admission!r}")
+    bucketed = admission == "bucketed"
+    if bucketed and mesh is not None:
+        raise ValueError(
+            "admission='bucketed' and a query mesh are mutually exclusive: "
+            "bucketed maps re-pad the row axis per advance, which would "
+            "defeat the mesh's static row partition")
+    if bucketed and warm_start:
+        raise ValueError(
+            "admission='bucketed' refuses warm_start: containment warm "
+            "inits are exact-shape per new row and would retrace the "
+            "bucketed step the ladder exists to pin")
     if not isinstance(batch, QueryBatch):
         batch = QueryBatch.make(batch)
     for spec in batch.specs:
@@ -1134,18 +1346,42 @@ def serve_batch(
     if state is not None and (
         state.graph_ref is not g.src
         or state.mesh != mesh
+        or bool(state.group_caps) != bucketed
         or (plan is not None and plan.cache_key != state.plan.cache_key)
     ):
         state = None
-    return _advance(
+    order = None
+    if bucketed and state is not None:
+        # sticky group ordering: resident groups keep the carried state's
+        # schedule position, new groups append in batch order — a tenant
+        # retirement that changes which spec appears FIRST for an
+        # algorithm must not permute the static schedule (that would
+        # retrace the fused step under pure churn)
+        rank = {k: i for i, k in enumerate(state.group_keys)}
+        order = sorted(
+            range(len(groups)),
+            key=lambda i: (rank.get(groups[i][0], len(rank)), i))
+        if order == list(range(len(groups))):
+            order = None
+        else:
+            groups = [groups[i] for i in order]
+    results, new_state = _advance(
         g, tger, groups, state,
         plan_arg=plan,
         plan_builder=lambda: plan_batch(
             g, tger, batch, access=access, backend=backend,
-            shards=None if mesh is None else mesh.size),
+            shards=None if mesh is None else mesh.size,
+            bucketed=bucketed),
         warm_start=warm_start,
         mesh=mesh,
+        bucketed=bucketed,
     )
+    if order is not None:
+        inv = [0] * len(order)
+        for j, i in enumerate(order):
+            inv[i] = j
+        results = tuple(results[inv[i]] for i in range(len(inv)))
+    return results, new_state
 
 
 def sweep_incremental(
@@ -1212,6 +1448,7 @@ def sweep_incremental(
         and state.group_keys == (key,)
         and state.graph_ref is g.src      # identity, pinned by the state ref
         and state.mesh is None            # sharded states belong to serve_batch
+        and not state.group_caps          # bucketed states: padded buffers
         and all(s == src for s in state.group_sources[0])
         and (plan is None or plan.cache_key == state.plan.cache_key)
     )
@@ -1236,5 +1473,6 @@ __all__ = [
     "query_mesh",
     "sliding_windows",
     "fused_trace_count",
+    "dispatch_log",
     "ALGORITHMS",
 ]

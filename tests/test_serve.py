@@ -52,3 +52,58 @@ def test_engine_respects_max_new_tokens():
                           max_new_tokens=4))
     stats = engine.run()
     assert stats.tokens_generated == 4
+
+
+def test_engine_single_token_budget_emits_exactly_one():
+    """max_new_tokens=1 must emit EXACTLY one token (the prefill token is
+    the whole budget — the off-by-one this PR fixes emitted a second from
+    the decode step), and it must match the reference greedy token."""
+    params = tf.init_params(jax.random.PRNGKey(1), CFG)
+    engine = ServeEngine(params, CFG, batch_slots=2, max_seq=24)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=1)
+    engine.submit(req)
+    stats = engine.run()
+    assert stats.tokens_generated == 1
+    assert stats.requests_completed == 1
+    assert req.generated == _greedy_reference(params, prompt, 1, 24)
+    # the slot was never occupied: no decode step ran for this request
+    assert stats.steps == 0
+
+
+def test_engine_zero_token_budget_completes_without_tokens():
+    """max_new_tokens=0 completes immediately: no prefill, no tokens, no
+    slot occupancy — and it must not starve requests queued behind it."""
+    params = tf.init_params(jax.random.PRNGKey(1), CFG)
+    engine = ServeEngine(params, CFG, batch_slots=1, max_seq=24)
+    empty = Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                    max_new_tokens=0)
+    real = Request(rid=1, prompt=np.asarray([4, 5, 6], np.int32),
+                   max_new_tokens=3)
+    engine.submit(empty)
+    engine.submit(real)
+    stats = engine.run()
+    assert empty.generated == []
+    assert stats.requests_completed == 2
+    assert stats.tokens_generated == 3
+    assert real.generated == _greedy_reference(params, real.prompt, 3, 24)
+
+
+def test_engine_mixed_budgets_share_slots():
+    """A budget-1 request finishing at fill time frees its slot for the
+    next queued request in the SAME fill pass — budgets 0/1/n coexist."""
+    params = tf.init_params(jax.random.PRNGKey(0), CFG)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 64, 6).astype(np.int32) for _ in range(4)]
+    budgets = [1, 0, 3, 2]
+    engine = ServeEngine(params, CFG, batch_slots=2, max_seq=24)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=b)
+            for i, (p, b) in enumerate(zip(prompts, budgets))]
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run()
+    assert stats.requests_completed == 4
+    assert stats.tokens_generated == sum(budgets)
+    for r, b in zip(reqs, budgets):
+        assert len(r.generated) == b, (r.rid, r.generated)
+        assert r.generated == _greedy_reference(params, r.prompt, b, 24)
