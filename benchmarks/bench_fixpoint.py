@@ -1,10 +1,11 @@
 """Gather-once fixpoint execution vs per-round re-gather, cold vs
 incremental sliding-window serving (DESIGN.md §7), the multi-tenant
 queries-per-second regime (DESIGN.md §7.4), sharded batch serving
-across forced host devices (DESIGN.md §7.5), and the async-admission
-serving daemon under Poisson tenant churn (DESIGN.md §7.6).
+across forced host devices (DESIGN.md §7.5), the async-admission
+serving daemon under Poisson tenant churn (DESIGN.md §7.6), and the
+edge×query 2-D mesh (DESIGN.md §7.7).
 
-Five measurements, all asserted result-identical before timing:
+Six measurements, all asserted result-identical before timing:
 
 1. **rounds x re-gather vs gather-once** — earliest arrival under index AND
    hybrid plans, once with the pre-runner loop shape (``temporal_edge_map``
@@ -73,6 +74,23 @@ Five measurements, all asserted result-identical before timing:
    algorithms — cheap class every tick, deep classes round-robin — with
    warmup-tick latencies excluded from the percentiles.
 
+6. **edge×query 2-D mesh (DESIGN.md §7.7)** — the part-4 lockstep
+   drift-cancelling protocol extended to mesh shapes (E, D) ∈
+   {(1,1), (2,2), (4,1), (1,4), (2,4)}: one subprocess per shape under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=E*D``, the ring
+   sharded over E edge shards and the tenant axis over D query shards,
+   row-bit-identity + one-fused-dispatch asserted on every advance
+   before timing.  Two regimes separate the two mechanisms: a
+   deep-QUARTER source cluster (one row chunk pays the deep rounds —
+   the query axis's local-convergence work reduction, where D-heavy
+   shapes win) and a NARROW batch of 8 tenants deduping to 2 unique
+   rows, deep row last (the query axis saturates at D=2: D=4's padded
+   partition replicates the deep row onto the surplus devices, so the
+   balanced (2,2) shape — D=2 for the full query win, the leftover
+   factor on the edge axis — beats both single-axis 4-device shapes).
+   Same honesty note as part 4: one physical core, so every
+   difference is work reduction/overhead, not thread parallelism.
+
 Besides the usual CSV rows, writes machine-readable ``BENCH_fixpoint.json``
 at the repo root (the start of the perf trajectory; CI runs this at smoke
 sizes so the path cannot rot).  ``parts=`` regenerates a subset of the five
@@ -111,7 +129,8 @@ from repro.serve import window_sweep as _ws
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-PARTS = ("gather_once", "incremental", "multi_tenant", "sharded", "daemon")
+PARTS = ("gather_once", "incremental", "multi_tenant", "sharded", "daemon",
+         "mesh2d")
 
 # Part 4 runs one subprocess per device count: XLA fixes the host device
 # count at backend init, so each D needs a fresh process.  The program
@@ -216,6 +235,120 @@ print(json.dumps({
 """
 
 
+# Part 6 runs one subprocess per (E, D) mesh shape on the deep transit
+# regime: E*D forced host devices, the ring sharded over E edge shards
+# and the tenant axis over D query shards (DESIGN.md §7.7).  ORDER
+# places the NDEEP probed-deep sources first (contiguous row chunks
+# control which devices pay the deep rounds) or LAST (so a partition
+# padded past the unique-row count replicates a deep row — the
+# query-axis-saturation regime); NDUP duplicates every spec so dedup
+# fan-out is exercised and qps counts served tenants.  Row-bit-identity
+# vs the unsharded engine and ONE fused dispatch per advance are
+# asserted before timing; the unsharded reference advances in lockstep
+# so machine-speed drift cancels in the per-process ratio (the part-4
+# pattern).
+_MESH2D_PROG = r"""
+import json, os, sys, time
+E = int(sys.argv[1]); D = int(sys.argv[2])
+NV = int(sys.argv[3]); NE = int(sys.argv[4])
+FRAC = float(sys.argv[5]); SDIV = int(sys.argv[6]); STEPS = int(sys.argv[7])
+WARM = int(sys.argv[8]); NCAND = int(sys.argv[9]); Q = int(sys.argv[10])
+NDEEP = int(sys.argv[11]); NDUP = int(sys.argv[12])
+ORDER = sys.argv[13]; HEADWAY = int(sys.argv[15])
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={max(E * D, 1)}")
+sys.path.insert(0, os.path.join(sys.argv[14], "src"))
+import numpy as np, jax
+from repro.data.generators import transit_temporal_graph
+from repro.core.tger import build_tger
+from repro.core.edgemap import ring_view_for_plan
+from repro.core.algorithms import earliest_arrival_over_view
+from repro.engine import QueryBatch, QuerySpec, plan_query
+from repro.serve import serve_batch
+from repro.serve import window_sweep as ws
+
+g = transit_temporal_graph(NV, NE, k=1, headway=HEADWAY, seed=4)
+idx = build_tger(g, degree_cutoff=max(NE // 800, 16))
+t_max = int(np.asarray(g.t_end).max())
+ts = np.asarray(g.t_start)
+span = int(ts.max() - ts.min())
+width = max(int(span * FRAC), 1)
+stride = max(width // SDIV, 1)
+base0 = t_max - (STEPS + 2) * stride
+
+rng = np.random.default_rng(0)
+cands = rng.integers(0, NV, NCAND).astype(np.int32)
+rmin = np.full(NCAND, 1 << 30)
+for wb in (base0, base0 + STEPS * stride):
+    w = (wb - width, wb)
+    plan_p = plan_query(g, idx, windows=np.asarray([w], np.int32),
+                        access="index")
+    edges, *_ = ring_view_for_plan(g, idx, w, plan_p)
+    solve = jax.jit(lambda e, ww, s: earliest_arrival_over_view(
+        e, ww, sources=s, plan=plan_p, n_vertices=NV, with_rounds=True))
+    for i in range(NCAND):
+        _, rr = solve(edges, np.asarray([w], np.int32),
+                      np.asarray([cands[i]], np.int32))
+        rmin[i] = min(rmin[i], int(rr))
+order = np.argsort(-rmin)
+deep = cands[order[:NDEEP]]
+shallow = cands[rmin == 1][:Q - NDEEP]
+assert len(shallow) == Q - NDEEP, "probe found too few 1-round sources"
+# Q UNIQUE sources; each spec duplicated NDUP times (the duplicates
+# dedup away at expansion, so the row partition sees the Q unique rows
+# and the qps numerator counts Q*NDUP served tenants).  ORDER=deeplast
+# puts the deep sources at the END of the unique-row order: when D
+# exceeds the unique row count, row_partition pads to D by replicating
+# the LAST unique row — i.e. the deep one — which is exactly the
+# query-axis saturation the narrow regime measures.
+parts = [deep, shallow] if ORDER == "deepfirst" else [shallow, deep]
+sources = np.concatenate(parts).astype(np.int32)
+
+mk = lambda b: QueryBatch.make([QuerySpec.make(
+    "earliest_arrival", (int(b - width), int(b)), sources=int(s))
+    for s in sources for _ in range(NDUP)])
+
+def advance(state, mesh, k, tag):
+    ws._DISPATCH_LOG = log = []
+    tic = time.perf_counter()
+    res, state = serve_batch(g, mk(base0 + k * stride), idx,
+                             state=state, access="index", mesh=mesh)
+    jax.block_until_ready(res)
+    dt = time.perf_counter() - tic
+    ws._DISPATCH_LOG = None
+    if k >= WARM:
+        assert state.last_advance == "delta", (k, state.last_advance)
+        assert log == [tag], (k, log)
+    return [np.asarray(r) for r in res], state, dt
+
+tag = "fused:index@q%d" % D if E == 1 else "fused:index@e%dq%d" % (E, D)
+un_state = sh_state = None
+t_un, t_sh = [], []
+for k in range(STEPS):
+    ref, un_state, d_un = advance(un_state, None, k, "fused:index")
+    got, sh_state, d_sh = advance(sh_state, (E, D), k, tag)
+    # EA is integer min: bit-exact at ANY mesh shape, including E > 1
+    # (the per-round edge-axis pmin is order-insensitive on ints)
+    assert all((a == b).all() for a, b in zip(ref, got)), (
+        k, "mesh rows diverge from single-device rows")
+    t_un.append(d_un); t_sh.append(d_sh)
+
+print(json.dumps({
+    "mesh": [E, D],
+    "devices": jax.device_count(),
+    "deep_rounds": rmin[order[:NDEEP]].tolist(),
+    "tenants": Q * NDUP,
+    "unique_rows": Q,
+    "advance_us": float(np.median(t_sh[WARM:])) * 1e6,
+    "unsharded_advance_us": float(np.median(t_un[WARM:])) * 1e6,
+    "ratio_vs_unsharded": float(np.median(
+        np.asarray(t_un[WARM:]) / np.asarray(t_sh[WARM:]))),
+    "parity": True,
+    "dispatches_per_advance": 1,
+}))
+"""
+
+
 def _ea_regather(g, source, window, tger, plan, max_rounds):
     """The pre-runner EA loop, verbatim structure: the edgemap (and hence
     the index gather) is traced INSIDE the while body."""
@@ -249,7 +382,9 @@ def _ea_regather(g, source, window, tger, plan, max_rounds):
 def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         iters=3, tenants=(1, 4, 16), out_json="BENCH_fixpoint.json",
         parts=PARTS, dev_counts=(1, 2, 4), shard_steps=12, shard_cands=384,
-        daemon_ticks=24, daemon_admits=3):
+        daemon_ticks=24, daemon_admits=3,
+        mesh2d_meshes=((1, 1), (2, 2), (4, 1), (1, 4), (2, 4)),
+        mesh2d_steps=10, mesh2d_cands=256):
     """Narrow (selective, index-plan) and broader window regimes, mirroring
     the Fig. 9 selectivity axis the re-gather cost scales with.  The default
     fracs are chosen so the union of the W sliding windows still plans
@@ -746,6 +881,71 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
                 "advance_latency_p99_us": p99,
             },
         }
+
+    # ---- 6: edge×query 2-D mesh (DESIGN.md §7.7) ---------------------------
+    # one subprocess per (E, D) shape and regime; each asserts row-bit-
+    # identity vs the unsharded engine on every advance plus one fused
+    # dispatch, THEN times (lockstep, drift-cancelling — the part-4
+    # pattern).  Two regimes probe the two mechanisms: a deep-quarter
+    # cluster (the query axis's local-convergence work reduction — the
+    # D-heavy shapes' regime) and a NARROW batch whose tenants dedup to
+    # two unique rows: the query axis saturates at D=2, so D=4's padded
+    # partition replicates the last (deep) unique row onto the surplus
+    # devices — (2,2) spends those devices on the edge axis instead and
+    # beats both single-axis shapes.
+    if "mesh2d" in parts:
+        regimes6 = {
+            "clustered_depth": dict(nv=20_000, ne=60_000, frac=0.08,
+                                    sdiv=64, q=16, ndeep=4, ndup=1,
+                                    order="deepfirst", headway=300),
+            "narrow_batch": dict(nv=2_000, ne=200_000, frac=0.35,
+                                 sdiv=64, q=2, ndeep=1, ndup=4,
+                                 order="deeplast", headway=300),
+        }
+        rows6 = {}
+        for rname, rg in regimes6.items():
+            recs, ratio11 = [], None
+            for E6, D6 in mesh2d_meshes:
+                out = subprocess.run(
+                    [sys.executable, "-c", _MESH2D_PROG, str(E6), str(D6),
+                     str(rg["nv"]), str(rg["ne"]), str(rg["frac"]),
+                     str(rg["sdiv"]), str(mesh2d_steps), "3",
+                     str(mesh2d_cands), str(rg["q"]), str(rg["ndeep"]),
+                     str(rg["ndup"]), rg["order"],
+                     _REPO_ROOT, str(rg["headway"])],
+                    capture_output=True, text=True, env=dict(os.environ),
+                    cwd=_REPO_ROOT, timeout=2400,
+                )
+                assert out.returncode == 0, (
+                    f"mesh2d ({E6},{D6}) {rname} subprocess failed:\n"
+                    f"{out.stderr[-3000:]}")
+                rec = json.loads(out.stdout.strip().splitlines()[-1])
+                assert rec["devices"] == max(E6 * D6, 1) and rec["parity"]
+                qps = rec["tenants"] / (rec["advance_us"] * 1e-6)
+                if ratio11 is None:
+                    ratio11 = rec["ratio_vs_unsharded"]
+                rec.update({
+                    "queries_per_sec": qps,
+                    "scaling_vs_1x1": rec["ratio_vs_unsharded"] / ratio11,
+                })
+                recs.append(rec)
+                emit(
+                    f"fixpoint/mesh2d/{rname}/e{E6}q{D6}",
+                    rec["advance_us"] * 1e-6,
+                    f"mesh=({E6},{D6});tenants={rec['tenants']};"
+                    f"advance_us={rec['advance_us']:.0f};qps={qps:.0f};"
+                    f"scaling_vs_1x1={rec['scaling_vs_1x1']:.2f}x;"
+                    f"unsharded_us={rec['unsharded_advance_us']:.0f};"
+                    f"dispatches_per_advance=1",
+                )
+            best = max(recs, key=lambda r: r["ratio_vs_unsharded"])
+            rows6[rname] = {
+                "regime": dict(rg, generator="transit_temporal_graph",
+                               steps=mesh2d_steps),
+                "rows": recs,
+                "best_mesh": best["mesh"],
+            }
+        report["mesh2d"] = rows6
 
     with open(path, "w") as f:
         json.dump(report, f, indent=2)

@@ -15,9 +15,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table4,fig7,fig8,fig9,plans,sweep,"
-                         "fixpoint,multitenant,estimator,roofline "
+                         "fixpoint,multitenant,mesh2d,estimator,roofline "
                          "(multitenant regenerates only BENCH_fixpoint.json "
-                         "parts 3/4 — multi-tenant qps + sharded devices)")
+                         "parts 3/4 — multi-tenant qps + sharded devices; "
+                         "mesh2d regenerates only part 6 — the edge×query "
+                         "2-D mesh scaling table)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -60,9 +62,15 @@ def main() -> None:
     if want("fixpoint"):
         from benchmarks import bench_fixpoint
         if args.quick:
+            # quick runs skip part 6 (one subprocess per (E, D) shape ×
+            # regime is too slow for the CI smoke); --only mesh2d below
+            # regenerates it at reduced sizes
+            quick_parts = tuple(p for p in bench_fixpoint.PARTS
+                                if p != "mesh2d")
             bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2,
                                dev_counts=(1, 2), shard_steps=8,
-                               shard_cands=96, daemon_ticks=12)
+                               shard_cands=96, daemon_ticks=12,
+                               parts=quick_parts)
         else:
             bench_fixpoint.run()
 
@@ -78,6 +86,18 @@ def main() -> None:
                                shard_cands=96)
         else:
             bench_fixpoint.run(parts=("multi_tenant", "sharded"))
+
+    if wanted is not None and "mesh2d" in wanted:
+        # explicit-only (a full run already covers part 6 via fixpoint):
+        # regenerates the edge×query 2-D mesh scaling table; the JSON
+        # merge keeps the other parts intact.
+        from benchmarks import bench_fixpoint
+        if args.quick:
+            bench_fixpoint.run(parts=("mesh2d",),
+                               mesh2d_meshes=((1, 1), (2, 2), (1, 4)),
+                               mesh2d_steps=6, mesh2d_cands=64)
+        else:
+            bench_fixpoint.run(parts=("mesh2d",))
 
     if want("estimator"):
         from benchmarks import bench_estimator

@@ -21,6 +21,15 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_distributed.py tests/test_sharded_serving.py
 
+# forced-8-device leg: the edge×query 2-D meshes (DESIGN.md §7.7) at
+# mesh shapes (2,4) and (4,2) — both axes genuinely multi-device, which
+# the 4-device leg above (max (2,2)) cannot produce.  Reuses the
+# env-parameterized 2-D soak with CI-reduced advances; runs on both jax
+# matrix legs like the rest of this script.
+SOAK2D_DEVICES=8 SOAK2D_MESHES="2x4,4x2" SOAK2D_STEPS=12 \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q tests/test_sharded_serving.py -k soak_2d
+
 # smoke the serving daemon end to end (DESIGN.md §7.6): a short tick loop
 # with Poisson tenant churn, bucketed async admission and cost-class
 # round-robin — the launch-path wiring the daemon soak in tier-1 above

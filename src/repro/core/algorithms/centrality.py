@@ -41,10 +41,13 @@ from repro.core.tger import TGERIndex
 
 
 def _brandes_row(edges, valid_row, window, source, t, P: int,
-                 pred: OrderingPredicateType, V: int):
+                 pred: OrderingPredicateType, V: int, axis=None):
     """One (source, window) row's dependency vector over the hoisted view:
     ``t`` is the row's earliest-arrival labels, ``valid_row`` its window
-    validity mask — both precomputed outside (and vmapped over rows)."""
+    validity mask — both precomputed outside (and vmapped over rows).
+    ``axis`` (the plan's ``edge_axis``) makes the per-bucket sigma/delta
+    sums global across edge shards; the fori_loop trip counts are static,
+    so the shards stay trivially in lockstep."""
     ta, tb = window[0], window[1]
     reached = t < INT_INF
     t_src = t[edges.src]
@@ -69,7 +72,8 @@ def _brandes_row(edges, valid_row, window, source, t, P: int,
 
     def fwd(p, sigma):
         m = opt & (b_dst == p)
-        contrib = segment_combine(sigma[edges.src], edges.dst, V, "sum", mask=m)
+        contrib = segment_combine(sigma[edges.src], edges.dst, V, "sum",
+                                  mask=m, axis=axis)
         assign = reached & (bv == p) & (vid != source)
         return jnp.where(assign, contrib, sigma)
 
@@ -83,7 +87,8 @@ def _brandes_row(edges, valid_row, window, source, t, P: int,
         p = P - 1 - i
         m = opt & (b_dst == p)
         w = (sigma[edges.src] / safe_sigma[edges.dst]) * (1.0 + delta[edges.dst])
-        add = segment_combine(w, edges.src, V, "sum", mask=m & (sigma[edges.dst] > 0))
+        add = segment_combine(w, edges.src, V, "sum",
+                              mask=m & (sigma[edges.dst] > 0), axis=axis)
         return delta + add
 
     delta = jax.lax.fori_loop(0, P, bwd, delta0)
@@ -131,7 +136,8 @@ def temporal_betweenness_over_view(
     )                                                  # [Q, V]
     return jax.vmap(
         lambda w, s, ok, t_row: _brandes_row(
-            edges, ok, (w[0], w[1]), s, t_row, n_buckets, pred, n_vertices)
+            edges, ok, (w[0], w[1]), s, t_row, n_buckets, pred, n_vertices,
+            axis=plan.edge_axis)
     )(runner.windows, runner.sources, runner.valid, t)
 
 

@@ -106,13 +106,18 @@ def temporal_kcore_over_view(
         _, changed = state
         return changed
 
+    ax = plan.edge_axis
+
     def body(state, rnd):
         alive, _ = state
         live = valid & alive[:, edges.src] & alive[:, edges.dst]   # [Q, E']
         ones = live.astype(jnp.int32)
+        # degrees are global across edge shards (axis=ax psums the two
+        # partial sums), so the peeling decision — and hence `changed` —
+        # is identical on every shard: the while_loop stays in lockstep.
         deg = jax.vmap(
-            lambda o: segment_combine(o, edges.dst, V, "sum")
-            + segment_combine(o, edges.src, V, "sum")
+            lambda o: segment_combine(o, edges.dst, V, "sum", axis=ax)
+            + segment_combine(o, edges.src, V, "sum", axis=ax)
         )(ones)
         new_alive = alive & (deg >= k)
         changed = jnp.any(new_alive != alive)

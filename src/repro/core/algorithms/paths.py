@@ -376,8 +376,9 @@ def shortest_duration(
     The bucket assignments (q, p_src) are loop-invariant like the window
     mask, so they are computed once on the runner's hoisted view.
     """
+    plan = ensure_plan(plan)
     runner = FixpointRunner.for_query(
-        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+        g, tger, window, plan=plan, max_rounds=max_rounds
     )
     edges, base_valid = runner.edges, runner.valid
     V, P = g.n_vertices, n_buckets
@@ -420,7 +421,8 @@ def shortest_duration(
         src_cost = jnp.where(from_source, 0.0, src_sl)
         cand = src_cost + cost
         flat_ids = edges.dst * P + q
-        upd = segment_combine(cand, flat_ids, V * P, "min", mask=usable)
+        upd = segment_combine(cand, flat_ids, V * P, "min", mask=usable,
+                              axis=plan.edge_axis)
         upd = upd.reshape(V, P)
         new_dur = jnp.minimum(dur, upd)
         new_dur = jax.lax.cummin(new_dur, axis=1, reverse=False)

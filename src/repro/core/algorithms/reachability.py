@@ -41,12 +41,15 @@ from repro.core.tger import TGERIndex
 
 
 def _solve_window(edges, base_ok, window, source, n_vertices: int,
-                  max_rounds: int, init=None):
+                  max_rounds: int, init=None, axis=None):
     """The one overlaps fixpoint over a prebuilt edge view with a
     PRECOMPUTED validity mask: shared by the single-window run and (vmapped
     over the [W, E'] validity rows) the batched sweep.  ``init`` optionally
     warm-starts (s_end, s_start) — sound when every finite init pair is the
-    last-edge interval of a real overlaps chain inside this window."""
+    last-edge interval of a real overlaps chain inside this window.
+    ``axis`` (the plan's ``edge_axis``) makes each segment-min global
+    across edge shards — pass 2's achievers then compare against the
+    GLOBAL pass-1 min, so the two-pass lexicographic min stays exact."""
     V = n_vertices
     ta = window[0]
 
@@ -74,9 +77,11 @@ def _solve_window(edges, base_ok, window, source, n_vertices: int,
         )
         # two-pass lexicographic min: (1) min end per dst, (2) min start
         # among the edges achieving that end.
-        min_end = segment_combine(edges.t_end, edges.dst, V, "min", mask=ok)
+        min_end = segment_combine(edges.t_end, edges.dst, V, "min", mask=ok,
+                                  axis=axis)
         achieves = ok & (edges.t_end == min_end[edges.dst])
-        min_start = segment_combine(edges.t_start, edges.dst, V, "min", mask=achieves)
+        min_start = segment_combine(edges.t_start, edges.dst, V, "min",
+                                    mask=achieves, axis=axis)
         better = (min_end < s_end) | ((min_end == s_end) & (min_start < s_start))
         new_end = jnp.where(better, min_end, s_end)
         new_start = jnp.where(better, min_start, s_start)
@@ -104,12 +109,13 @@ def overlaps_reachability(
     max_rounds: int = 0,
 ):
     """Returns (reachable[V] bool, last_start[V], last_end[V])."""
+    plan = ensure_plan(plan)
     runner = FixpointRunner.for_query(
-        g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
+        g, tger, window, plan=plan, max_rounds=max_rounds
     )
     return _solve_window(
         runner.edges, runner.valid, runner.window, source, g.n_vertices,
-        runner.max_rounds,
+        runner.max_rounds, axis=plan.edge_axis,
     )
 
 
@@ -135,15 +141,17 @@ def overlaps_reachability_over_view(
     )
     if runner.sources is None:
         raise ValueError("overlaps_reachability_over_view needs sources=")
+    ax = plan.edge_axis
     if init is None:
         return jax.vmap(
             lambda w, s, ok: _solve_window(
-                edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds)
+                edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds,
+                axis=ax)
         )(runner.windows, runner.sources, runner.valid)
     return jax.vmap(
         lambda w, s, ok, e0, s0: _solve_window(
             edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds,
-            init=(e0, s0))
+            init=(e0, s0), axis=ax)
     )(runner.windows, runner.sources, runner.valid, init[0], init[1])
 
 

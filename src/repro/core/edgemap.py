@@ -370,7 +370,8 @@ def edge_map_over_view(
     if not compute_touched:
         return out, None
     touched = segment_combine(
-        valid.astype(jnp.int32), to_v, n_vertices, "sum", mask=None
+        valid.astype(jnp.int32), to_v, n_vertices, "sum", mask=None,
+        axis=plan.edge_axis,
     ) > 0
     return out, touched
 
@@ -456,7 +457,8 @@ def edge_map_over_view_batched(
     if not compute_touched:
         return out, None
     touched = jax.vmap(
-        lambda v: segment_combine(v.astype(jnp.int32), to_v, n_vertices, "sum")
+        lambda v: segment_combine(v.astype(jnp.int32), to_v, n_vertices, "sum",
+                                  axis=plan.edge_axis)
     )(valid) > 0
     return out, touched
 

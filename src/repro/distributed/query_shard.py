@@ -63,7 +63,37 @@ def query_mesh(n_devices: Optional[int] = None) -> Mesh:
     return make_mesh((n,), (query_axis(),))
 
 
-def row_partition(n_rows: int, n_shards: int) -> Tuple[int, np.ndarray]:
+def edge_axis() -> str:
+    """The mesh axis name the serving ring's EDGE axis shards over in a 2-D
+    edge×query mesh (DESIGN.md §7.7).  The ``"edges"`` logical rule maps to
+    the ``("pod", "data")`` axes of the distributed engine's meshes; the
+    serving mesh is single-host, so it uses the LAST of those — ``"data"``
+    — as its one edge axis."""
+    ax = DEFAULT_RULES["edges"]
+    return ax[-1] if isinstance(ax, (tuple, list)) else ax
+
+
+def serve_mesh(edge_shards: int, query_shards: int) -> Mesh:
+    """The 2-D ``(edge_shards, query_shards)`` serving mesh (DESIGN.md
+    §7.7): axis 0 shards the ring view's slot axis, axis 1 the batch's
+    expanded row axis.  ``serve_mesh(1, D)`` degenerates to the 1-D
+    :func:`query_mesh` (the exact same program must serve both, so the
+    shapes must not differ)."""
+    e, d = int(edge_shards), int(query_shards)
+    if e < 1 or d < 1:
+        raise ValueError(f"mesh shape must be >= (1, 1), got ({e}, {d})")
+    if e == 1:
+        return query_mesh(d)
+    if e * d > jax.device_count():
+        raise ValueError(
+            f"serve_mesh({e}, {d}) needs {e * d} devices but only "
+            f"{jax.device_count()} are available — force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return make_mesh((e, d), (edge_axis(), query_axis()))
+
+
+def row_partition(n_rows: int, n_shards: int, *,
+                  align: int = 1) -> Tuple[int, np.ndarray]:
     """Contiguous-chunk pad-and-mask partition of ``n_rows`` over
     ``n_shards`` devices.
 
@@ -74,12 +104,21 @@ def row_partition(n_rows: int, n_shards: int) -> Tuple[int, np.ndarray]:
     LAST real row repeated over the tail padding.  Row counts not
     divisible by the device count therefore pad, never drop — and because
     ``cap`` depends only on (n_rows, n_shards), which are already static
-    via the fused-step schedule, padding never retraces."""
+    via the fused-step schedule, padding never retraces.
+
+    ``align`` snaps ``cap`` up to the next multiple — the bucket-aligned
+    partition of DESIGN.md §7.7: with ``align`` a power of two dividing
+    the admission bucket capacity, every chunk boundary lands on a
+    ``bucket_capacity`` multiple, so the bucketed dynamic gather maps stay
+    device-local under the query mesh."""
     if n_rows < 1:
         raise ValueError(f"row_partition needs at least one row, got {n_rows}")
     if n_shards < 1:
         raise ValueError(f"need at least one shard, got {n_shards}")
+    if align < 1:
+        raise ValueError(f"align must be >= 1, got {align}")
     cap = -(-n_rows // n_shards)
+    cap = -(-cap // align) * align
     pad_map = np.minimum(
         np.arange(cap * n_shards, dtype=np.int32), np.int32(n_rows - 1))
     return cap, pad_map
@@ -105,6 +144,8 @@ def replicated_arrays(mesh: Mesh, *arrays):
 __all__ = [
     "query_axis",
     "query_mesh",
+    "edge_axis",
+    "serve_mesh",
     "row_partition",
     "replicate",
     "replicated_arrays",

@@ -41,8 +41,16 @@ def _identity(combine: str, dtype) -> jax.Array:
     raise ValueError(combine)
 
 
-def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=None):
-    """Masked segment-reduce; invalid lanes contribute the identity."""
+def segment_combine(values, segment_ids, num_segments: int, combine: str,
+                    mask=None, axis=None):
+    """Masked segment-reduce; invalid lanes contribute the identity.
+
+    ``axis`` names a mesh axis the EDGE axis of ``values``/``segment_ids``
+    is sharded over (DESIGN.md §7.7): each device reduces its local edge
+    chunk into a full [num_segments] partial, then one ``pmin/pmax/psum``
+    over the axis combines the partials — min/max/sum are associative and
+    identity-padded, so the sharded result equals the unsharded one (sum
+    up to f32 reduction order).  ``axis=None`` is the plain local reduce."""
     ident = _identity(combine, values.dtype)
     if mask is not None:
         m = mask
@@ -56,22 +64,34 @@ def segment_combine(values, segment_ids, num_segments: int, combine: str, mask=N
     )[combine]
     # segment_min/max fill empty segments with the dtype's max/min (the
     # identity), segment_sum with 0 — identity semantics hold without fixup.
-    return fn(values, segment_ids, num_segments=num_segments)
+    out = fn(values, segment_ids, num_segments=num_segments)
+    if axis is not None:
+        coll = dict(min=jax.lax.pmin, max=jax.lax.pmax, sum=jax.lax.psum)[combine]
+        out = coll(out, axis_name=axis)
+    return out
 
 
 def segment_combine_windows(values, segment_ids, num_segments: int,
-                            combine: str, masks=None):
+                            combine: str, masks=None, axis=None):
     """Batched masked segment-reduce over a shared edge set (DESIGN.md §6):
     ``values`` is [W, K, ...] (one candidate row per query window), ``masks``
     [W, K]; ``segment_ids`` [K] is shared across windows.  Returns
-    [W, num_segments, ...] — W reductions over ONE gathered edge set."""
+    [W, num_segments, ...] — W reductions over ONE gathered edge set.
+    ``axis`` as in :func:`segment_combine`: one cross-edge-shard collective
+    per call, applied to the whole [W, num_segments] partial at once."""
     if masks is None:
-        return jax.vmap(
+        out = jax.vmap(
             lambda v: segment_combine(v, segment_ids, num_segments, combine)
         )(values)
-    return jax.vmap(
-        lambda v, m: segment_combine(v, segment_ids, num_segments, combine, mask=m)
-    )(values, masks)
+    else:
+        out = jax.vmap(
+            lambda v, m: segment_combine(v, segment_ids, num_segments, combine,
+                                         mask=m)
+        )(values, masks)
+    if axis is not None:
+        coll = dict(min=jax.lax.pmin, max=jax.lax.pmax, sum=jax.lax.psum)[combine]
+        out = coll(out, axis_name=axis)
+    return out
 
 
 class ExecutionBackend(Protocol):
@@ -264,12 +284,19 @@ def combine_for_plan(
     """Plan-directed combine.  ``use_layout=True`` asserts the caller's
     ``segment_ids`` are in the edge order the plan's layout was built from
     (scan view, reduce-into-destination); only then may the tiled kernels
-    run.  All other combines take the xla path."""
-    if plan is not None and use_layout and plan.backend == "pallas_tiled":
+    run.  All other combines take the xla path.  A plan carrying
+    ``edge_axis`` (an edge-sharded shard_map body, DESIGN.md §7.7) always
+    takes the segment path — the tile layout is a whole-graph static
+    grouping that does not partition along the ring shards — and finishes
+    with the one cross-shard collective."""
+    axis = None if plan is None else plan.edge_axis
+    if (plan is not None and use_layout and axis is None
+            and plan.backend == "pallas_tiled"):
         return get_backend("pallas_tiled").combine(
             plan, values, segment_ids, num_segments, op, mask=mask
         )
-    return segment_combine(values, segment_ids, num_segments, op, mask=mask)
+    return segment_combine(values, segment_ids, num_segments, op, mask=mask,
+                           axis=axis)
 
 
 def combine_windows_for_plan(
@@ -284,13 +311,16 @@ def combine_windows_for_plan(
 ):
     """Batched plan-directed combine (DESIGN.md §6): W per-window reductions
     over ONE shared candidate edge set, returning [W, num_segments, ...].
-    Same layout-eligibility contract as :func:`combine_for_plan`."""
-    if plan is not None and use_layout and plan.backend == "pallas_tiled":
+    Same layout-eligibility (and ``edge_axis``) contract as
+    :func:`combine_for_plan`."""
+    axis = None if plan is None else plan.edge_axis
+    if (plan is not None and use_layout and axis is None
+            and plan.backend == "pallas_tiled"):
         return get_backend("pallas_tiled").combine_windows(
             plan, values, segment_ids, num_segments, op, masks=masks
         )
     return segment_combine_windows(values, segment_ids, num_segments, op,
-                                   masks=masks)
+                                   masks=masks, axis=axis)
 
 
 __all__ = [

@@ -246,7 +246,8 @@ class FixpointRunner:
                 return out, None
             touched = jax.vmap(
                 lambda v: segment_combine(
-                    v.astype(jnp.int32), self.to_v, self.n_vertices, "sum")
+                    v.astype(jnp.int32), self.to_v, self.n_vertices, "sum",
+                    axis=self.plan.edge_axis if self.plan else None)
             )(valid) > 0
             return out, touched
 
@@ -261,7 +262,8 @@ class FixpointRunner:
         if not compute_touched:
             return out, None
         touched = segment_combine(
-            valid.astype(jnp.int32), self.to_v, self.n_vertices, "sum"
+            valid.astype(jnp.int32), self.to_v, self.n_vertices, "sum",
+            axis=self.plan.edge_axis if self.plan else None,
         ) > 0
         return out, touched
 

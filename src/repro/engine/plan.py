@@ -64,6 +64,13 @@ class AccessPlan:
     n_windows: int = dataclasses.field(default=0, metadata=dict(static=True))  # batched sweep width (0 = single window)
     ring_capacity: int = dataclasses.field(default=0, metadata=dict(static=True))  # ring-view slot count (0 = derive)
     batch_sig: str = dataclasses.field(default="", metadata=dict(static=True))  # QueryBatch shape signature ("" = not a batch plan)
+    # Mesh axis name the edge axis of every view passed under this plan is
+    # sharded over (None = edges replicated/local).  Set ONLY at trace time
+    # inside an edge-sharded shard_map body (dataclasses.replace): every
+    # segment combine then finishes with a psum/pmin/pmax over this axis.
+    # Static, so edge-sharded and local traces can never alias a jit cache
+    # entry even when their local avals coincide.
+    edge_axis: Optional[str] = dataclasses.field(default=None, metadata=dict(static=True))
 
     @property
     def view_budget(self) -> int:
@@ -371,7 +378,7 @@ def plan_batch(
     model: CostModel = CostModel(),
     access: str = "auto",
     backend: str = "xla_segment",
-    shards: Optional[int] = None,
+    shards=None,
     bucketed: bool = False,
     **kw,
 ) -> AccessPlan:
@@ -390,7 +397,10 @@ def plan_batch(
     per-device capacity derived from the shard count, so a plan made for
     one mesh shape must not silently satisfy a state carried under
     another — switching mesh shape falls cold instead of mis-aliasing the
-    jit cache.
+    jit cache.  An int is a 1-D query mesh (``@qD``); an ``(E, D)`` tuple
+    is the 2-D edge×query mesh (``@eEqD``, DESIGN.md §7.7).  A tuple with
+    E == 1 normalizes to the 1-D form — a (1, D) mesh runs the exact 1-D
+    program, so it must share its cache key.
 
     ``bucketed`` keys the signature on the BUCKETED per-group row
     capacities (the admission ladder of DESIGN.md §7.6) instead of exact
@@ -402,7 +412,11 @@ def plan_batch(
     )
     sig = batch.signature(bucketed=bucketed)
     if shards is not None:
-        sig += f"@q{int(shards)}"
+        if isinstance(shards, (tuple, list)):
+            e, d = (int(shards[0]), int(shards[1]))
+            sig += f"@q{d}" if e <= 1 else f"@e{e}q{d}"
+        else:
+            sig += f"@q{int(shards)}"
     return dataclasses.replace(
         plan,
         batch_sig=sig,

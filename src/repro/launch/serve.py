@@ -59,8 +59,10 @@ def run_graph(args) -> None:
                     alg, win, sources=(7 * i) % args.n_vertices))
         return QueryBatch.make(specs)
 
-    server = GraphBatchServer(g, idx, access="index",
-                              mesh=args.shard_queries)
+    mesh = args.shard_queries
+    if args.shard_edges:
+        mesh = (args.shard_edges, args.shard_queries or 1)
+    server = GraphBatchServer(g, idx, access="index", mesh=mesh)
     t0 = time.perf_counter()
     for k in range(args.advances):
         server.advance(make_batch(base0 + k * stride))
@@ -104,7 +106,10 @@ def run_daemon(args) -> None:
             return QuerySpec.make(alg, w, n_iters=8)
         return QuerySpec.make(alg, w, sources=(7 * i) % args.n_vertices)
 
-    server = GraphBatchServer(g, idx, access="index")
+    mesh = args.shard_queries
+    if args.shard_edges:
+        mesh = (args.shard_edges, args.shard_queries or 1)
+    server = GraphBatchServer(g, idx, access="index", mesh=mesh)
     live: list = []
     for i in range(args.tenants):            # the resident base load
         live.append(server.submit(fresh_spec(i)))
@@ -153,6 +158,10 @@ def main():
     ap.add_argument("--n-edges", type=int, default=50_000)
     ap.add_argument("--shard-queries", type=int, default=None,
                     help="shard the tenant axis over N devices")
+    ap.add_argument("--shard-edges", type=int, default=None,
+                    help="also shard the ring's slot axis over E devices "
+                         "(forms an (E, D) edge-query mesh with "
+                         "--shard-queries; needs E*D devices)")
     ap.add_argument("--daemon", action="store_true",
                     help="graph daemon mode: tick loop with Poisson churn")
     ap.add_argument("--ticks", type=int, default=40)

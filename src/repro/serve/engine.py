@@ -197,7 +197,8 @@ class GraphBatchServer:
     call per tick: the whole (algorithm x source x window)
     :class:`~repro.engine.queries.QueryBatch` rides ONE ring advance and
     one fused dispatch (per device, when ``mesh`` shards the tenant axis —
-    pass a device count or a ``jax.sharding.Mesh``).  The server carries
+    pass a device count, an ``(E, D)`` edge×query tuple, or a
+    ``jax.sharding.Mesh``).  The server carries
     the single-use ``SweepState`` between ticks and snaps results to host
     arrays before handing them out, because the next advance DONATES the
     previous device buffers (DESIGN.md §7.3).  If an advance raises
@@ -212,10 +213,23 @@ class GraphBatchServer:
     the instantaneous batch split by COST CLASS — the cheap class every
     tick, deep classes round-robin one per tick — with each class chain
     running ``admission="bucketed"`` so within-bucket churn never
-    retraces and never consumes donated state cold.  Daemon mode is
-    single-device (bucketed admission and the query mesh are mutually
-    exclusive).
+    retraces and never consumes donated state cold.  Daemon mode COMPOSES
+    with the mesh (DESIGN.md §7.7): pass ``mesh=D`` or ``mesh=(E, D)``
+    and every class chain serves bucketed AND sharded.  The daemon also
+    tracks a per-cost-class EWMA of admission arrivals and passes a
+    STICKY quantization of it as ``bucket_headroom``, so buckets are
+    sized for the rows expected next tick — a forecasted burst admits
+    without a single rebucket.  The applied headroom grows the moment
+    the forecast does but shrinks only on a 4x forecast collapse (the
+    ladder's own hysteresis rule): a raw ``ceil`` of the decaying EWMA
+    would jitter by ±1-2 every tick and flap group capacities across
+    bucket rungs, thrashing the very jit cache the ladder pins.
     """
+
+    #: EWMA smoothing for the per-class admission arrival rate (rows/tick)
+    #: and the safety factor headroom applies on top of the forecast.
+    EWMA_ALPHA = 0.5
+    HEADROOM_SAFETY = 2.0
 
     def __init__(self, graph, tger=None, *, access: str = "auto",
                  backend: str = "xla_segment", plan=None, mesh=None,
@@ -238,6 +252,8 @@ class GraphBatchServer:
         self._next_tid = 0
         self._class_states: Dict[str, Any] = {}     # cost class -> SweepState
         self._rr = 0                                # deep-class round-robin
+        self._admit_ewma: Dict[str, float] = {}     # class -> rows/tick EWMA
+        self._admit_hr: Dict[str, int] = {}         # class -> sticky headroom
 
     # -- batch mode ---------------------------------------------------------
 
@@ -298,6 +314,16 @@ class GraphBatchServer:
         """The LIVE tenant registry (admitted, not retired) — a copy."""
         return dict(self._tenants)
 
+    def bucket_headroom(self, cls: str) -> int:
+        """The arrival-rate bucket headroom for one cost class: the
+        extra rows the class's buckets reserve for tenants expected to
+        arrive before the next serve (DESIGN.md §7.7).  This is the
+        STICKY value maintained by ``tick`` — it tracks
+        ``ceil(EWMA rate * safety)`` upward immediately but downward
+        only on a 4x forecast collapse, so a decaying EWMA cannot
+        jitter group capacities across bucket rungs."""
+        return self._admit_hr.get(cls, 0)
+
     def _serve_class(self, cls: str, sub: QueryBatch, tids: List[int],
                      results: Dict[int, Any]) -> None:
         from repro.serve import window_sweep as ws
@@ -309,7 +335,8 @@ class GraphBatchServer:
                     self.graph, sub, self.tger,
                     state=self._class_states.get(cls),
                     access=self.access, backend=self.backend,
-                    plan=self.plan, admission="bucketed")
+                    plan=self.plan, admission="bucketed", mesh=self.mesh,
+                    bucket_headroom=self.bucket_headroom(cls))
             except BaseException:
                 self._class_states.pop(cls, None)   # moved-from: force-cold
                 raise
@@ -346,17 +373,37 @@ class GraphBatchServer:
         results are host snapshots sliced to their real rows."""
         t_start = time.perf_counter()
         admitted: List[int] = []
+        arrived: Dict[str, int] = {}    # cost class -> rows admitted NOW
         while self._pending_admit:
             tid, spec = self._pending_admit.popleft()
             self._tenants[tid] = spec
             admitted.append(tid)
             self.stats.admissions += 1
+            cls = spec.resolved_cost_class
+            arrived[cls] = arrived.get(cls, 0) + max(1, len(spec.sources))
         retired: List[int] = []
         while self._pending_retire:
             tid = self._pending_retire.popleft()
             if self._tenants.pop(tid, None) is not None:
                 retired.append(tid)
                 self.stats.retirements += 1
+        # arrival-rate EWMA (rows/tick) per cost class: decays every tick,
+        # spikes on bursts — bucket_headroom() reads it so the class's
+        # buckets are already sized when the NEXT burst lands
+        for cls in set(self._admit_ewma) | set(arrived):
+            prev = self._admit_ewma.get(cls, 0.0)
+            self._admit_ewma[cls] = (
+                (1.0 - self.EWMA_ALPHA) * prev
+                + self.EWMA_ALPHA * arrived.get(cls, 0))
+            # sticky headroom: grow on a higher forecast NOW (the next
+            # burst is what the headroom exists for), shrink only when
+            # the forecast collapses 4x (the ladder's hysteresis rule) —
+            # a raw ceil of the decaying EWMA would flap capacities
+            want = int(np.ceil(self._admit_ewma[cls]
+                               * self.HEADROOM_SAFETY))
+            held = self._admit_hr.get(cls, 0)
+            if want > held or want < held // 4:
+                self._admit_hr[cls] = want
         self.stats.ticks += 1
         tick_no = self.stats.ticks
         results: Dict[int, Any] = {}

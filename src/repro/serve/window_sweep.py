@@ -40,6 +40,17 @@ its own convergence loop inside the same fused SPMD program — one
 dispatch per device per advance, rows still bit-identical to the
 single-device engine.
 
+``serve_batch(..., mesh=(E, D))`` composes that with EDGE sharding
+(DESIGN.md §7.7): the ring view itself partitions into contiguous slot
+chunks over the mesh's edge axis (the delta scatter lands only on the
+owning shard), every group's solve runs one ``shard_map`` over
+``(edges, queries)`` with each per-round edge-wide reduction finished by
+ONE collective across the edge axis, and per-device convergence stays
+LOCAL on the query axis.  Integer-label rows remain bit-identical to the
+unsharded engine; float rows (pagerank, betweenness) cross a psum at
+E > 1 and compare allclose.  Bucketed admission composes with any mesh
+shape via bucket-aligned row partitions.
+
 Integer-label results are row-identical (bit-exact) to the cold ``sweep``
 under the same plan; float rows (pagerank, betweenness) match up to float
 reduction order (sums cross edge-view layouts — compare allclose, as
@@ -108,6 +119,7 @@ from repro.distributed.query_shard import (
     replicate,
     replicated_arrays,
     row_partition,
+    serve_mesh,
 )
 from repro.engine.queries import (
     QueryBatch,
@@ -639,18 +651,61 @@ def _gather_solved(sub, solve_map, n_outputs: int):
     return tuple(s[sm] for s in sub)
 
 
+def _mesh_shape(mesh) -> Tuple[int, int]:
+    """The serving mesh's ``(E, D)`` shape: a 1-D query mesh is ``(1, D)``
+    (the row axis is always the LAST mesh axis, the edge axis — when the
+    mesh has one — the first), ``None`` is ``(1, 1)``."""
+    if mesh is None:
+        return 1, 1
+    names = mesh.axis_names
+    d = int(mesh.shape[names[-1]])
+    e = int(mesh.shape[names[0]]) if len(names) > 1 else 1
+    return e, d
+
+
+def _place_ring(edges, mesh):
+    """Device placement of the ring view under a serving mesh: replicated
+    on a 1-D query mesh (§7.5); on a 2-D edge×query mesh (§7.7) sharded
+    along the slot axis over the EDGE axis — contiguous chunks, so edge
+    shard e owns global slots [e*C/E, (e+1)*C/E) and the positionally
+    stable ring slot order is the shard boundary."""
+    e_sh, _ = _mesh_shape(mesh)
+    if e_sh == 1:
+        return replicate(edges, mesh)
+    C = edges.src.shape[0]
+    if C % e_sh:
+        raise ValueError(
+            f"ring capacity {C} does not divide across {e_sh} edge shards "
+            f"— capacity rungs are powers of two, so use a power-of-two "
+            f"edge-shard count")
+    return jax.device_put(
+        edges, NamedSharding(mesh, PartitionSpec(mesh.axis_names[0])))
+
+
 def _solve_rows_sharded(entry, params, plan, n_vertices, mesh, edges,
                         windows, sources, init):
     """One group's new-row solve with the (padded) row axis SHARDED over
-    the query mesh (DESIGN.md §7.5): each device runs the group fixpoint
-    over ONLY its contiguous row chunk — its own while_loop, so a device
-    whose rows converge early exits early instead of idling in a joint
-    loop until the globally deepest row settles — then the solved rows are
-    constrained back to replicated (the per-advance gather), keeping row
-    reuse and assembly on later advances device-local.  The view and plan
-    stay replicated; windows/sources/warm-inits are row-sharded."""
-    ax = mesh.axis_names[0]
-    row, rep = PartitionSpec(ax), PartitionSpec()
+    the mesh's query axis (DESIGN.md §7.5): each device runs the group
+    fixpoint over ONLY its contiguous row chunk — its own while_loop, so a
+    device whose rows converge early exits early instead of idling in a
+    joint loop until the globally deepest row settles — then the solved
+    rows are constrained back to replicated (the per-advance gather),
+    keeping row reuse and assembly on later advances device-local.
+
+    Under a 2-D edge×query mesh (DESIGN.md §7.7) the VIEW is additionally
+    sharded along its slot axis: each (edge, query) device relaxes only
+    its slot chunk, and the plan's ``edge_axis`` — set HERE, at trace
+    time, inside the shard_map body — makes every per-round edge-wide
+    segment combine finish with ONE collective (pmin/pmax/psum) across
+    the edge axis.  The post-collective vertex state is replicated along
+    that axis, so the edge shards of one row chunk stay in lockstep
+    through every convergence cond while the query axis keeps LOCAL
+    convergence; the row-sharded out_specs below (which omit the edge
+    axis) are exactly that replication invariant."""
+    row_ax = mesh.axis_names[-1]
+    row, rep = PartitionSpec(row_ax), PartitionSpec()
+    edge_ax = mesh.axis_names[0] if len(mesh.axis_names) > 1 else None
+    edge_spec = rep if edge_ax is None else PartitionSpec(edge_ax)
     has_src, has_init = sources is not None, init is not None
     args, specs = [windows], [row]
     if has_src:
@@ -660,7 +715,7 @@ def _solve_rows_sharded(entry, params, plan, n_vertices, mesh, edges,
         args.append(init)
         specs.append(row)
     args.append(edges)
-    specs.append(rep)
+    specs.append(edge_spec)
 
     def body(*a):
         it = iter(a)
@@ -668,7 +723,9 @@ def _solve_rows_sharded(entry, params, plan, n_vertices, mesh, edges,
         s_l = next(it) if has_src else None
         i_l = next(it) if has_init else None
         e_l = next(it)
-        sub, rounds = entry.solve(e_l, w_l, s_l, plan, n_vertices, i_l,
+        p_l = (plan if edge_ax is None
+               else dataclasses.replace(plan, edge_axis=edge_ax))
+        sub, rounds = entry.solve(e_l, w_l, s_l, p_l, n_vertices, i_l,
                                   dict(params))
         sub = sub if isinstance(sub, tuple) else (sub,)
         # per-device round counts concatenate along the row axis; the max
@@ -710,9 +767,18 @@ def _solve_groups(edges, plan, n_vertices, schedule, prev_results,
             n_new_cap = entry_s[4]
             sel = jnp.asarray(maps[gi], jnp.int32)
             if n_new_cap:
-                sub, rounds = entry.solve(
-                    edges, new_windows[gi], new_sources[gi], plan,
-                    n_vertices, inits[gi], dict(params))
+                if mesh is None:
+                    sub, rounds = entry.solve(
+                        edges, new_windows[gi], new_sources[gi], plan,
+                        n_vertices, inits[gi], dict(params))
+                else:
+                    # bucketed × mesh (§7.7): the solve capacity is padded
+                    # to a bucket-aligned multiple of the query-axis size
+                    # at schedule build, so the bucketed rows shard exactly
+                    # like exact-schedule rows do
+                    sub, rounds = _solve_rows_sharded(
+                        entry, params, plan, n_vertices, mesh, edges,
+                        new_windows[gi], new_sources[gi], inits[gi])
                 subs = sub if isinstance(sub, tuple) else (sub,)
                 if prev is None:
                     pool = subs
@@ -768,6 +834,47 @@ _ADVANCE_RING = {
 }
 
 
+def _advance_ring_sharded(mesh, fields, perm, edges, positions, *,
+                          capacity: int, delta_budget: int):
+    """Edge-sharded index-ring delta advance (DESIGN.md §7.7): edge shard
+    e of the 2-D mesh owns the contiguous slot chunk [e*C/E, (e+1)*C/E),
+    so the entering scatter lands ONLY on the owning shard.  Every shard
+    gathers the same delta-budget entering positions from the replicated
+    time-first permutation (O(delta) work), maps them to LOCAL slots, and
+    drops the out-of-chunk ones; the validity mask is recomputed from the
+    shard's global slot offset.  Per slot this is bit-identical to the
+    unsharded ``advance_index_ring_fields`` — the slot identity
+    ``slot(p) = p mod C`` is layout-stable, the chunking only decides
+    which device materializes which slot."""
+    ax_e = mesh.axis_names[0]
+    n_e = int(mesh.shape[ax_e])
+    c_local = capacity // n_e
+
+    def body(fields_l, perm_l, edges_l, pos_l):
+        base = jax.lax.axis_index(ax_e) * c_local
+        lo_prev, lo_new, hi_new = pos_l[0], pos_l[1], pos_l[2]
+        enter = lo_prev + capacity + jnp.arange(delta_budget,
+                                                dtype=jnp.int32)
+        ok = enter < lo_new + capacity
+        eids = perm_l[jnp.minimum(enter, perm_l.shape[0] - 1)]
+        gslot = jnp.mod(enter, capacity)
+        lslot = jnp.where(
+            ok & (gslot >= base) & (gslot < base + c_local),
+            gslot - base, c_local)                       # OOB -> dropped
+        new = [
+            p.at[lslot].set(f[eids], mode="drop")
+            for p, f in zip(edges_l[:5], fields_l)
+        ]
+        pos = base + jnp.arange(c_local, dtype=jnp.int32)
+        pos = lo_new + jnp.mod(pos - lo_new, capacity)
+        return EdgeView(*new, pos < hi_new)
+
+    rep, shard = PartitionSpec(), PartitionSpec(ax_e)
+    f = _compat_shard_map(
+        body, mesh=mesh, in_specs=(rep, rep, shard, rep), out_specs=shard)
+    return f(fields, perm, edges, positions)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("method", "n_vertices", "capacity", "delta_budget",
@@ -794,12 +901,22 @@ def _fused_step_ring(
     mesh: Optional[Mesh] = None,
 ):
     _trace_event((method, capacity, delta_budget, schedule, mesh))
-    # under a query mesh the inputs are replicated, so the delta scatter
-    # runs per device on that device's whole ring replica — the SPMD
-    # program is still ONE dispatch per device per advance (§7.5)
-    edges = _ADVANCE_RING[method](
-        fields, perm, edges, positions[0], positions[1], positions[2],
-        capacity=capacity, delta_budget=delta_budget)
+    if mesh is not None and len(mesh.axis_names) > 1:
+        # 2-D edge×query mesh (§7.7): the ring is sharded along its slot
+        # axis, so the delta scatter runs shard-local (only the owning
+        # edge shard lands each entering slot) — with the solves below it
+        # is still ONE SPMD program, one dispatch per device per advance
+        edges = _advance_ring_sharded(
+            mesh, fields, perm, edges, positions,
+            capacity=capacity, delta_budget=delta_budget)
+    else:
+        # under a 1-D query mesh the inputs are replicated, so the delta
+        # scatter runs per device on that device's whole ring replica —
+        # the SPMD program is still ONE dispatch per device per advance
+        # (§7.5)
+        edges = _ADVANCE_RING[method](
+            fields, perm, edges, positions[0], positions[1], positions[2],
+            capacity=capacity, delta_budget=delta_budget)
     results, rounds = _solve_groups(
         edges, plan, n_vertices, schedule, prev_results, new_windows,
         new_sources, inits, maps=maps, mesh=mesh)
@@ -904,6 +1021,7 @@ def _advance(
     warm_start: bool,
     mesh: Optional[Mesh] = None,
     bucketed: bool = False,
+    bucket_headroom: int = 0,
 ):
     """The incremental advance shared by ``serve_batch`` (multi-tenant) and
     ``sweep_incremental`` (single-tenant wrapper): match every group's rows
@@ -933,8 +1051,13 @@ def _advance(
             {} if state is None
             else dict(zip(state.group_keys, state.group_caps))
         )
+        # ``bucket_headroom`` (the daemon's EWMA arrival-rate forecast)
+        # sizes the bucket for the rows EXPECTED next tick, not just the
+        # rows present now — a forecasted burst admits without a single
+        # rebucket; the 4x shrink hysteresis still applies on top
         caps = tuple(
-            bucket_capacity(len(s), prev_caps.get(key, 0))
+            bucket_capacity(len(s) + max(0, int(bucket_headroom)),
+                            prev_caps.get(key, 0))
             for key, s, _ in groups
         )
 
@@ -963,12 +1086,12 @@ def _advance(
         _note("cold:view")
         edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
         if mesh is not None and p.method != "scan":
-            # replicate the ring ONCE at the cold build: every later fused
-            # input/output keeps the replicated layout (sharding-stable
-            # jit cache from the first sharded advance).  The scan view
-            # aliases the graph arrays and is never delta-advanced, so it
-            # stays wherever the graph lives.
-            edges = replicate(edges, mesh)
+            # place the ring ONCE at the cold build — replicated (1-D) or
+            # edge-sharded (2-D): every later fused input/output keeps the
+            # layout (sharding-stable jit cache from the first sharded
+            # advance).  The scan view aliases the graph arrays and is
+            # never delta-advanced, so it stays wherever the graph lives.
+            edges = _place_ring(edges, mesh)
         results, rounds, n_unique = [], [], 0
         for gi, (key, sources, wins) in enumerate(groups):
             entry = _ALGOS[key[0]]
@@ -1083,8 +1206,11 @@ def _advance(
                     # unique rows to cap * D so uneven counts never drop a
                     # row or retrace; real row j keeps global index j, so
                     # `inverse` is layout-oblivious and doubles as the
-                    # padding-dropping gather
-                    _, pad_map = row_partition(len(u_sources), mesh.size)
+                    # padding-dropping gather.  D is the QUERY-axis size —
+                    # on a 2-D mesh the edge axis replicates rows, it does
+                    # not partition them.
+                    _, pad_map = row_partition(
+                        len(u_sources), _mesh_shape(mesh)[1])
                     u_windows = u_windows[pad_map]
                     u_sources = [u_sources[j] for j in pad_map]
                     if init is not None:
@@ -1153,6 +1279,18 @@ def _advance(
                 # has-new-rows variant per capacity ever compiles, so
                 # within-bucket churn can never shift a solve rung
                 K = cap
+                if mesh is not None:
+                    # bucket-aligned partition (§7.7): the sharded solve
+                    # capacity is chunk * D with chunk snapped up to the
+                    # bucket ladder value of ceil(cap / D) — every chunk
+                    # boundary lands on a bucket_capacity multiple, and K
+                    # depends only on (cap, D), so within-bucket churn
+                    # still retraces nothing.  For power-of-two D <= cap
+                    # the snap is exact and K == cap.
+                    d_sh = _mesh_shape(mesh)[1]
+                    chunk, _ = row_partition(
+                        cap, d_sh, align=bucket_capacity(-(-cap // d_sh)))
+                    K = chunk * d_sh
                 if K != m_u:
                     pad_map = list(range(m_u)) + [m_u - 1] * (K - m_u)
                     u_windows = u_windows[pad_map]
@@ -1195,7 +1333,9 @@ def _advance(
         # (graph, mesh), and the fused step's input shardings are stable
         # from the first sharded advance
         fields = replicated_arrays(mesh, *fields)
-    shard_tag = "" if mesh is None else f"@q{mesh.size}"
+    e_sh, d_sh = _mesh_shape(mesh)
+    shard_tag = ("" if mesh is None
+                 else f"@q{d_sh}" if e_sh == 1 else f"@e{e_sh}q{d_sh}")
 
     # ---- fused advance: ring slide + all solves + assembly, one dispatch --
     if p.method == "scan":
@@ -1260,6 +1400,15 @@ def _advance(
 # public entry points
 # ---------------------------------------------------------------------------
 
+_SERVE_COMBOS = (
+    "supported serve_batch combinations — mesh: None | int D | (E, D) "
+    "tuple | jax.sharding.Mesh; admission: None | 'bucketed' (composes "
+    "with ANY mesh shape); warm_start=True only with admission=None; "
+    "edge-sharded meshes (E > 1) require the index access method (a TGER "
+    "index and access='auto'|'index' / an index plan=)"
+)
+
+
 def serve_batch(
     g: TemporalGraph,
     batch: QueryBatch,
@@ -1272,6 +1421,7 @@ def serve_batch(
     warm_start: bool = False,
     mesh: Optional[Any] = None,
     admission: Optional[str] = None,
+    bucket_headroom: int = 0,
 ):
     """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
     multi-tenant entry point (DESIGN.md §7.4).
@@ -1291,15 +1441,25 @@ def serve_batch(
     corresponding cold single-query sweeps under the same plan; float
     rows match allclose.
 
-    ``mesh`` opts into SHARDED batch serving (DESIGN.md §7.5): pass a
-    device count or a one-axis ``jax.sharding.Mesh`` and every group's
+    ``mesh`` opts into SHARDED batch serving: pass a device count / a
+    one-axis ``jax.sharding.Mesh`` (DESIGN.md §7.5) and every group's
     new-row axis partitions across the mesh devices — ring view and
     result rows replicated per device, each device solving only its
     contiguous row chunk under its own convergence loop, results gathered
-    (constrained replicated) in the same program.  The steady-state
-    advance stays ONE fused dispatch per device, and results remain
-    row-bit-identical to the single-device engine.  A carried state is
-    mesh-shape-bound: switching mesh (or toggling sharding) falls cold.
+    (constrained replicated) in the same program.  Pass an ``(E, D)``
+    tuple (or a two-axis mesh) for the 2-D edge×query composition
+    (DESIGN.md §7.7): the ring view itself shards into contiguous slot
+    chunks over the ``E`` edge shards (delta scatter landing only on the
+    owning shard) while rows still partition over the ``D`` query shards,
+    with one collective per relaxation round combining the edge-partial
+    reductions.  Either way the steady-state advance stays ONE fused
+    dispatch per device; integer-label results remain row-bit-identical
+    to the single-device engine (float rows cross a psum at E > 1 and
+    compare allclose).  ``(1, D)`` normalizes to the exact 1-D program.
+    Edge sharding requires the index access method (the ring IS the
+    sharded structure), so E > 1 demands a TGER and ``access='auto'`` or
+    ``'index'``.  A carried state is mesh-shape-bound: switching mesh (or
+    toggling sharding) falls cold.
 
     ``admission="bucketed"`` opts into the §7.6 admission ladder the
     serving daemon drives: every group's result buffer is PADDED to its
@@ -1309,10 +1469,13 @@ def serve_batch(
     order (sticky ordering; results are returned in THIS batch's group
     order regardless), and row assignment rides dynamic gather maps so
     tenant churn inside a bucket is a jit-cache hit on the fused step.
-    Bucketed admission is mutually exclusive with ``mesh`` and
-    ``warm_start``, and a carried state only transfers between calls on
-    the same side of the admission toggle (else the serve falls cold
-    without consuming it).
+    Bucketed admission COMPOSES with any mesh shape (bucket-aligned row
+    partitions, §7.7); ``bucket_headroom`` (the daemon's EWMA arrival
+    forecast) sizes buckets for the rows expected next tick so a
+    forecasted burst admits without a rebucket.  ``warm_start`` remains
+    unsupported under bucketed admission; unsupported combinations raise
+    ``ValueError`` BEFORE any state is consumed (the donation contract:
+    a carried state survives the error path untouched).
 
     A state from a different graph or an incompatible explicit ``plan``
     falls back to a cold serve (the mismatched state is NOT consumed).
@@ -1320,24 +1483,42 @@ def serve_batch(
     starts (EA/cc exact, reachability sound; refused elsewhere)."""
     if admission not in (None, "bucketed"):
         raise ValueError(
-            f"admission must be None or 'bucketed', got {admission!r}")
+            f"unknown admission mode {admission!r}; " + _SERVE_COMBOS)
     bucketed = admission == "bucketed"
-    if bucketed and mesh is not None:
-        raise ValueError(
-            "admission='bucketed' and a query mesh are mutually exclusive: "
-            "bucketed maps re-pad the row axis per advance, which would "
-            "defeat the mesh's static row partition")
     if bucketed and warm_start:
         raise ValueError(
-            "admission='bucketed' refuses warm_start: containment warm "
-            "inits are exact-shape per new row and would retrace the "
-            "bucketed step the ladder exists to pin")
+            "admission='bucketed' with warm_start=True is unsupported: "
+            "containment warm inits are exact-shape per new row and would "
+            "retrace the bucketed step the ladder exists to pin; "
+            + _SERVE_COMBOS)
     if not isinstance(batch, QueryBatch):
         batch = QueryBatch.make(batch)
     for spec in batch.specs:
         _algo(spec.algorithm)       # fail fast on unknown algorithms
     if mesh is not None and not isinstance(mesh, Mesh):
-        mesh = query_mesh(int(mesh))
+        if isinstance(mesh, (tuple, list)):
+            mesh = serve_mesh(int(mesh[0]), int(mesh[1]))
+        else:
+            mesh = query_mesh(int(mesh))
+    e_sh, _ = _mesh_shape(mesh)
+    if e_sh > 1:
+        # every check here fires BEFORE the carried state can be consumed
+        # (donation only happens inside the fused dispatch): an error path
+        # must leave the caller's state reusable
+        if tger is None:
+            raise ValueError(
+                "an edge-sharded mesh (E > 1) requires a TGER index — the "
+                "ring's slot chunks are the shard boundaries; "
+                + _SERVE_COMBOS)
+        if plan is not None and plan.method != "index":
+            raise ValueError(
+                f"an edge-sharded mesh (E > 1) requires an index plan, "
+                f"got method={plan.method!r}; " + _SERVE_COMBOS)
+        if access not in ("auto", "index"):
+            raise ValueError(
+                f"an edge-sharded mesh (E > 1) requires access='index', "
+                f"got {access!r}; " + _SERVE_COMBOS)
+        access = "index"
     groups = [
         (key, [r.source for r in rows],
          np.asarray([r.window for r in rows], np.int32))
@@ -1370,11 +1551,12 @@ def serve_batch(
         plan_arg=plan,
         plan_builder=lambda: plan_batch(
             g, tger, batch, access=access, backend=backend,
-            shards=None if mesh is None else mesh.size,
+            shards=None if mesh is None else _mesh_shape(mesh),
             bucketed=bucketed),
         warm_start=warm_start,
         mesh=mesh,
         bucketed=bucketed,
+        bucket_headroom=bucket_headroom,
     )
     if order is not None:
         inv = [0] * len(order)

@@ -9,8 +9,11 @@ Four layers:
    row count), bit-identity vs plain serves, zero fused-step retraces for
    within-bucket admission/retirement, exactly one rebucket + one retrace
    on a bucket transition, the admission-toggle state gate (falls cold
-   WITHOUT consuming the mismatched state), and the mesh/warm_start
-   mutual-exclusion errors.
+   WITHOUT consuming the mismatched state), bucketed×mesh composition
+   (DESIGN.md §7.7), the unsupported-combination errors (which fire
+   BEFORE the carried state can be consumed), and the daemon's
+   arrival-rate EWMA bucket headroom (a forecasted burst admits with
+   zero rebuckets).
 2. **dispatch_log re-entrancy** — nested scopes stack (both logs observe
    the inner extent's tags) and the legacy ``ws._DISPATCH_LOG`` module
    global still receives tags without double-counting.
@@ -113,15 +116,45 @@ def test_bucketed_results_are_padded_to_the_bucket_capacity():
     _assert_rows_match(res_b[0][:3], res_p[0], "earliest_arrival", "bucketed-cold")
 
 
-def test_bucketed_rejects_mesh_and_warm_start_and_bad_mode():
+def test_bucketed_composes_with_mesh_and_rejects_bad_combos():
+    """Since DESIGN.md §7.7 bucketed admission COMPOSES with the query
+    mesh (it used to be mutually exclusive); the still-unsupported
+    combinations raise a ValueError that lists the supported ones."""
     g, idx, t_min, t_max = _case()
     batch = _ea_batch(t_max, (t_max - t_min) // 8, 1)
-    with pytest.raises(ValueError, match="mutually exclusive"):
-        serve_batch(g, batch, idx, admission="bucketed", mesh=2)
+    # bucketed × mesh now serves (D=1 drives the full sharded path)
+    res, st = serve_batch(g, batch, idx, access="index",
+                          admission="bucketed", mesh=1)
+    assert st.mesh is not None and st.group_caps
     with pytest.raises(ValueError, match="warm_start"):
         serve_batch(g, batch, idx, admission="bucketed", warm_start=True)
+    with pytest.raises(ValueError, match="supported serve_batch"):
+        serve_batch(g, batch, idx, admission="sorted")
     with pytest.raises(ValueError, match="admission"):
         serve_batch(g, batch, idx, admission="sorted")
+
+
+def test_unsupported_combo_error_path_does_not_consume_state():
+    """The donation contract on the ERROR path: an unsupported-combination
+    ValueError fires before the fused step can consume the carried state,
+    so the same state object serves fine immediately afterwards."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width, stride = max(span // 20, 4), max(span // 160, 1)
+    mk = lambda k: _ea_batch(t_max - (4 - k) * stride, width, 2)
+    _, state = serve_batch(g, mk(0), idx, access="index")
+    for kw in (
+        dict(admission="rate-limited"),
+        dict(admission="bucketed", warm_start=True),
+        dict(mesh=(2, 2), access="scan"),
+        dict(mesh=(2, 2), tger_none=True),
+    ):
+        tger = None if kw.pop("tger_none", False) else idx
+        with pytest.raises(ValueError):
+            serve_batch(g, mk(1), tger, state=state, **kw)
+    # the carried state is untouched: the next good serve delta-advances
+    res, s2 = serve_batch(g, mk(1), idx, state=state, access="index")
+    assert s2.last_advance in ("delta", "noop")
 
 
 def test_within_bucket_admission_is_a_cache_hit():
@@ -442,6 +475,58 @@ def test_tick_round_robins_multiple_deep_classes():
         else:
             assert t_slow in rep.results and t_pr not in rep.results
     assert set(seen) == {"deep", "slow-bfs"} and seen[:2] * 2 == seen
+
+
+def test_arrival_rate_headroom_absorbs_forecasted_bursts():
+    """DESIGN.md §7.7 arrival-rate bucket sizing: a SURPRISE burst of B
+    tenants lands with at most ONE rebucket (admission is batched at the
+    tick boundary, so all B land in a single bucket transition), and once
+    the per-class admission EWMA has learned the burst rate the bucket
+    already carries headroom for the next one — sustained same-size
+    bursts admit with ZERO rebuckets."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 20, 4)
+    stride = max(width // 8, 1)
+    base = t_min + span // 2
+    server = GraphBatchServer(g, idx, access="index")
+    for i in range(2):
+        server.submit(_spec("earliest_arrival", i, (0, width)))
+    tick = 0
+
+    def run_tick():
+        nonlocal tick
+        with ws.dispatch_log() as log:
+            server.tick(base + tick * stride)
+        tick += 1
+        return log
+
+    for _ in range(5):                      # settle the base load
+        run_tick()
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) <= 2
+
+    # surprise burst: 6 tenants queued async, admitted by ONE tick
+    burst = [server.submit(_spec("earliest_arrival", 10 + i, (0, width)))
+             for i in range(6)]
+    log = run_tick()
+    assert log.count("rebucket") <= 1, log
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) >= 6, (
+        "the EWMA forecast should now cover a whole burst")
+
+    # sustained churn at the burst rate: the EWMA converges, the bucket
+    # (sized real rows + forecast headroom) stops moving, and bursts
+    # become pure within-bucket admission
+    rebuckets = []
+    for k in range(7):
+        for tid in burst:
+            server.retire(tid)
+        burst = [server.submit(
+            _spec("earliest_arrival", 20 + 10 * k + i, (0, width)))
+            for i in range(6)]
+        rebuckets.append(run_tick().count("rebucket"))
+    assert sum(rebuckets[:3]) <= 1, rebuckets   # one growth while learning
+    assert rebuckets[3:] == [0] * 4, rebuckets  # forecasted: zero rebuckets
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) >= 6
 
 
 def test_retired_tenant_leaves_the_batch():

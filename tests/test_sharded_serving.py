@@ -17,6 +17,11 @@ engine.
    row-bit-identical to the single-device engine, exactly ONE fused
    dispatch per advance (one SPMD program per device), zero retraces
    after warmup, and ring wrap-around covered.
+4. **The 2-D edge×query soak** (DESIGN.md §7.7; subprocess) — the same
+   chain at (E,D) ∈ {(1,1),(2,1),(1,2),(2,2)} with the ring sharded over
+   the edge axis, plus bucketed-admission churn on the largest mesh;
+   scripts/ci.sh re-runs it at 8 devices / (2,4)+(4,2) via the SOAK2D_*
+   env knobs.
 """
 import json
 import os
@@ -30,9 +35,15 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data.generators import power_law_temporal_graph
 from repro.core.tger import build_tger
-from repro.distributed.query_shard import query_axis, query_mesh, row_partition
+from repro.distributed.query_shard import (
+    edge_axis,
+    query_axis,
+    query_mesh,
+    row_partition,
+    serve_mesh,
+)
 from repro.engine import QueryBatch, QuerySpec
-from repro.engine.queries import dedup_rows
+from repro.engine.queries import bucket_capacity, dedup_rows
 from repro.serve import serve_batch, sweep
 from repro.serve import window_sweep as ws
 
@@ -83,6 +94,71 @@ def test_row_partition_property(n_rows, n_shards):
     # real row j keeps global index j (contiguous-chunk layout)
     assert pad_map[:n_rows].tolist() == list(range(n_rows))
     assert (pad_map[n_rows:] == n_rows - 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_rows=st.integers(1, 97), n_shards=st.integers(1, 8),
+       align=st.integers(1, 16))
+def test_row_partition_align_property(n_rows, n_shards, align):
+    """The aligned partition of DESIGN.md §7.7: capacity snaps UP to the
+    next `align` multiple (so chunk boundaries land on `align` multiples),
+    real rows keep identity layout, pads repeat the last real row, and
+    the snap is minimal.  Prime row counts and rows < devices are inside
+    the drawn ranges."""
+    cap, pad_map = row_partition(n_rows, n_shards, align=align)
+    cap0 = -(-n_rows // n_shards)
+    assert cap % align == 0                    # boundaries on align multiples
+    assert cap >= cap0                         # pad, never drop
+    assert cap - align < cap0                  # minimal aligned capacity
+    assert pad_map.shape == (cap * n_shards,)
+    # partition∘unpartition is the identity on the real rows...
+    assert pad_map[:n_rows].tolist() == list(range(n_rows))
+    # ...and a pad row only ever aliases the LAST real row, so gathering
+    # rows [0, n_rows) back out can never observe a pad row
+    assert (pad_map[n_rows:] == n_rows - 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_rows=st.integers(1, 257), n_shards=st.integers(1, 8))
+def test_row_partition_bucket_aligned(n_rows, n_shards):
+    """The serving engine's bucketed×mesh partition: align to the bucket
+    ladder value of the per-shard row count, so every chunk boundary lands
+    on a `bucket_capacity` multiple (the §7.7 invariant that keeps the
+    dynamic bucket gather maps layout-stable under the query mesh)."""
+    bucket = bucket_capacity(-(-n_rows // n_shards))
+    cap, pad_map = row_partition(n_rows, n_shards, align=bucket)
+    assert cap % bucket == 0
+    assert cap * n_shards >= n_rows
+    assert pad_map[:n_rows].tolist() == list(range(n_rows))
+    # power-of-two row counts with power-of-two shard counts snap exactly
+    if n_rows & (n_rows - 1) == 0 and n_shards & (n_shards - 1) == 0 \
+            and n_shards <= n_rows:
+        assert cap * n_shards == n_rows
+
+
+def test_row_partition_rejects_bad_align():
+    with pytest.raises(ValueError):
+        row_partition(4, 2, align=0)
+
+
+def test_serve_mesh_shapes():
+    """(1, D) degenerates to the exact 1-D query mesh (same program, same
+    cache keys); E > 1 needs E*D devices; degenerate shapes are rejected."""
+    import jax
+
+    m = serve_mesh(1, 1)
+    assert m.axis_names == (query_axis(),)
+    with pytest.raises(ValueError):
+        serve_mesh(0, 1)
+    with pytest.raises(ValueError):
+        serve_mesh(1, 0)
+    if jax.device_count() < 4:
+        with pytest.raises(ValueError, match="device"):
+            serve_mesh(2, 2)
+    else:
+        m2 = serve_mesh(2, 2)
+        assert m2.axis_names == (edge_axis(), query_axis())
+        assert m2.shape[edge_axis()] == 2 and m2.shape[query_axis()] == 2
 
 
 def test_dedup_rows_collapses_and_fans_out():
@@ -446,3 +522,165 @@ def test_sharded_soak_4dev_subprocess():
         assert res["one_dispatch"][D], (
             f"D={D}: advances not one-fused-dispatch")
         assert res["zero_retrace"][D], f"D={D}: retraced after warmup"
+
+
+# ---------------------------------------------------------------------------
+# 4. the 2-D edge×query soak (DESIGN.md §7.7; subprocess, forced host
+#    devices).  Parameterized by env so scripts/ci.sh can re-run it at 8
+#    devices / mesh (2,4)+(4,2) with CI-reduced advance counts:
+#      SOAK2D_DEVICES=8 SOAK2D_MESHES=2x4,4x2 SOAK2D_STEPS=24
+# ---------------------------------------------------------------------------
+
+_SOAK2D_PROG = textwrap.dedent(
+    """
+    import os
+    DEVICES = int(os.environ.get("SOAK2D_DEVICES", "4"))
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%d" % DEVICES)
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.data.generators import power_law_temporal_graph
+    from repro.core.tger import build_tger
+    from repro.engine import QueryBatch, QuerySpec
+    from repro.serve import serve_batch
+    from repro.serve import window_sweep as ws
+
+    MESHES = [tuple(int(x) for x in m.split("x"))
+              for m in os.environ.get(
+                  "SOAK2D_MESHES", "1x1,2x1,1x2,2x2").split(",")]
+    STEPS = int(os.environ.get("SOAK2D_STEPS", "48"))
+    # The ring delta is padded to pow2 buckets and each NEW bucket's first
+    # appearance is one legitimate trace; arrival times are horizon-
+    # dependent (this chain ends in the power-law graph's dense tail, and
+    # at the default 48 steps the 128 bucket first lands at step 28), so
+    # warmup scales with the soak length instead of pinning a step count.
+    WARM = max(10, (2 * STEPS) // 3)
+
+    g = power_law_temporal_graph(200, 5000, seed=8)
+    idx = build_tger(g, degree_cutoff=48)
+    ts = np.asarray(g.t_start)
+    t_max = int(np.asarray(g.t_end).max())
+    span = int(ts.max() - ts.min())
+    width, stride = max(span // 100, 1), max(span // 400, 1)
+    algs = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank")
+
+    def mk(base, n=16, dup=2):
+        specs = []
+        for i in range(n):
+            alg = algs[i % len(algs)]
+            off = (i % 2) * stride
+            win = (int(base - off - width), int(base - off))
+            if alg == "cc":
+                specs.append(QuerySpec.make(alg, win))
+            elif alg == "pagerank":
+                specs.append(QuerySpec.make(alg, win, n_iters=8))
+            else:
+                specs.append(QuerySpec.make(alg, win, sources=(3 * i) % 200))
+        specs.extend(specs[:dup])
+        return QueryBatch.make(specs)
+
+    def snap(results):
+        return [tuple(np.asarray(x)
+                      for x in (r if isinstance(r, tuple) else (r,)))
+                for r in results]
+
+    base0 = t_max - (STEPS + 2) * stride
+
+    def chain(mesh, **kw):
+        ws._TRACE_COUNTS.clear()
+        state, rows, advances = None, [], []
+        warm_traces = None
+        for k in range(STEPS):
+            ws._DISPATCH_LOG = log = []
+            res, state = serve_batch(g, mk(base0 + k * stride), idx,
+                                     state=state, access="index", mesh=mesh,
+                                     **kw)
+            jax.block_until_ready(res)
+            ws._DISPATCH_LOG = None
+            rows.append(snap(res))
+            advances.append((state.last_advance, tuple(log)))
+            if k == WARM:
+                warm_traces = ws.fused_trace_count()
+        return rows, advances, warm_traces, ws.fused_trace_count()
+
+    def rows_match(ref, got, exact_floats):
+        for r, s in zip(ref, got):
+            for a, b in zip(r, s):
+                for x, y in zip(a, b):
+                    if x.dtype.kind in "iub" or exact_floats:
+                        if not (x == y).all():
+                            return False
+                    elif not np.allclose(x, y, rtol=1e-5, atol=1e-6):
+                        return False
+        return True
+
+    ref_rows, ref_adv, _, _ = chain(None)
+    out = {"devices": jax.device_count(), "steps": STEPS,
+           "parity": {}, "one_dispatch": {}, "zero_retrace": {},
+           "ref_steady": all(a == ("delta", ("fused:index",))
+                             for a in ref_adv[1:])}
+    for E, D in MESHES:
+        tag = "fused:index@q%d" % D if E == 1 else "fused:index@e%dq%d" % (E, D)
+        rows, adv, warm_traces, end_traces = chain((E, D))
+        key = "%dx%d" % (E, D)
+        # E == 1 runs the exact 1-D program (floats bit-identical); E > 1
+        # crosses an edge-axis psum, so float rows compare allclose
+        out["parity"][key] = rows_match(ref_rows, rows, exact_floats=E == 1)
+        out["one_dispatch"][key] = all(
+            a == ("delta", (tag,)) for a in adv[1:])
+        out["zero_retrace"][key] = bool(end_traces == warm_traces)
+
+    # bucketed admission on the LARGEST mesh: within-bucket tenant churn
+    # must be a jit-cache hit once every churn size has traced (the
+    # lap-stable phase)
+    E, D = max(MESHES, key=lambda m: m[0] * m[1])
+    ws._TRACE_COUNTS.clear()
+    state, lap_traces, advances = None, None, []
+    CHURN = max(16, STEPS // 3)
+    for k in range(CHURN):
+        res, state = serve_batch(
+            g, mk(base0 + k * stride, n=12 + (k % 3)), idx, state=state,
+            access="index", mesh=(E, D), admission="bucketed")
+        jax.block_until_ready(res)
+        advances.append(state.last_advance)
+        if k == 9:
+            lap_traces = ws.fused_trace_count()
+    out["bucketed_mesh"] = "%dx%d" % (E, D)
+    out["bucketed_zero_retrace"] = bool(ws.fused_trace_count() == lap_traces)
+    out["bucketed_steady"] = all(a == "delta" for a in advances[1:])
+    print(json.dumps(out))
+    """
+)
+
+
+def test_sharded_soak_2d_subprocess():
+    """The §7.7 acceptance soak: ≥48 advances on the mixed 5-algorithm
+    batch for (E,D) ∈ {(1,1),(2,1),(1,2),(2,2)} under 4 forced host
+    devices — every advance parity-checked against the unsharded engine
+    (int rows bit-exact; float rows allclose once E > 1 crosses a psum),
+    exactly one fused dispatch per advance, zero retraces after warmup,
+    and bucketed-admission churn on the largest mesh a jit-cache hit in
+    its lap-stable phase."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SOAK2D_PROG],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == int(os.environ.get("SOAK2D_DEVICES", "4"))
+    assert res["ref_steady"], "unsharded reference chain not steady-state"
+    for key, ok in res["parity"].items():
+        assert ok, f"mesh {key}: rows diverge from the unsharded engine"
+    for key, ok in res["one_dispatch"].items():
+        assert ok, f"mesh {key}: advances not one-fused-dispatch"
+    for key, ok in res["zero_retrace"].items():
+        assert ok, f"mesh {key}: retraced after warmup"
+    assert res["bucketed_steady"], (
+        f"bucketed chain on mesh {res['bucketed_mesh']} fell cold")
+    assert res["bucketed_zero_retrace"], (
+        f"bucketed churn on mesh {res['bucketed_mesh']} retraced after "
+        f"the lap-stable point")
