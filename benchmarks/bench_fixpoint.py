@@ -130,7 +130,7 @@ from repro.serve import window_sweep as _ws
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 PARTS = ("gather_once", "incremental", "multi_tenant", "sharded", "daemon",
-         "mesh2d")
+         "mesh2d", "history")
 
 # Part 4 runs one subprocess per device count: XLA fixes the host device
 # count at backend init, so each D needs a fresh process.  The program
@@ -384,7 +384,8 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         parts=PARTS, dev_counts=(1, 2, 4), shard_steps=12, shard_cands=384,
         daemon_ticks=24, daemon_admits=3,
         mesh2d_meshes=((1, 1), (2, 2), (4, 1), (1, 4), (2, 4)),
-        mesh2d_steps=10, mesh2d_cands=256):
+        mesh2d_steps=10, mesh2d_cands=256, history_steps=48,
+        history_iters=5):
     """Narrow (selective, index-plan) and broader window regimes, mirroring
     the Fig. 9 selectivity axis the re-gather cost scales with.  The default
     fracs are chosen so the union of the W sliding windows still plans
@@ -409,7 +410,8 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         "jax_version": jax.__version__,
     })
 
-    if {"gather_once", "incremental", "multi_tenant", "daemon"} & set(parts):
+    if {"gather_once", "incremental", "multi_tenant", "daemon",
+            "history"} & set(parts):
         g = power_law_temporal_graph(n_v, n_e, seed=4)
         # one TGER serving both regimes: the index path uses the global
         # time-first order regardless of the cutoff; the cutoff only has
@@ -946,6 +948,158 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
                 "best_mesh": best["mesh"],
             }
         report["mesh2d"] = rows6
+
+    # ---- 7: tiered history (DESIGN.md §7.8) --------------------------------
+    # two properties: (a) the compaction hook is FREE on the hot path — a
+    # >= 48-advance chain with a cold store attached runs one fused
+    # dispatch per advance, zero extra retraces, at latency within noise
+    # of the compaction-off chain (the off chain serves FIRST each step,
+    # so legitimate delta-rung traces land on the baseline and the on
+    # chain's trace delta isolates what compaction itself costs); (b) a
+    # time-travel query over a long-evicted window answers from the
+    # compacted chunks (host stitch + one device upload) — timed against
+    # the cold full-history rebuild that re-gathers the window from the
+    # device-resident graph.
+    if "history" in parts:
+        from repro.core.coldstore import ColdStore
+
+        frac7 = width_fracs[0]
+        width7 = max(int(span * frac7), 1)
+        stride7 = max(width7 // 8, 1)
+        steps7 = max(int(history_steps), 8)
+        base7 = t_max - (steps7 + 2) * stride7
+        warm7 = 6
+
+        def mk7(b):
+            return QueryBatch.make([
+                QuerySpec.make("earliest_arrival", (b - width7, b),
+                               sources=src),
+                QuerySpec.make("cc", (b - width7, b)),
+            ])
+
+        cs7 = ColdStore(g, idx)
+        st_on = st_off = None
+        lat_on, lat_off = [], []
+        for k in range(steps7):
+            b = base7 + k * stride7
+
+            def off_step():
+                t0 = time.perf_counter()
+                r, s = serve_batch(g, mk7(b), idx, state=st_off,
+                                   access="index")
+                jax.block_until_ready(r)
+                return r, s, time.perf_counter() - t0
+
+            def on_step():
+                tr0 = _ws.fused_trace_count()
+                _ws._DISPATCH_LOG = log = []
+                t0 = time.perf_counter()
+                r, s = serve_batch(g, mk7(b), idx, state=st_on,
+                                   access="index", coldstore=cs7)
+                jax.block_until_ready(r)
+                dt = time.perf_counter() - t0
+                _ws._DISPATCH_LOG = None
+                return r, s, dt, log, tr0
+
+            # alternate which chain serves first each advance: host-side
+            # scheduling jitter dwarfs any real per-advance delta, and
+            # a fixed order would bias the paired medians
+            if k % 2 == 0:
+                r_off, st_off, dt_off = off_step()
+                r_on, st_on, dt_on, log7, tr0 = on_step()
+            else:
+                r_on, st_on, dt_on, log7, tr0 = on_step()
+                r_off, st_off, dt_off = off_step()
+            # identity BEFORE timing counts: compaction must not change
+            # a single row
+            for a7, b7 in zip(r_on, r_off):
+                a7 = a7 if isinstance(a7, tuple) else (a7,)
+                b7 = b7 if isinstance(b7, tuple) else (b7,)
+                for x7, y7 in zip(a7, b7):
+                    assert (np.asarray(x7) == np.asarray(y7)).all(), (
+                        f"advance {k}: compaction changed results")
+            if k > warm7:
+                assert log7 == ["fused:index"], (
+                    f"advance {k}: compaction left the one-dispatch path "
+                    f"({log7})")
+                if k % 2 == 0:
+                    # OFF served first this advance, so it already paid
+                    # any legitimate delta-rung trace — the ON serve must
+                    # add none
+                    assert _ws.fused_trace_count() == tr0, (
+                        f"advance {k}: compaction caused a retrace")
+                lat_on.append(dt_on)
+                lat_off.append(dt_off)
+        p50_on = float(np.percentile(lat_on, 50))
+        p50_off = float(np.percentile(lat_off, 50))
+        adv_ratio = p50_on / max(p50_off, 1e-12)
+        st7 = cs7.stats()
+        emit(
+            "fixpoint/history/advance_compaction",
+            p50_on,
+            f"steps={steps7};on_p50_us={p50_on*1e6:.0f};"
+            f"off_p50_us={p50_off*1e6:.0f};ratio={adv_ratio:.3f};"
+            f"chunks={st7['n_chunks']};watermark={st7['watermark']};"
+            f"compaction_ratio={st7['compaction_ratio']:.2f}",
+        )
+
+        # (b) time-travel: a window far below the watermark, answered
+        # via the chunk stitch vs the full planner rebuild
+        starts7 = np.asarray(g.t_start)[np.asarray(idx.perm_by_start)]
+        t_wm = int(starts7[min(cs7.watermark, g.n_edges - 1)])
+        hist_lo = int(ts.min()) + span // 8
+        hist7 = (hist_lo, min(hist_lo + width7, t_wm - 1))
+        assert hist7[1] > hist7[0] and hist7[1] < t_wm, (
+            "history soak too short to evict the probe window")
+        hb7 = QueryBatch.make([
+            QuerySpec.make("earliest_arrival", hist7, sources=src),
+            QuerySpec.make("cc", hist7),
+        ])
+
+        def stitched7():
+            r, st = serve_batch(g, hb7, idx, access="index", coldstore=cs7)
+            return r, st
+
+        def rebuild7():
+            r, st = serve_batch(g, hb7, idx, access="index")
+            return r, st
+
+        r_st, st_hist = stitched7()
+        r_rb, st_rb = rebuild7()
+        assert st_hist.plan.tier == "cold" and st_rb.plan.tier == "hot"
+        for a7, b7 in zip(r_st, r_rb):
+            a7 = a7 if isinstance(a7, tuple) else (a7,)
+            b7 = b7 if isinstance(b7, tuple) else (b7,)
+            for x7, y7 in zip(a7, b7):
+                assert (np.asarray(x7) == np.asarray(y7)).all(), (
+                    "time-travel stitch diverges from the rebuild")
+        t_st = time_fn(stitched7, warmup=1, iters=history_iters)
+        t_rb = time_fn(rebuild7, warmup=1, iters=history_iters)
+        emit(
+            "fixpoint/history/time_travel",
+            t_st,
+            f"stitch_us={t_st*1e6:.0f};rebuild_us={t_rb*1e6:.0f};"
+            f"ratio={t_st/max(t_rb,1e-12):.2f};tier=cold;"
+            f"window_frac={frac7}",
+        )
+        report["history"] = {
+            "width_frac": frac7,
+            "advance": {
+                "steps": steps7,
+                "compaction_on_p50_us": p50_on * 1e6,
+                "compaction_off_p50_us": p50_off * 1e6,
+                "ratio": adv_ratio,
+                "one_dispatch": True,
+                "zero_retrace": True,
+            },
+            "time_travel": {
+                "stitch_us": t_st * 1e6,
+                "rebuild_us": t_rb * 1e6,
+                "ratio": t_st / max(t_rb, 1e-12),
+            },
+            "coldstore": {k7: (float(v7) if isinstance(v7, float) else v7)
+                          for k7, v7 in st7.items()},
+        }
 
     with open(path, "w") as f:
         json.dump(report, f, indent=2)

@@ -15,11 +15,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table4,fig7,fig8,fig9,plans,sweep,"
-                         "fixpoint,multitenant,mesh2d,estimator,roofline "
+                         "fixpoint,multitenant,mesh2d,history,estimator,"
+                         "roofline "
                          "(multitenant regenerates only BENCH_fixpoint.json "
                          "parts 3/4 — multi-tenant qps + sharded devices; "
                          "mesh2d regenerates only part 6 — the edge×query "
-                         "2-D mesh scaling table)")
+                         "2-D mesh scaling table; history regenerates only "
+                         "part 7 — tiered-history compaction + time-travel)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -98,6 +100,18 @@ def main() -> None:
                                mesh2d_steps=6, mesh2d_cands=64)
         else:
             bench_fixpoint.run(parts=("mesh2d",))
+
+    if wanted is not None and "history" in wanted:
+        # explicit-only (a full run already covers part 7 via fixpoint):
+        # regenerates the tiered-history section — the compaction-on/off
+        # advance soak and the time-travel stitch vs rebuild timing; the
+        # JSON merge keeps the other parts intact.
+        from benchmarks import bench_fixpoint
+        if args.quick:
+            bench_fixpoint.run(n_v=2_000, n_e=50_000, parts=("history",),
+                               history_steps=48, history_iters=3)
+        else:
+            bench_fixpoint.run(parts=("history",))
 
     if want("estimator"):
         from benchmarks import bench_estimator

@@ -30,6 +30,16 @@ SOAK2D_DEVICES=8 SOAK2D_MESHES="2x4,4x2" SOAK2D_STEPS=12 \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m pytest -x -q tests/test_sharded_serving.py -k soak_2d
 
+# the compaction soak at FULL length (DESIGN.md §7.8): tier-1 above runs
+# tests/test_coldstore.py CI-reduced (COLD_SOAK=16); rerun the acceptance
+# soak at the full 48 advances — one fused dispatch per advance, zero
+# retraces after warmup, rows bit-identical to the compaction-off chain
+# on EVERY advance, cold-store watermark tracking the ring's low
+# watermark.  Runs on both legs of the jax version matrix.
+COLD_SOAK=48 \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest -x -q tests/test_coldstore.py -k compaction_soak
+
 # smoke the serving daemon end to end (DESIGN.md §7.6): a short tick loop
 # with Poisson tenant churn, bucketed async admission and cost-class
 # round-robin — the launch-path wiring the daemon soak in tier-1 above
@@ -48,3 +58,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # BENCH_fixpoint.json at the repo root, including the tiny-budget
 # crossover regime)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint
+
+# smoke the tiered-history part (DESIGN.md §7.8) at reduced sizes: the
+# 48-advance compaction-on/off lockstep (identity asserted before timing,
+# one-dispatch + zero-retrace asserted per advance) and the time-travel
+# stitch vs cold full-history rebuild — merges part 7 into
+# BENCH_fixpoint.json; plus the history-chunks launch wiring.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only history
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.serve --graph --daemon --ticks 6 --tenants 6 \
+  --n-vertices 500 --n-edges 10000 --history-chunks 512

@@ -4,6 +4,7 @@ from repro.core.temporal_graph import TemporalGraph, from_edges  # noqa: F401
 from repro.core.predicates import OrderingPredicateType  # noqa: F401
 from repro.core.tger import TGERIndex, build_tger  # noqa: F401
 from repro.core.selective import CostModel, decide_access  # noqa: F401
+from repro.core.coldstore import ColdChunk, ColdStore  # noqa: F401
 from repro.core.edgemap import (  # noqa: F401
     temporal_edge_map,
     temporal_edge_map_batched,

@@ -300,6 +300,22 @@ def ring_view_for_plan(
             raise ValueError("index access requires a TGER and a positive budget")
         lo, hi = window_positions_host(tger, window)
         capacity = plan.ring_capacity or plan.budget
+        if hi - lo > capacity:
+            # a pinned plan whose rung predates this window: the ring can
+            # only hold positions [lo, lo+C) and the mask would silently
+            # validate slots the gather never filled — refuse instead of
+            # serving a partial view (planner-built plans always cover;
+            # only an explicit stale plan= can get here)
+            raise ValueError(
+                f"window {(int(window[0]), int(window[1]))} spans "
+                f"{hi - lo} time-first positions but the pinned index "
+                f"plan's ring capacity is {capacity}: under this plan the "
+                f"serving horizon is the {capacity} most recent in-window "
+                f"positions (>= position {hi - capacity}), and positions "
+                f"[{lo}, {hi - capacity}) are below it.  Serve historical "
+                f"windows through the cold tier (serve_batch(..., "
+                f"coldstore=ColdStore(g, tger))) or drop the pinned plan "
+                f"so the planner re-rungs the capacity")
         return index_ring_view(g, tger, lo, hi, capacity=capacity), lo, hi, capacity
     if plan.method == "hybrid":
         if tger is None:

@@ -27,10 +27,11 @@ import numpy as np
 from repro.core.hostcache import identity_cache
 from repro.core.selective import AccessDecision, CostModel, decide_access
 from repro.core.temporal_graph import TemporalGraph
-from repro.core.tger import TGERIndex
+from repro.core.tger import TGERIndex, window_positions_host
 
 METHODS = ("scan", "index", "hybrid")
 BACKENDS = ("xla_segment", "pallas_tiled")
+TIERS = ("hot", "cold", "split")
 
 DEFAULT_TILE_V = 512
 DEFAULT_BLOCK_E = 1024
@@ -71,6 +72,13 @@ class AccessPlan:
     # Static, so edge-sharded and local traces can never alias a jit cache
     # entry even when their local avals coincide.
     edge_axis: Optional[str] = dataclasses.field(default=None, metadata=dict(static=True))
+    # History tier of the planned window against a ColdStore's hot horizon
+    # (DESIGN.md §7.8): "hot" (the ring serves it), "cold" (entirely below
+    # the horizon — stitched from compacted chunks) or "split" (cold prefix
+    # + hot suffix in one stitched view).  Static and on the cache key, so
+    # a tier switch can NEVER alias a hot chain's jit cache — it falls
+    # cold without consuming the donated state.
+    tier: str = dataclasses.field(default="hot", metadata=dict(static=True))
 
     @property
     def view_budget(self) -> int:
@@ -81,7 +89,7 @@ class AccessPlan:
 def _cache_key(method: str, backend: str, budget: int, pvb: int,
                exchange: int, tile_v: int, block_e: int,
                n_windows: int = 0, ring_capacity: int = 0,
-               batch_sig: str = "") -> str:
+               batch_sig: str = "", tier: str = "hot") -> str:
     key = f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
     if ring_capacity:
         key += f"/r{ring_capacity}"
@@ -89,6 +97,8 @@ def _cache_key(method: str, backend: str, budget: int, pvb: int,
         key += f"/w{n_windows}"
     if batch_sig:
         key += f"/q{batch_sig}"
+    if tier != "hot":
+        key += f"/T{tier}"
     return key
 
 
@@ -119,6 +129,7 @@ def make_plan(
     n_windows: int = 0,
     ring_capacity: int = 0,
     batch_sig: str = "",
+    tier: str = "hot",
 ) -> AccessPlan:
     """Direct plan constructor (the planner-free path: legacy shims, the
     distributed engine's per-shard plans, tests)."""
@@ -126,6 +137,8 @@ def make_plan(
         raise ValueError(f"method must be one of {METHODS}, got {method!r}")
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if tier not in TIERS:
+        raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
     if layout is not None:
         perm = jnp.asarray(layout.perm)
         block_tile = jnp.asarray(layout.block_tile)
@@ -151,10 +164,11 @@ def make_plan(
         cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
                              int(exchange_budget), int(tile_v), int(block_e),
                              int(n_windows), int(ring_capacity),
-                             str(batch_sig)),
+                             str(batch_sig), str(tier)),
         n_windows=int(n_windows),
         ring_capacity=int(ring_capacity),
         batch_sig=str(batch_sig),
+        tier=str(tier),
     )
 
 
@@ -269,6 +283,8 @@ def plan_query(
     hybrid_floor: int = 16,
     tile_v: int = DEFAULT_TILE_V,
     block_e: int = DEFAULT_BLOCK_E,
+    coldstore=None,
+    tier: Optional[str] = None,
 ) -> AccessPlan:
     """THE planner: one host-side decision per algorithm run (the window is
     constant across rounds, so one plan serves every round).
@@ -292,6 +308,17 @@ def plan_query(
     plan records ``n_windows`` so jitted sweeps specialize per W; the
     auto/forced access decision is made on the union window (the quantity
     the single shared traversal actually pays for).
+
+    ``coldstore`` (a :class:`~repro.core.coldstore.ColdStore`) classifies
+    the union window against the compacted-history horizon (DESIGN.md
+    §7.8): a window at or above the store's watermark plans ``tier="hot"``
+    as before; one entirely below plans ``tier="cold"``, one straddling
+    ``tier="split"`` — both force the index method with the capacity rung
+    taken from the EXACT position span, so the stitched view always
+    covers.  ``tier=`` overrides the classification (the serving engine
+    passes the tier it computed against its own carried ring's horizon).
+    The tier is static on the plan signature: switching tiers can never
+    alias a hot chain's jit cache.
     """
     if access not in ("auto",) + METHODS:
         raise ValueError(f"access must be auto|{'|'.join(METHODS)}, got {access!r}")
@@ -352,9 +379,37 @@ def plan_query(
             for w in member_wins:
                 wdec = decide_access(tger, n_edges, w, model, force="index")
                 budget = max(budget, wdec.budget)
+            # coverage floor: the decision budget is histogram-ESTIMATED
+            # (slack-padded, but an estimate); the exact union position
+            # span is one cached searchsorted pair, so take the max — a
+            # serving-horizon guard downstream may now treat an
+            # under-capacity view as an error, never a silent truncation.
+            p_lo, p_hi = window_positions_host(tger, win)
+            budget = max(budget, rung(max(p_hi - p_lo, 1)))
             # index ring capacity IS the budget rung: the ring holds the
             # same [lo, lo+budget) positional range the cold view gathers.
             ring_capacity = budget
+
+    # ---- history-tier classification (DESIGN.md §7.8) ----------------------
+    if tier is None:
+        tier = "hot"
+        if (coldstore is not None and tger is not None
+                and access in ("auto", "index")):
+            tier = coldstore.classify(win)
+    if tier not in TIERS:
+        raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
+    if tier != "hot":
+        if tger is None:
+            raise ValueError("tier planning requires a TGER index")
+        if access not in ("auto", "index"):
+            raise ValueError(
+                f"tier={tier!r} (below-horizon) windows require the index "
+                f"method — the cold store stitches a classic index ring "
+                f"view; got access={access!r}")
+        p_lo, p_hi = window_positions_host(tger, win)
+        method = "index"
+        budget = max(budget, rung(max(p_hi - p_lo, 16)))
+        ring_capacity = budget
 
     if backend == "pallas_tiled" and method != "scan":
         backend = "xla_segment"  # tile layout is per-graph static: scan only
@@ -367,6 +422,7 @@ def plan_query(
         layout=layout, n_edges=n_edges if layout is not None else 0,
         tile_v=tile_v, block_e=block_e,
         n_windows=n_windows, ring_capacity=ring_capacity,
+        tier=tier,
     )
 
 
@@ -423,7 +479,7 @@ def plan_batch(
         cache_key=_cache_key(
             plan.method, plan.backend, plan.budget, plan.per_vertex_budget,
             plan.exchange_budget, plan.tile_v, plan.block_e, plan.n_windows,
-            plan.ring_capacity, sig),
+            plan.ring_capacity, sig, plan.tier),
     )
 
 
@@ -454,4 +510,5 @@ __all__ = [
     "rung",
     "METHODS",
     "BACKENDS",
+    "TIERS",
 ]

@@ -85,15 +85,19 @@ class QuerySpec:
     sources: Tuple[int, ...] = ()
     params: Tuple[Tuple[str, Any], ...] = ()
     cost_class: Optional[str] = None    # None = derive from the algorithm
+    pinned: bool = False                # window is historical: never re-anchor
 
     @classmethod
     def make(cls, algorithm: str, window, sources=None, cost_class=None,
-             **params) -> "QuerySpec":
+             pinned=False, **params) -> "QuerySpec":
         """Normalizing constructor: scalar/sequence sources, any window
         pair, kwargs as params.  ``cost_class`` overrides the per-algorithm
         default (DEEP_ALGORITHMS -> "deep", else "cheap") — it tags the
         spec for the serving daemon's class-split scheduling and is NOT
-        part of the group key or the batch signature."""
+        part of the group key or the batch signature.  ``pinned=True``
+        marks a time-travel tenant: the daemon must serve its window
+        VERBATIM (through the cold tier when it precedes the hot horizon)
+        and ``tick`` must never re-anchor it to the advancing frontier."""
         if sources is None:
             src: Tuple[int, ...] = ()
         elif np.ndim(sources) == 0:
@@ -110,6 +114,7 @@ class QuerySpec:
             sources=src,
             params=_params_token(params),
             cost_class=None if cost_class is None else str(cost_class),
+            pinned=bool(pinned),
         )
 
     @property

@@ -62,7 +62,13 @@ def run_graph(args) -> None:
     mesh = args.shard_queries
     if args.shard_edges:
         mesh = (args.shard_edges, args.shard_queries or 1)
-    server = GraphBatchServer(g, idx, access="index", mesh=mesh)
+    coldstore = None
+    if args.history_chunks:
+        from repro.core.coldstore import ColdStore
+        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks)
+    server = GraphBatchServer(g, idx, access="index",
+                              mesh=None if coldstore is not None else mesh,
+                              coldstore=coldstore)
     t0 = time.perf_counter()
     for k in range(args.advances):
         server.advance(make_batch(base0 + k * stride))
@@ -75,6 +81,27 @@ def run_graph(args) -> None:
         f"{s.fused_dispatches} fused dispatches) on {server.devices} "
         f"device(s), {dt:.2f}s ({rate:.1f} rows/s)"
     )
+    if coldstore is not None:
+        # time-travel: query a window the sweep evicted long ago — it
+        # serves from the compacted cold tier, not a full-history rebuild
+        from repro.engine import QueryBatch as QB, QuerySpec as QS
+        hist_base = int(ts.min()) + span // 8 + width
+        hist = QB.make([
+            QS.make("earliest_arrival", (hist_base - width, hist_base),
+                    sources=1),
+            QS.make("cc", (hist_base - width, hist_base)),
+        ])
+        t0 = time.perf_counter()
+        server.advance(hist)
+        dt_hist = time.perf_counter() - t0
+        st = coldstore.stats()
+        tier = server.state.plan.tier
+        print(
+            f"history: tier={tier!r} time-travel answered in "
+            f"{1e3 * dt_hist:.1f} ms; cold store {st['n_chunks']} chunks "
+            f"({st['sealed_slots']} slots sealed, watermark "
+            f"{st['watermark']}), compaction {st['compaction_ratio']:.2f}x"
+        )
 
 
 def run_daemon(args) -> None:
@@ -109,7 +136,13 @@ def run_daemon(args) -> None:
     mesh = args.shard_queries
     if args.shard_edges:
         mesh = (args.shard_edges, args.shard_queries or 1)
-    server = GraphBatchServer(g, idx, access="index", mesh=mesh)
+    coldstore = None
+    if args.history_chunks:
+        from repro.core.coldstore import ColdStore
+        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks)
+        mesh = None     # the cold tier's history class is unsharded
+    server = GraphBatchServer(g, idx, access="index", mesh=mesh,
+                              coldstore=coldstore)
     live: list = []
     for i in range(args.tenants):            # the resident base load
         live.append(server.submit(fresh_spec(i)))
@@ -118,6 +151,13 @@ def run_daemon(args) -> None:
     t0 = time.perf_counter()
     for k in range(args.ticks):
         rep = server.tick(t_base + k * stride)
+        if coldstore is not None and k == args.ticks // 2:
+            # mid-run, a pinned time-travel tenant arrives: its window is
+            # fixed in the evicted past, served verbatim via the cold tier
+            hist_lo = int(ts.min()) + span // 8
+            live.append(server.submit(QuerySpec.make(
+                "cc", (hist_lo, hist_lo + width), pinned=True)))
+            n_spawned += 1
         for _ in range(rng.poisson(args.arrival_rate)):
             live.append(server.submit(fresh_spec(n_spawned)))
             n_spawned += 1
@@ -134,6 +174,12 @@ def run_daemon(args) -> None:
         f"{s.admissions} admissions / {s.retirements} retirements, "
         f"{s.rows_served} rows served in {dt:.2f}s"
     )
+    if coldstore is not None:
+        st = coldstore.stats()
+        print(
+            f"cold store: {st['n_chunks']} chunks, watermark "
+            f"{st['watermark']}, compaction {st['compaction_ratio']:.2f}x"
+        )
     print(
         f"per-advance latency: p50 {1e3 * np.percentile(lat, 50):.2f} ms, "
         f"p99 {1e3 * np.percentile(lat, 99):.2f} ms "
@@ -162,6 +208,13 @@ def main():
                     help="also shard the ring's slot axis over E devices "
                          "(forms an (E, D) edge-query mesh with "
                          "--shard-queries; needs E*D devices)")
+    ap.add_argument("--history-chunks", type=int, default=None,
+                    help="attach a cold store compacting evicted ring "
+                         "slots into chunks of N slots; graph mode then "
+                         "answers a time-travel query over an evicted "
+                         "window, daemon mode admits a pinned historical "
+                         "tenant mid-run (disables the mesh: the cold "
+                         "tier is unsharded)")
     ap.add_argument("--daemon", action="store_true",
                     help="graph daemon mode: tick loop with Poisson churn")
     ap.add_argument("--ticks", type=int, default=40)

@@ -12,6 +12,7 @@ from repro.serve.window_sweep import (  # noqa: F401
     sweep_incremental,
     sweep_looped,
 )
+from repro.core.coldstore import ColdStore  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     GraphBatchServer,
     GraphServeStats,

@@ -224,6 +224,13 @@ class GraphBatchServer:
     ladder's own hysteresis rule): a raw ``ceil`` of the decaying EWMA
     would jitter by ±1-2 every tick and flap group capacities across
     bucket rungs, thrashing the very jit cache the ladder pins.
+
+    Tenants submitted with ``pinned=True`` keep their historical window
+    VERBATIM (``tick`` never re-anchors it) and serve every tick as the
+    synthetic ``HISTORY_CLASS`` through the cold tier of the server's
+    ``coldstore`` — unbucketed and unsharded, since a time-travel answer
+    never rides the donated fused chain; the repeat serve of an unchanged
+    pinned window is the noop host-cache path.
     """
 
     #: EWMA smoothing for the per-class admission arrival rate (rows/tick)
@@ -231,9 +238,16 @@ class GraphBatchServer:
     EWMA_ALPHA = 0.5
     HEADROOM_SAFETY = 2.0
 
+    #: the synthetic scheduling class for pinned (time-travel) tenants —
+    #: disjoint from every cost class, served every tick through the cold
+    #: tier (unbucketed, unsharded: historical windows never re-anchor,
+    #: so the repeat serve is the noop host-cache path)
+    HISTORY_CLASS = "history"
+
     def __init__(self, graph, tger=None, *, access: str = "auto",
                  backend: str = "xla_segment", plan=None, mesh=None,
-                 warm_start: bool = False, admission: Optional[str] = None):
+                 warm_start: bool = False, admission: Optional[str] = None,
+                 coldstore=None):
         self.graph = graph
         self.tger = tger
         self.access = access
@@ -242,6 +256,7 @@ class GraphBatchServer:
         self.mesh = mesh
         self.warm_start = warm_start
         self.admission = admission
+        self.coldstore = coldstore
         self.state = None
         self.stats = GraphServeStats()
         self.latencies: List[float] = []    # per class-serve seconds
@@ -251,7 +266,11 @@ class GraphBatchServer:
         self._pending_retire: Deque[int] = deque()
         self._next_tid = 0
         self._class_states: Dict[str, Any] = {}     # cost class -> SweepState
-        self._rr = 0                                # deep-class round-robin
+        self._rr_last: Optional[str] = None         # deep-class round-robin:
+                                                    # NAME last served (a bare
+                                                    # counter into the live
+                                                    # list skips/double-serves
+                                                    # when a class empties)
         self._admit_ewma: Dict[str, float] = {}     # class -> rows/tick EWMA
         self._admit_hr: Dict[str, int] = {}         # class -> sticky headroom
 
@@ -268,7 +287,7 @@ class GraphBatchServer:
                     self.graph, batch, self.tger, state=self.state,
                     access=self.access, backend=self.backend, plan=self.plan,
                     warm_start=self.warm_start, mesh=self.mesh,
-                    admission=self.admission)
+                    admission=self.admission, coldstore=self.coldstore)
             except BaseException:
                 # the donation contract (DESIGN.md §7.3): the fused step
                 # may have consumed the state's buffers before raising, so
@@ -314,6 +333,35 @@ class GraphBatchServer:
         """The LIVE tenant registry (admitted, not retired) — a copy."""
         return dict(self._tenants)
 
+    def _class_of(self, spec: QuerySpec) -> str:
+        """The daemon scheduling class for one spec: pinned time-travel
+        tenants collapse into HISTORY_CLASS regardless of algorithm cost
+        (their serve is a cold-tier solve, not a fused-chain advance);
+        everything else keeps its cost class."""
+        return self.HISTORY_CLASS if spec.pinned else spec.resolved_cost_class
+
+    def _next_deep(self, deep: List[str]) -> str:
+        """Round-robin over the LIVE deep classes by NAME.  A bare counter
+        indexed into the (shrinking) class list skips or double-serves a
+        surviving class for a lap when another class empties mid-rotation;
+        tracking the last-served name and taking its successor in sorted
+        order keeps the rotation fair under churn."""
+        order = sorted(deep)
+        if self._rr_last in order:
+            nxt = order[(order.index(self._rr_last) + 1) % len(order)]
+        else:
+            # the last-served class emptied (or this is the first deep
+            # tick): resume at the first live class AFTER it in sort
+            # order, wrapping — survivors neither skip nor double-serve
+            nxt = order[0]
+            if self._rr_last is not None:
+                for c in order:
+                    if c > self._rr_last:
+                        nxt = c
+                        break
+        self._rr_last = nxt
+        return nxt
+
     def bucket_headroom(self, cls: str) -> int:
         """The arrival-rate bucket headroom for one cost class: the
         extra rows the class's buckets reserve for tenants expected to
@@ -329,14 +377,22 @@ class GraphBatchServer:
         from repro.serve import window_sweep as ws
 
         t0 = time.perf_counter()
+        # the history class serves pinned windows through the cold tier,
+        # which refuses bucketed admission and the query mesh (its results
+        # never ride the donated fused chain) — the hot classes keep both,
+        # and every class carries the coldstore so hot advances compact
+        history = cls == self.HISTORY_CLASS
         with ws.dispatch_log() as log:
             try:
                 res, st = ws.serve_batch(
                     self.graph, sub, self.tger,
                     state=self._class_states.get(cls),
                     access=self.access, backend=self.backend,
-                    plan=self.plan, admission="bucketed", mesh=self.mesh,
-                    bucket_headroom=self.bucket_headroom(cls))
+                    plan=self.plan,
+                    admission=None if history else "bucketed",
+                    mesh=None if history else self.mesh,
+                    bucket_headroom=0 if history else self.bucket_headroom(cls),
+                    coldstore=self.coldstore)
             except BaseException:
                 self._class_states.pop(cls, None)   # moved-from: force-cold
                 raise
@@ -379,7 +435,7 @@ class GraphBatchServer:
             self._tenants[tid] = spec
             admitted.append(tid)
             self.stats.admissions += 1
-            cls = spec.resolved_cost_class
+            cls = self._class_of(spec)
             arrived[cls] = arrived.get(cls, 0) + max(1, len(spec.sources))
         retired: List[int] = []
         while self._pending_retire:
@@ -387,6 +443,16 @@ class GraphBatchServer:
             if self._tenants.pop(tid, None) is not None:
                 retired.append(tid)
                 self.stats.retirements += 1
+        # stale-forecast flush (the empty-class bug): a class whose last
+        # tenant retired must NOT keep its EWMA/headroom entries — a
+        # re-admission after a quiet gap would inherit the old sticky
+        # headroom and oversize its first bucket.  Classes arriving THIS
+        # tick keep theirs (retire-and-replace churn is the learned rate).
+        live_now = {self._class_of(s) for s in self._tenants.values()}
+        for cls in list(self._admit_ewma):
+            if cls not in live_now and cls not in arrived:
+                self._admit_ewma.pop(cls, None)
+                self._admit_hr.pop(cls, None)
         # arrival-rate EWMA (rows/tick) per cost class: decays every tick,
         # spikes on bursts — bucket_headroom() reads it so the class's
         # buckets are already sized when the NEXT burst lands
@@ -410,22 +476,28 @@ class GraphBatchServer:
         classes_served: Tuple[str, ...] = ()
         if self._tenants:
             # the instantaneous batch: every live tenant's window slid to
-            # end at t_now (width preserved from the submitted template)
+            # end at t_now (width preserved from the submitted template) —
+            # EXCEPT pinned tenants, whose historical window is the whole
+            # point: it serves verbatim through the cold tier every tick
             tids_all: List[int] = []
             specs: List[QuerySpec] = []
             for tid, spec in self._tenants.items():
-                width = int(spec.window[1]) - int(spec.window[0])
-                specs.append(dataclasses.replace(
-                    spec, window=(int(t_now) - width, int(t_now))))
+                if spec.pinned:
+                    specs.append(spec)
+                else:
+                    width = int(spec.window[1]) - int(spec.window[0])
+                    specs.append(dataclasses.replace(
+                        spec, window=(int(t_now) - width, int(t_now))))
                 tids_all.append(tid)
             by_cls: Dict[str, List[int]] = {}
             for i, spec in enumerate(specs):
-                by_cls.setdefault(spec.resolved_cost_class, []).append(i)
-            serve_now = [c for c in by_cls if c == DEFAULT_COST_CLASS]
-            deep = [c for c in by_cls if c != DEFAULT_COST_CLASS]
+                by_cls.setdefault(self._class_of(spec), []).append(i)
+            serve_now = [c for c in by_cls
+                         if c in (DEFAULT_COST_CLASS, self.HISTORY_CLASS)]
+            deep = [c for c in by_cls
+                    if c not in (DEFAULT_COST_CLASS, self.HISTORY_CLASS)]
             if deep:
-                serve_now.append(deep[self._rr % len(deep)])
-                self._rr += 1
+                serve_now.append(self._next_deep(deep))
             for cls in serve_now:
                 idxs = by_cls[cls]
                 sub = QueryBatch.make([specs[i] for i in idxs])

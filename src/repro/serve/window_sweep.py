@@ -1022,6 +1022,8 @@ def _advance(
     mesh: Optional[Mesh] = None,
     bucketed: bool = False,
     bucket_headroom: int = 0,
+    coldstore=None,
+    tier: str = "hot",
 ):
     """The incremental advance shared by ``serve_batch`` (multi-tenant) and
     ``sweep_incremental`` (single-tenant wrapper): match every group's rows
@@ -1083,8 +1085,27 @@ def _advance(
             p = prev_plan
         if p is None:
             p = plan_builder()
-        _note("cold:view")
-        edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
+        if tier != "hot":
+            # tiered rebuild (DESIGN.md §7.8): the view is stitched
+            # host-side from the cold store's compacted chunks — plus the
+            # host-mirror gather for the pending tail and a split window's
+            # hot suffix — in EXACT index-ring slot order, so every group
+            # solve below is bit-identical to a cold index build over the
+            # same plan.  The carried hot ring (if any) is never consumed.
+            _note("cold:stitch")
+            capacity = p.ring_capacity or p.budget
+            fields_np, mask_np, lo, hi = coldstore.ring_stitch(
+                union, capacity)
+            edges = EdgeView(
+                *(jnp.asarray(a) for a in fields_np), jnp.asarray(mask_np))
+        else:
+            _note("cold:view")
+            edges, lo, hi, capacity = ring_view_for_plan(g, tger, union, p)
+            if coldstore is not None and p.method == "index" and lo > 0:
+                # everything below the fresh ring's low watermark is
+                # history: seal it into the cold store (host-side, off the
+                # dispatch path — the first note backfills from position 0)
+                coldstore.note_eviction(lo)
         if mesh is not None and p.method != "scan":
             # place the ring ONCE at the cold build — replicated (1-D) or
             # edge-sharded (2-D): every later fused input/output keeps the
@@ -1170,6 +1191,13 @@ def _advance(
             p, state.edges, state.lo, state.hi, state.capacity, results,
             "reorder", 0, False,
             [jnp.int32(-1)] * len(groups))
+
+    if tier != "hot" or p.tier != "hot":
+        # tier serves never delta-advance (historical windows do not
+        # slide) and a tier switch must never consume the donated hot
+        # state: the tier rides the plan signature, so fall cold — the
+        # previous plan stays reusable only within its own tier
+        return cold(prev_plan=p if p.tier == tier else None)
 
     # ---- build the fused schedule -----------------------------------------
     def build_schedule():
@@ -1389,6 +1417,13 @@ def _advance(
             np.asarray([state.lo, lo_new, hi_new], np.int32),
             method=p.method, n_vertices=g.n_vertices, capacity=C,
             delta_budget=delta_budget, schedule=schedule, mesh=mesh)
+        if coldstore is not None and p.method == "index":
+            # compaction hook (§7.8): strictly AFTER the donated step has
+            # returned — the positions this slide evicted
+            # ([state.lo, lo_new)) seal host-side from the store's own
+            # mirrors, so the fused dispatch path gains zero device work
+            # and zero retraces
+            coldstore.note_eviction(lo_new)
         return results, freeze(
             p, edges, lo_new, hi_new, C, results, "delta", total_new,
             any_warm, rounds, n_unique=n_unique, last_schedule=schedule)
@@ -1405,8 +1440,37 @@ _SERVE_COMBOS = (
     "tuple | jax.sharding.Mesh; admission: None | 'bucketed' (composes "
     "with ANY mesh shape); warm_start=True only with admission=None; "
     "edge-sharded meshes (E > 1) require the index access method (a TGER "
-    "index and access='auto'|'index' / an index plan=)"
+    "index and access='auto'|'index' / an index plan=); coldstore= "
+    "(tiered history, DESIGN.md §7.8) requires a TGER, and a below-"
+    "horizon (cold/split tier) batch additionally requires admission="
+    "None, warm_start=False, mesh=None"
 )
+
+
+def _history_tier(tger, union, state, coldstore, plan_arg, access) -> str:
+    """Classify the batch union window against the cold store's hot
+    horizon (DESIGN.md §7.8).  Returns ``"hot"`` when tiering is
+    disengaged: no store, or a scan/hybrid access path — a scan view holds
+    the full horizon (nothing is ever evicted) and the hybrid ring
+    re-rungs on coverage lapse, so only index plans have a below-horizon
+    failure mode to route.  The carried chain's OWN ring low watermark is
+    the authoritative horizon when a compatible hot state is passed: a
+    forward-sliding chain stays hot even after another chain pushed the
+    store's global watermark past its lo."""
+    if coldstore is None:
+        return "hot"
+    if tger is None:
+        raise ValueError(
+            "coldstore serving requires a TGER index (the time-first "
+            "permutation is the compaction domain); " + _SERVE_COMBOS)
+    if access in ("scan", "hybrid") or (plan_arg is not None
+                                        and plan_arg.method != "index"):
+        return "hot"
+    hot_lo = coldstore.watermark
+    if (state is not None and state.lo >= 0
+            and state.plan.method == "index" and state.plan.tier == "hot"):
+        hot_lo = state.lo
+    return coldstore.classify(union, hot_lo=hot_lo)
 
 
 def serve_batch(
@@ -1422,6 +1486,7 @@ def serve_batch(
     mesh: Optional[Any] = None,
     admission: Optional[str] = None,
     bucket_headroom: int = 0,
+    coldstore=None,
 ):
     """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
     multi-tenant entry point (DESIGN.md §7.4).
@@ -1477,6 +1542,26 @@ def serve_batch(
     ``ValueError`` BEFORE any state is consumed (the donation contract:
     a carried state survives the error path untouched).
 
+    ``coldstore`` (a :class:`~repro.core.coldstore.ColdStore`) opts into
+    TIERED HISTORY (DESIGN.md §7.8).  Hot serving is unchanged except
+    that every index advance/cold build seals the positions leaving the
+    ring into the store — host-side, strictly after the donated step
+    returns, so the steady state stays one fused dispatch with zero extra
+    retraces.  A batch whose union window falls below the hot horizon
+    (the carried ring's low watermark, or the store's global watermark
+    when no hot state is carried) routes to the COLD TIER instead of
+    consuming the hot chain: the window's ring view is stitched host-side
+    from the compacted chunks (tier ``"cold"``, or ``"split"`` when the
+    window straddles the horizon — cold prefix decoded, hot suffix
+    mirror-gathered) and solved through the normal group machinery,
+    row-bit-identical to a cold full-history index solve under the same
+    plan.  The tier rides the plan signature, so tier switches fall cold
+    without consuming donated state; repeated historical queries hit the
+    noop path.  The cold tier supports only ``admission=None``,
+    ``warm_start=False``, ``mesh=None`` (checked BEFORE any state is
+    consumed); scan/hybrid access paths ignore the store (a scan view is
+    never evicted; the hybrid ring re-rungs).
+
     A state from a different graph or an incompatible explicit ``plan``
     falls back to a cold serve (the mismatched state is NOT consumed).
     ``warm_start=True`` opts into the per-algorithm containment warm
@@ -1531,6 +1616,20 @@ def serve_batch(
         or (plan is not None and plan.cache_key != state.plan.cache_key)
     ):
         state = None
+    tier = _history_tier(tger, batch.union(), state, coldstore, plan, access)
+    if tier != "hot":
+        # every check fires BEFORE the carried state can be consumed
+        if bucketed or warm_start or mesh is not None:
+            raise ValueError(
+                f"a below-horizon batch (tier={tier!r}) serves through "
+                f"the cold tier, which supports only admission=None, "
+                f"warm_start=False, mesh=None; " + _SERVE_COMBOS)
+        access = "index"
+        if state is not None and state.plan.tier != tier:
+            # a tier switch never consumes the carried state: the cold
+            # rebuild below starts fresh (the old chain's donated buffers
+            # stay alive with the caller if they kept a reference)
+            state = None
     order = None
     if bucketed and state is not None:
         # sticky group ordering: resident groups keep the carried state's
@@ -1552,11 +1651,13 @@ def serve_batch(
         plan_builder=lambda: plan_batch(
             g, tger, batch, access=access, backend=backend,
             shards=None if mesh is None else _mesh_shape(mesh),
-            bucketed=bucketed),
+            bucketed=bucketed, tier=tier),
         warm_start=warm_start,
         mesh=mesh,
         bucketed=bucketed,
         bucket_headroom=bucket_headroom,
+        coldstore=coldstore,
+        tier=tier,
     )
     if order is not None:
         inv = [0] * len(order)
@@ -1578,6 +1679,7 @@ def sweep_incremental(
     backend: str = "xla_segment",
     plan: Optional[AccessPlan] = None,
     warm_start: bool = False,
+    coldstore=None,
     **kwargs,
 ):
     """Serve ``windows`` reusing the previous sweep's :class:`SweepState` —
@@ -1634,12 +1736,26 @@ def sweep_incremental(
         and all(s == src for s in state.group_sources[0])
         and (plan is None or plan.cache_key == state.plan.cache_key)
     )
+    state = state if reusable else None
+    union = (int(windows[:, 0].min()), int(windows[:, 1].max()))
+    tier = _history_tier(tger, union, state, coldstore, plan, access)
+    if tier != "hot":
+        if warm_start:
+            raise ValueError(
+                f"a below-horizon sweep (tier={tier!r}) serves through "
+                f"the cold tier, which refuses warm_start; " + _SERVE_COMBOS)
+        access = "index"
+        if state is not None and state.plan.tier != tier:
+            state = None    # tier switches never consume the carried state
     results, new_state = _advance(
-        g, tger, groups, state if reusable else None,
+        g, tger, groups, state,
         plan_arg=plan,
         plan_builder=lambda: plan_query(
-            g, tger, windows=windows, access=access, backend=backend),
+            g, tger, windows=windows, access=access, backend=backend,
+            tier=tier),
         warm_start=warm_start,
+        coldstore=coldstore,
+        tier=tier,
     )
     return results[0], new_state
 

@@ -1,0 +1,445 @@
+"""Tiered-history tests (DESIGN.md §7.8): the compacted cold store, the
+hot/cold/split tier classifier on the plan signature, and time-travel
+serving through ``serve_batch`` / the daemon's pinned history class.
+
+Five layers:
+
+1. **ColdStore unit behavior** — eviction notes seal fixed-span chunks
+   with ``[t_lo, t_hi)`` fences, delta decode is bit-exact against the
+   host mirrors, the chunk directory answers window lookups, and
+   ``ring_stitch`` reproduces ``index_ring_view`` bit-identically
+   (slot order, clamped payload, mask).
+2. **Time-travel correctness** (the PR's acceptance property) — a fully
+   evicted window AND a split hot/cold window are row-bit-identical to a
+   cold full-history solve for ALL SEVEN algorithms on index plans.
+3. **Horizon bugfix** — a pinned under-capacity plan on an out-of-horizon
+   window raises a ``ValueError`` naming the available horizon BEFORE the
+   carried state is consumed (the old cold-fallback gate silently rebuilt
+   a partial view); the state stays advanceable afterwards.
+4. **The compaction soak** — ``COLD_SOAK`` advances with compaction
+   enabled: ONE fused dispatch per advance, ZERO retraces after warmup,
+   results bit-identical to the compaction-off chain every advance, and
+   the cold store's watermark tracks the ring's low watermark exactly.
+5. **Daemon integration** — a ``pinned=True`` tenant serves through the
+   history class verbatim (never re-anchored), bit-identical to a cold
+   solve, and its repeat tick is the noop host-cache path.  (The daemon's
+   round-robin and admission-forecast churn bugfixes are regression-tested
+   in ``tests/test_daemon.py``.)
+
+``COLD_SOAK`` defaults to 48 advances and drops to 16 under CI (the
+``CI`` env var; ``scripts/ci.sh`` exports it) to bound tier-1 wall clock.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.coldstore import ColdStore
+from repro.core.edgemap import index_ring_view, ring_view_for_plan
+from repro.core.tger import build_tger, window_positions_host
+from repro.data.generators import power_law_temporal_graph
+from repro.engine import QueryBatch, QuerySpec, plan_query
+from repro.serve import GraphBatchServer, serve_batch
+from repro.serve import window_sweep as ws
+
+COLD_SOAK = int(os.environ.get(
+    "COLD_SOAK", "16" if os.environ.get("CI") else "48"))
+
+_CASE = {}
+
+
+def _case():
+    if not _CASE:
+        g = power_law_temporal_graph(200, 5000, seed=8)
+        idx = build_tger(g, degree_cutoff=48)
+        ts = np.asarray(g.t_start)
+        _CASE["v"] = (
+            g, idx, int(ts.min()), int(np.asarray(g.t_end).max()),
+        )
+    return _CASE["v"]
+
+
+_SEVEN = ("earliest_arrival", "reachability", "bfs", "cc", "pagerank",
+          "kcore", "betweenness")
+_FLOAT_ALGS = ("pagerank", "betweenness")
+
+
+def _seven_specs(window):
+    out = []
+    for i, alg in enumerate(_SEVEN):
+        if alg == "cc":
+            out.append(QuerySpec.make(alg, window))
+        elif alg == "kcore":
+            out.append(QuerySpec.make(alg, window, k=2))
+        elif alg == "pagerank":
+            out.append(QuerySpec.make(alg, window, n_iters=6))
+        elif alg == "betweenness":
+            out.append(QuerySpec.make(alg, window, sources=(3, 11)))
+        else:
+            out.append(QuerySpec.make(alg, window, sources=(7 * i + 1) % 200))
+    return out
+
+
+def _assert_identical(got, want, ctx):
+    """Row-BIT-identical (floats included): the tiered path must replay
+    the exact same solve, not an approximation of it."""
+    got = got if isinstance(got, tuple) else (got,)
+    want = want if isinstance(want, tuple) else (want,)
+    assert len(got) == len(want), ctx
+    for oi, (a, b) in enumerate(zip(got, want)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape, f"{ctx} out {oi}"
+        assert (a == b).all(), f"{ctx} output {oi} differs"
+
+
+def _span(g):
+    ts = np.asarray(g.t_start)
+    return int(ts.min()), int(ts.max() - ts.min())
+
+
+def _hot_chain(g, idx, cs, *, n=10, width=None, stride=None):
+    """Advance a hot index chain far enough that compaction has sealed
+    chunks; returns (state, last_base, width, stride)."""
+    t_min, span = _span(g)
+    width = width or max(span // 40, 1)
+    stride = stride or max(span // 200, 1)
+    base = t_min + span // 2
+    state = None
+    for k in range(n):
+        batch = QueryBatch.make(
+            [QuerySpec.make("earliest_arrival",
+                            (base + k * stride - width, base + k * stride),
+                            sources=3)])
+        _, state = serve_batch(g, batch, idx, state=state, access="index",
+                               coldstore=cs)
+    return state, base + (n - 1) * stride, width, stride
+
+
+# ---------------------------------------------------------------------------
+# 1. ColdStore unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_seals_chunks_with_time_fences():
+    g, idx, *_ = _case()
+    cs = ColdStore(g, idx, chunk_slots=128)
+    assert cs.watermark == 0 and cs.n_chunks == 0
+    added = cs.note_eviction(300)
+    assert added == 300 and cs.n_chunks == 2         # 2 * 128 <= 300
+    assert cs.watermark == 300
+    assert cs.pending_slots == 300 - 2 * 128
+    starts = np.asarray(g.t_start)[np.asarray(idx.perm_by_start)]
+    for ci, ch in enumerate(cs.chunks):
+        assert (ch.pos_lo, ch.pos_hi) == (ci * 128, (ci + 1) * 128)
+        seg = starts[ch.pos_lo:ch.pos_hi]
+        assert ch.t_lo == int(seg[0])
+        assert ch.t_hi > int(seg[-1])                # fence is exclusive
+    # monotone: a stale (smaller) eviction note is a no-op
+    assert cs.note_eviction(200) == 0
+    assert cs.watermark == 300
+
+
+def test_chunk_decode_is_bit_exact():
+    g, idx, *_ = _case()
+    cs = ColdStore(g, idx, chunk_slots=256)
+    cs.note_eviction(1024)
+    perm = np.asarray(idx.perm_by_start)
+    for ch in cs.chunks:
+        eids = perm[ch.pos_lo:ch.pos_hi]
+        src, dst, t_start, t_end, weight = ch.decode()
+        np.testing.assert_array_equal(src, np.asarray(g.src)[eids])
+        np.testing.assert_array_equal(dst, np.asarray(g.dst)[eids])
+        np.testing.assert_array_equal(t_start, np.asarray(g.t_start)[eids])
+        np.testing.assert_array_equal(t_end, np.asarray(g.t_end)[eids])
+        np.testing.assert_array_equal(weight, np.asarray(g.weight)[eids])
+
+
+def test_directory_lookup_by_fences():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    cs = ColdStore(g, idx, chunk_slots=128)
+    cs.note_eviction(1024)
+    # a window inside the sealed region touches exactly the fenced chunks
+    win = (t_min + span // 16, t_min + span // 8)
+    touched = {ch.pos_lo for ch in cs.chunks_for(win)}
+    for ch in cs.chunks:
+        overlaps = ch.t_lo < win[1] and ch.t_hi > win[0]
+        assert (ch.pos_lo in touched) == overlaps
+    # a window above every fence touches none
+    assert cs.chunks_for((t_max + 1, t_max + 10)) == []
+
+
+def test_ring_stitch_matches_index_ring_view_bitwise():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    cs = ColdStore(g, idx, chunk_slots=256)
+    cs.note_eviction(900)                       # sealed chunks + pending tail
+    for frac in (16, 8, 5):
+        win = (t_min + span // frac, t_min + span // frac + span // 10)
+        p_lo, p_hi = window_positions_host(idx, win)
+        cap = 1 << max(int(np.ceil(np.log2(max(p_hi - p_lo, 1)))), 4)
+        ref = index_ring_view(g, idx, p_lo, p_hi, capacity=cap)
+        fields, mask, lo, hi = cs.ring_stitch(win, cap)
+        assert (lo, hi) == (p_lo, p_hi)
+        for name, a in zip(("src", "dst", "t_start", "t_end", "weight"),
+                           fields):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(getattr(ref, name)),
+                err_msg=f"{name} differs at 1/{frac}")
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      np.asarray(ref.mask))
+    with pytest.raises(ValueError, match="capacity"):
+        cs.ring_stitch((t_min, t_max + 1), 16)  # span cannot fit
+
+
+def test_classify_tiers():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    cs = ColdStore(g, idx, chunk_slots=256)
+    cs.note_eviction(1000)
+    starts = np.asarray(g.t_start)[np.asarray(idx.perm_by_start)]
+    t_wm = int(starts[1000])
+    assert cs.classify((t_wm + 1, t_max)) == "hot"
+    assert cs.classify((t_min, t_wm - span // 50)) == "cold"
+    assert cs.classify((t_min, t_max)) == "split"
+    # hot_lo override: a chain whose own ring still holds older positions
+    assert cs.classify((t_min + span // 4, t_max), hot_lo=0) == "hot"
+
+
+# ---------------------------------------------------------------------------
+# 2. time-travel correctness: seven algorithms, cold and split windows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["cold", "split"])
+def test_time_travel_bit_identical_all_seven(kind):
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    cs = ColdStore(g, idx, chunk_slots=256)
+    state, *_ = _hot_chain(g, idx, cs)
+    assert cs.watermark == state.lo > 0
+    starts = np.asarray(g.t_start)[np.asarray(idx.perm_by_start)]
+    t_wm = int(starts[cs.watermark])
+    if kind == "cold":
+        win = (t_min + span // 16, min(t_wm - 1, t_min + span // 4))
+    else:
+        win = (t_min + span // 4, t_wm + span // 40)
+    batch = QueryBatch.make(_seven_specs(win))
+    res, hstate = serve_batch(g, batch, idx, access="index", coldstore=cs)
+    assert hstate.plan.tier == kind
+    assert hstate.plan.method == "index"
+    # the reference: the SAME tier plan served WITHOUT a cold store — a
+    # cold full-history build straight off the device-resident graph
+    ref, _ = serve_batch(g, batch, idx, plan=hstate.plan)
+    for gi, key in enumerate(batch.groups()):
+        _assert_identical(res[gi], ref[gi], f"{kind}:{key[0]}")
+    # and the repeat serve is the host-cache noop path
+    res2, hstate2 = serve_batch(g, batch, idx, state=hstate, access="index",
+                                coldstore=cs)
+    assert hstate2.last_advance == "noop"
+    for gi, key in enumerate(batch.groups()):
+        _assert_identical(res2[gi], ref[gi], f"{kind}:noop:{key[0]}")
+
+
+def test_tier_switch_never_consumes_hot_state():
+    """Serving a historical window between hot advances must not consume
+    the hot chain's donated state: the next hot advance is still a delta."""
+    g, idx, *_ = _case()
+    cs = ColdStore(g, idx, chunk_slots=256)
+    state, last_base, width, stride = _hot_chain(g, idx, cs)
+    t_min, span = _span(g)
+    hist = QueryBatch.make(
+        [QuerySpec.make("cc", (t_min + span // 16, t_min + span // 8))])
+    _, hstate = serve_batch(g, hist, idx, access="index", coldstore=cs)
+    assert hstate.plan.tier in ("cold", "split")
+    nxt = QueryBatch.make(
+        [QuerySpec.make("earliest_arrival",
+                        (last_base + stride - width, last_base + stride),
+                        sources=3)])
+    _, state = serve_batch(g, nxt, idx, state=state, access="index",
+                           coldstore=cs)
+    assert state.last_advance == "delta"
+
+
+# ---------------------------------------------------------------------------
+# 3. the horizon bugfix: error BEFORE the carried state is consumed
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_horizon_pinned_plan_raises_naming_horizon():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    base = t_min + span // 2
+    width = max(span // 40, 1)
+    batch = QueryBatch.make(
+        [QuerySpec.make("earliest_arrival", (base - width, base),
+                        sources=3)])
+    plan = plan_query(g, idx, windows=[(base - width, base)], access="index")
+    hist = (t_min, t_min + span // 2)           # far wider than the plan
+    p_lo, p_hi = window_positions_host(idx, hist)
+    cap = plan.ring_capacity or plan.budget
+    if p_hi - p_lo <= cap:
+        pytest.skip("case graph too small to exceed the pinned capacity")
+    with pytest.raises(ValueError, match="horizon"):
+        ring_view_for_plan(g, idx, hist, plan)
+
+
+def test_out_of_horizon_error_leaves_state_advanceable():
+    """The old window_sweep cold-fallback gate silently rebuilt a PARTIAL
+    view for a window below the pinned plan's horizon.  Now it raises
+    before touching the carried state — which must stay advanceable."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 1)
+    stride = max(span // 200, 1)
+    base = t_min + span // 2
+
+    def mk(b):
+        return QueryBatch.make(
+            [QuerySpec.make("earliest_arrival", (b - width, b), sources=3)])
+
+    plan = plan_query(g, idx, windows=[(base - width, base)], access="index")
+    state = None
+    for k in range(3):
+        _, state = serve_batch(g, mk(base + k * stride), idx, state=state,
+                               plan=plan)
+    assert state.last_advance == "delta"
+    hist = (t_min, t_min + span // 2)
+    p_lo, p_hi = window_positions_host(idx, hist)
+    if p_hi - p_lo <= (plan.ring_capacity or plan.budget):
+        pytest.skip("case graph too small to exceed the pinned capacity")
+    with pytest.raises(ValueError, match="horizon"):
+        serve_batch(g, QueryBatch.make(
+            [QuerySpec.make("earliest_arrival", hist, sources=3)]),
+            idx, state=state, plan=plan)
+    # the raise happened before the donated buffers were consumed: the
+    # SAME state object advances warm
+    _, state = serve_batch(g, mk(base + 3 * stride), idx, state=state,
+                           plan=plan)
+    assert state.last_advance == "delta"
+
+
+def test_unplanned_history_without_coldstore_still_serves():
+    """WITHOUT a pinned plan there is no horizon to violate: the planner
+    rebuilds a covering view (tier stays "hot" with no cold store) — the
+    legacy full-rebuild path must keep working."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    win = (t_min + span // 16, t_min + span // 8)
+    batch = QueryBatch.make([QuerySpec.make("cc", win)])
+    res, st = serve_batch(g, batch, idx, access="index")
+    assert st.plan.tier == "hot"
+    ref, _ = serve_batch(g, batch, idx, plan=st.plan)
+    _assert_identical(res[0], ref[0], "legacy-history")
+
+
+def test_cold_tier_refuses_fused_only_combos_before_state():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    cs = ColdStore(g, idx, chunk_slots=256)
+    state, *_ = _hot_chain(g, idx, cs)
+    hist = QueryBatch.make(
+        [QuerySpec.make("cc", (t_min + span // 16, t_min + span // 8))])
+    for kw in (dict(admission="bucketed"), dict(warm_start=True),
+               dict(mesh=1)):
+        with pytest.raises(ValueError):
+            serve_batch(g, hist, idx, access="index", coldstore=cs, **kw)
+    # none of those raises consumed the hot chain's donated state
+    t_min2, span2 = _span(g)
+    width = max(span2 // 40, 1)
+    stride = max(span2 // 200, 1)
+    base = t_min2 + span2 // 2 + 9 * stride
+    nxt = QueryBatch.make(
+        [QuerySpec.make("earliest_arrival",
+                        (base + stride - width, base + stride), sources=3)])
+    _, state = serve_batch(g, nxt, idx, state=state, access="index",
+                           coldstore=cs)
+    assert state.last_advance == "delta"
+
+
+# ---------------------------------------------------------------------------
+# 4. the compaction soak (acceptance property)
+# ---------------------------------------------------------------------------
+
+
+def test_compaction_soak_one_dispatch_zero_retrace_parity():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 1)
+    stride = max(span // (COLD_SOAK * 4), 1)
+    base = t_min + span // 3
+    cs = ColdStore(g, idx, chunk_slots=256)
+
+    def mk(b):
+        return QueryBatch.make([
+            QuerySpec.make("earliest_arrival", (b - width, b), sources=3),
+            QuerySpec.make("cc", (b - width, b)),
+        ])
+
+    state_on = state_off = None
+    warmup = 2
+    for k in range(COLD_SOAK):
+        b = base + k * stride
+        # the compaction-OFF chain serves FIRST: any legitimate fused
+        # retrace (a delta-size rung change as the window slides) is paid
+        # by the baseline, so the ON chain's trace delta isolates what
+        # compaction itself costs — which must be NOTHING
+        with ws.dispatch_log() as log_off:
+            res_off, state_off = serve_batch(
+                g, mk(b), idx, state=state_off, access="index")
+        traces0 = ws.fused_trace_count()
+        with ws.dispatch_log() as log_on:
+            res_on, state_on = serve_batch(
+                g, mk(b), idx, state=state_on, access="index", coldstore=cs)
+        if k >= warmup:
+            assert log_on == ["fused:index"], (
+                f"advance {k}: compaction left the one-dispatch path "
+                f"({log_on})")
+            assert log_on == log_off
+            assert ws.fused_trace_count() == traces0, (
+                f"advance {k}: compaction caused a retrace")
+        for gi in range(2):
+            _assert_identical(res_on[gi], res_off[gi], f"advance {k}")
+        # the cold store's coverage tracks the ring's low watermark
+        assert cs.watermark == max(state_on.lo, 0)
+    assert cs.n_chunks > 0, "the soak never sealed a chunk"
+    st = cs.stats()
+    assert st["compaction_ratio"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# 5. daemon integration: the pinned history class
+# ---------------------------------------------------------------------------
+
+
+def test_daemon_pinned_tenant_serves_history_verbatim():
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 40, 1)
+    stride = max(span // 200, 1)
+    base = t_min + span // 2
+    cs = ColdStore(g, idx, chunk_slots=256)
+    server = GraphBatchServer(g, idx, access="index", coldstore=cs)
+    server.submit(QuerySpec.make("earliest_arrival", (0, width), sources=3))
+    for k in range(10):
+        server.tick(base + k * stride)
+    assert cs.watermark > 0
+    hist_win = (t_min + span // 16, t_min + span // 16 + width)
+    t_h = server.submit(QuerySpec.make("cc", hist_win, pinned=True))
+    rep = server.tick(base + 10 * stride)
+    assert GraphBatchServer.HISTORY_CLASS in rep.classes_served
+    assert t_h in rep.results
+    hstate = server._class_states[GraphBatchServer.HISTORY_CLASS]
+    assert hstate.plan.tier in ("cold", "split")
+    ref, _ = serve_batch(
+        g, QueryBatch.make([QuerySpec.make("cc", hist_win)]), idx,
+        plan=hstate.plan)
+    _assert_identical(rep.results[t_h], np.asarray(ref[0]), "daemon-hist")
+    # next tick: the pinned window did NOT re-anchor — noop repeat,
+    # identical answer
+    rep2 = server.tick(base + 11 * stride)
+    hstate2 = server._class_states[GraphBatchServer.HISTORY_CLASS]
+    assert hstate2.last_advance == "noop"
+    _assert_identical(rep2.results[t_h], np.asarray(ref[0]), "daemon-noop")
+
+

@@ -477,6 +477,59 @@ def test_tick_round_robins_multiple_deep_classes():
     assert set(seen) == {"deep", "slow-bfs"} and seen[:2] * 2 == seen
 
 
+def test_rr_survives_deep_class_retirement_mid_rotation():
+    """The round-robin churn bugfix: retiring every tenant of a deep class
+    mid-rotation must not skip or double-serve a surviving class (the old
+    bare counter indexed into the SHRUNK class list and replayed a lap).
+    Classes a, b, c: after serving a then b, retiring a means the next
+    deep serve is c — then the rotation wraps fairly over the survivors."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 10, 4)
+    base = t_min + span // 2
+    server = GraphBatchServer(g, idx, access="index")
+    tids = {c: server.submit(QuerySpec.make(
+        "bfs", (0, width), sources=1, cost_class=c)) for c in "abc"}
+    served = []
+    for k in range(2):
+        served += list(server.tick(base + k).classes_served)
+    assert served == ["a", "b"]
+    server.retire(tids["a"])
+    rep = server.tick(base + 2)
+    assert list(rep.classes_served) == ["c"], (
+        f"retired-class rotation double-served {rep.classes_served}")
+    assert list(server.tick(base + 3).classes_served) == ["b"]
+    assert list(server.tick(base + 4).classes_served) == ["c"]
+
+
+def test_admission_forecast_clears_when_class_empties():
+    """The stale-forecast bugfix: ``_admit_ewma``/``_admit_hr`` entries
+    must not survive a class's last retirement — a tenant re-admitted
+    after a quiet gap starts from baseline headroom instead of inheriting
+    the old burst's inflated sticky forecast (which would oversize its
+    first bucket)."""
+    g, idx, t_min, t_max = _case()
+    span = t_max - t_min
+    width = max(span // 20, 4)
+    base = t_min + span // 2
+    server = GraphBatchServer(g, idx, access="index")
+    burst = [server.submit(_spec("earliest_arrival", i, (0, width)))
+             for i in range(6)]
+    server.tick(base)
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) >= 6
+    for t in burst:
+        server.retire(t)
+    server.tick(base + 1)                       # the class empties HERE
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) == 0
+    assert DEFAULT_COST_CLASS not in server._admit_ewma
+    # quiet gap, then one tenant re-admits: baseline headroom, not the
+    # burst-era forecast
+    server.tick(base + 2)
+    server.submit(_spec("earliest_arrival", 0, (0, width)))
+    server.tick(base + 3)
+    assert server.bucket_headroom(DEFAULT_COST_CLASS) <= 2
+
+
 def test_arrival_rate_headroom_absorbs_forecasted_bursts():
     """DESIGN.md §7.7 arrival-rate bucket sizing: a SURPRISE burst of B
     tenants lands with at most ONE rebucket (admission is batched at the

@@ -684,3 +684,126 @@ def test_sharded_soak_2d_subprocess():
     assert res["bucketed_zero_retrace"], (
         f"bucketed churn on mesh {res['bucketed_mesh']} retraced after "
         f"the lap-stable point")
+
+
+# ---------------------------------------------------------------------------
+# 5. ring wrap-around at EDGE-SHARD boundaries (subprocess, forced host
+#    devices).  A synthetic graph with t_start = arange(E) makes positions
+#    == times, so window arithmetic drives the entering-slot ranges onto
+#    exact shard base slots (global slot ≡ 0 mod C/E) and across two
+#    shards — the two scatter alignments the 2-D mesh must survive.
+# ---------------------------------------------------------------------------
+
+_BOUNDARY_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys, json
+    sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.core.temporal_graph import from_edges
+    from repro.core.tger import build_tger
+    from repro.engine import QueryBatch, QuerySpec
+    from repro.serve import serve_batch
+    from repro.serve import window_sweep as ws
+
+    N_E, N_V = 4096, 64
+    rng = np.random.default_rng(3)
+    g = from_edges(rng.integers(0, N_V, N_E), rng.integers(0, N_V, N_E),
+                   np.arange(N_E), n_vertices=N_V, rng=rng)
+    idx = build_tger(g, degree_cutoff=16)
+    # positions ARE times: perm_by_start inverts the (src, t) lexsort
+    assert (np.sort(np.asarray(g.t_start)[np.asarray(idx.perm_by_start)])
+            == np.arange(N_E)).all()
+
+    def mk(lo, width):
+        return QueryBatch.make([
+            QuerySpec.make("earliest_arrival", (lo, lo + width), sources=3),
+            QuerySpec.make("cc", (lo, lo + width)),
+        ])
+
+    def snap(results):
+        return [tuple(np.asarray(x)
+                      for x in (r if isinstance(r, tuple) else (r,)))
+                for r in results]
+
+    def chain(mesh, width, stride, steps):
+        state, rows, events = None, [], []
+        for k in range(steps):
+            ws._DISPATCH_LOG = log = []
+            res, state = serve_batch(g, mk(k * stride, width), idx,
+                                     state=state, access="index", mesh=mesh)
+            jax.block_until_ready(res)
+            ws._DISPATCH_LOG = None
+            rows.append(snap(res))
+            events.append((state.last_advance, tuple(log),
+                           state.lo, state.hi, state.capacity))
+        return rows, events
+
+    out = {"devices": jax.device_count(), "cases": {}}
+    # window bounds are INCLUSIVE of hi, so (lo, lo+31) covers exactly 32
+    # positions and the entering range of a stride-32 slide begins at a
+    # multiple of 32 — a shard base slot for C=64, E=2
+    for name, width, stride, steps in (
+            ("exact-base", 31, 32, 20),     # entering range lands ON a
+                                            # shard's base slot every step
+            ("straddle", 24, 16, 24)):      # entering range crosses a
+                                            # shard boundary and the wrap
+        for E, D in ((2, 1), (2, 2)):
+            ref_rows, ref_ev = chain(None, width, stride, steps)
+            got_rows, got_ev = chain((E, D), width, stride, steps)
+            C = got_ev[-1][4]
+            shard = C // E
+            saw_base = saw_straddle = False
+            prev_hi = None
+            for adv, log, lo, hi, cap in got_ev:
+                if adv == "delta" and prev_hi is not None and hi > prev_hi:
+                    slots = np.arange(prev_hi, hi) % C
+                    if int(slots[0]) % shard == 0:
+                        saw_base = True
+                    if len(set((slots // shard).tolist())) > 1:
+                        saw_straddle = True
+                prev_hi = hi
+            ident = all(
+                (x == y).all()
+                for r, s in zip(ref_rows, got_rows)
+                for a, b in zip(r, s)
+                for x, y in zip(a, b))
+            steady = all(e[0] == "delta" for e in got_ev[1:])
+            out["cases"]["%s@%dx%d" % (name, E, D)] = dict(
+                parity=bool(ident), steady=bool(steady),
+                capacity=int(C), shard_slots=int(shard),
+                saw_base=bool(saw_base), saw_straddle=bool(saw_straddle))
+    print(json.dumps(out))
+    """
+)
+
+
+def test_edge_shard_boundary_wraparound_subprocess():
+    """Satellite: a 2-D-mesh advance whose delta scatter lands exactly on
+    a shard's base slot (global slot ≡ 0 mod C/E) and one that straddles
+    two shards, both row-bit-identical to the unsharded engine on every
+    advance across a full ring wrap."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _BOUNDARY_PROG],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)), env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 4
+    base_cases = [k for k in res["cases"] if k.startswith("exact-base")]
+    straddle_cases = [k for k in res["cases"] if k.startswith("straddle")]
+    assert base_cases and straddle_cases
+    for key, c in res["cases"].items():
+        assert c["steady"], f"{key}: chain fell cold mid-soak"
+        assert c["parity"], (
+            f"{key}: sharded rows diverge from the unsharded engine "
+            f"(C={c['capacity']}, shard={c['shard_slots']})")
+    # the alignments the test exists for actually occurred
+    assert any(res["cases"][k]["saw_base"] for k in base_cases), (
+        "no advance landed on a shard base slot")
+    assert any(res["cases"][k]["saw_straddle"] for k in straddle_cases), (
+        "no advance straddled two shards")
