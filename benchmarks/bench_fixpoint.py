@@ -91,6 +91,27 @@ Six measurements, all asserted result-identical before timing:
    Same honesty note as part 4: one physical core, so every
    difference is work reduction/overhead, not thread parallelism.
 
+7. **tiered history (DESIGN.md §7.8)** — the compaction-on/off lockstep
+   advance soak (identity asserted before timing, one fused dispatch +
+   zero retraces per advance) and the time-travel claim: an evicted
+   window answered by cold-chunk stitching vs a cold full-history
+   rebuild.
+
+8. **frontier-rung ladder (DESIGN.md §7.9)** — the sparse-rounds claim
+   in BOTH regimes.  Deep row: a transit timetable graph (E = 8V, EA
+   depth ~200 rounds >> 32) where the live frontier stays a handful of
+   vertices, so the laddered cold solve's sparse segments pay
+   O(V + erung) per round against the dense program's O(E').  Crossover
+   row: the same-size shallow power-law graph, where the frontier blows
+   past every rung within a few rounds and the ladder honestly loses —
+   the measured reason ``ladder=0`` is the default.  Row-bit-identity
+   of the laddered solve is asserted BEFORE timing in both regimes, and
+   repeated same-shape laddered solves after the timed warmup must not
+   trace a single new segment (asserted from the ladder trace log).
+   Part 2b rides along: the ``tiny_budget_gate=True`` chain (stateless
+   cold reroute at ring <= TINY_BUDGET_RING) must fire, match the cold
+   rows bit-exactly, and not regress below the cold baseline.
+
 Besides the usual CSV rows, writes machine-readable ``BENCH_fixpoint.json``
 at the repo root (the start of the perf trajectory; CI runs this at smoke
 sizes so the path cannot rot).  ``parts=`` regenerates a subset of the five
@@ -130,7 +151,7 @@ from repro.serve import window_sweep as _ws
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 PARTS = ("gather_once", "incremental", "multi_tenant", "sharded", "daemon",
-         "mesh2d", "history")
+         "mesh2d", "history", "frontier")
 
 # Part 4 runs one subprocess per device count: XLA fixes the host device
 # count at backend init, so each D needs a fresh process.  The program
@@ -385,7 +406,8 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
         daemon_ticks=24, daemon_admits=3,
         mesh2d_meshes=((1, 1), (2, 2), (4, 1), (1, 4), (2, 4)),
         mesh2d_steps=10, mesh2d_cands=256, history_steps=48,
-        history_iters=5):
+        history_iters=5, frontier_nv=4_096, frontier_ne=32_768,
+        frontier_headway=500, frontier_ladder=64, frontier_iters=5):
     """Narrow (selective, index-plan) and broader window regimes, mirroring
     the Fig. 9 selectivity axis the re-gather cost scales with.  The default
     fracs are chosen so the union of the W sliding windows still plans
@@ -541,6 +563,95 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
             "dispatches_per_advance": int(np.median(dispatches)),
             "fused": True,
             "speedup": t_cold / max(t_inc, 1e-12),
+        })
+
+    # ---- 2b: tiny-budget crossover gate (DESIGN.md §7.9) -------------------
+    # At ring capacities <= TINY_BUDGET_RING the fused advance LOSES to the
+    # cold sweep (the honest sub-1x row the width_fracs[0]/5 regime above
+    # records); ``tiny_budget_gate=True`` reroutes the chain cold there.
+    # Asserted: the gate actually fires (dispatch log), rows stay identical
+    # to the cold reference, and the gated chain no longer regresses below
+    # the cold baseline — the contract the calibration bought.
+    if "incremental" in parts:
+        width_g = max(int(span * width_fracs[0] / 5), 4)
+        while True:
+            stride_g = max(width_g // 4, 1)
+            base_g = t_max - advances * stride_g
+            wins_g0 = sliding_windows(base_g, width=width_g, stride=stride_g,
+                                      count=W)
+            plan_g = plan_query(g, idx, windows=wins_g0, access="index")
+            cap_g = plan_g.ring_capacity or plan_g.budget
+            if cap_g <= _ws.TINY_BUDGET_RING or width_g <= 4:
+                break
+            width_g //= 2
+        assert plan_g.method in ("index", "hybrid"), plan_g.cache_key
+        assert cap_g <= _ws.TINY_BUDGET_RING, (
+            f"could not reach the tiny-budget band (cap={cap_g})")
+
+        def wins_at(k):
+            return sliding_windows(base_g + k * stride_g, width=width_g,
+                                   stride=stride_g, count=W)
+
+        # warm all three programs off the timed path
+        sweep(g, src, wins_at(0), idx, plan=plan_g)
+        _, s_f = sweep_incremental(g, src, wins_at(0), idx, plan=plan_g)
+        _, s_f = sweep_incremental(g, src, wins_at(1), idx, plan=plan_g,
+                                   state=s_f)
+        _, s_gw = sweep_incremental(g, src, wins_at(0), idx, plan=plan_g,
+                                    tiny_budget_gate=True)
+        _, s_gw = sweep_incremental(g, src, wins_at(1), idx, plan=plan_g,
+                                    state=s_gw, tiny_budget_gate=True)
+
+        _, s_f = sweep_incremental(g, src, wins_at(0), idx, plan=plan_g)
+        _, s_g = sweep_incremental(g, src, wins_at(0), idx, plan=plan_g,
+                                   tiny_budget_gate=True)
+        cold_g, fused_g, gated_g = [], [], []
+        for k in range(1, advances + 1):
+            wins_g = wins_at(k)
+            cold_g.append(time_fn(
+                lambda: sweep(g, src, wins_g, idx, plan=plan_g),
+                warmup=0, iters=1))
+            tic = time.perf_counter()
+            res_f, s_f = sweep_incremental(g, src, wins_g, idx, plan=plan_g,
+                                           state=s_f)
+            jax.block_until_ready(res_f)
+            fused_g.append(time.perf_counter() - tic)
+
+            _ws._DISPATCH_LOG = log = []
+            tic = time.perf_counter()
+            res_g, s_g = sweep_incremental(g, src, wins_g, idx, plan=plan_g,
+                                           state=s_g, tiny_budget_gate=True)
+            jax.block_until_ready(res_g)
+            gated_g.append(time.perf_counter() - tic)
+            _ws._DISPATCH_LOG = None
+            assert "gate:tiny-budget" in log, (
+                f"tiny-budget gate did not fire: {log}")
+            assert not any(e.startswith("fused:") for e in log), (
+                f"gated chain must not take the fused advance: {log}")
+            if k == advances:
+                ref_g = sweep(g, src, wins_g, idx, plan=plan_g)
+                assert (np.asarray(res_g) == np.asarray(ref_g)).all(), (
+                    "gated chain diverges from cold sweep")
+        t_cold_g = float(np.median(cold_g))
+        t_fused_g = float(np.median(fused_g))
+        t_gated_g = float(np.median(gated_g))
+        # the no-regression contract: gated ~= cold (bounded gate overhead)
+        assert t_gated_g <= t_cold_g * 1.3 + 1e-4, (
+            f"tiny-budget gate regressed vs cold: {t_gated_g*1e6:.0f}us "
+            f"vs {t_cold_g*1e6:.0f}us")
+        emit(
+            f"fixpoint/sweep_incremental/tiny_gate/W{W}", t_gated_g,
+            f"plan={plan_g.cache_key};cold_us={t_cold_g*1e6:.0f};"
+            f"fused_us={t_fused_g*1e6:.0f};gated_us={t_gated_g*1e6:.0f};"
+            f"fused_vs_gated={t_fused_g/max(t_gated_g,1e-12):.2f}x",
+        )
+        report["incremental"].append({
+            "tiny_budget_gate": True, "W": W, "plan": plan_g.cache_key,
+            "ring_capacity": int(cap_g),
+            "cold_us": t_cold_g * 1e6, "fused_us": t_fused_g * 1e6,
+            "gated_us": t_gated_g * 1e6,
+            "fused_vs_gated": t_fused_g / max(t_gated_g, 1e-12),
+            "no_regression_vs_cold": True,
         })
 
     # ---- 3: multi-tenant fused advances (1 vs 4 vs 16 tenants) -------------
@@ -1100,6 +1211,96 @@ def run(n_v=5_000, n_e=200_000, width_fracs=(0.005, 0.02), W=8, advances=6,
             "coldstore": {k7: (float(v7) if isinstance(v7, float) else v7)
                           for k7, v7 in st7.items()},
         }
+
+    # ---- 8: frontier-rung ladder — sparse rounds on deep fixpoints ---------
+    # The DESIGN.md §7.9 perf claim measured honestly in BOTH regimes.  The
+    # transit timetable graph (E = 8V, EA depth ~ t_max/headway >> 32) is
+    # the ladder's home turf: the live frontier stays a handful of vertices
+    # for hundreds of rounds, so the dense program burns O(E') per round
+    # while the sparse segments pay O(V + erung).  The shallow power-law
+    # graph is the honest crossover: the frontier blows past every rung in
+    # a couple of rounds, the ladder re-enters dense, and the probe
+    # overhead makes laddered <= dense — which is why ladder=0 is the
+    # default and engagement is opt-in per plan.  Bit-identity of the
+    # laddered rows is asserted BEFORE any timing, and repeated same-shape
+    # laddered solves after warmup must not retrace a single segment
+    # (asserted from the trace log, the §7.9 jit-cache-pinning invariant).
+    if "frontier" in parts:
+        from repro.core import edgemap as em8
+        from repro.core.algorithms import earliest_arrival_over_view
+        from repro.data.generators import transit_temporal_graph
+        from repro.engine import frontier as fr8
+
+        report["frontier"] = {"ladder": int(frontier_ladder)}
+
+        def _regime(tag, g8, note):
+            idx8 = build_tger(g8, degree_cutoff=max(frontier_ne // 800, 16))
+            ts8 = np.asarray(g8.t_start)
+            wins8 = np.asarray(
+                [[int(ts8.min()), int(np.asarray(g8.t_end).max()) + 1]],
+                np.int32)
+            plans = {
+                lad: plan_query(g8, idx8, windows=wins8, access="scan",
+                                ladder=lad)
+                for lad in (0, int(frontier_ladder))
+            }
+            views = {
+                lad: em8.view_for_plan(g8, idx8, em8.union_window(wins8), p8)
+                for lad, p8 in plans.items()
+            }
+
+            def solve(lad, **kw):
+                out = earliest_arrival_over_view(
+                    views[lad], wins8, sources=0, plan=plans[lad],
+                    n_vertices=g8.n_vertices, **kw)
+                jax.block_until_ready(out)
+                return out
+
+            # depth probe + row-bit-identity, BEFORE any timing
+            out_d, rounds8 = solve(0, with_rounds=True)
+            out_l = solve(int(frontier_ladder))
+            assert (np.asarray(out_d) == np.asarray(out_l)).all(), (
+                f"laddered EA diverges from dense on {tag}")
+            t_d = time_fn(lambda: solve(0), warmup=1, iters=frontier_iters)
+            t_l = time_fn(lambda: solve(int(frontier_ladder)), warmup=1,
+                          iters=frontier_iters)
+            # zero-retrace: the timed loop warmed every segment program —
+            # further same-shape queries must replay entirely from cache
+            n0 = fr8.ladder_trace_count()
+            for _ in range(3):
+                solve(int(frontier_ladder))
+            assert fr8.ladder_trace_count() == n0, (
+                f"laddered solve retraced on repeated same-shape queries "
+                f"({tag}): {fr8.ladder_trace_count() - n0} new traces")
+            sp = t_d / max(t_l, 1e-12)
+            emit(
+                f"fixpoint/frontier/{tag}", t_l,
+                f"plan={plans[frontier_ladder].cache_key};"
+                f"rounds={int(rounds8)};dense_us={t_d*1e6:.0f};"
+                f"laddered_us={t_l*1e6:.0f};speedup={sp:.2f}x;"
+                f"zero_retrace=True;note={note}",
+            )
+            report["frontier"][tag] = {
+                "n_v": g8.n_vertices, "n_e": int(np.asarray(g8.src).size),
+                "plan": plans[frontier_ladder].cache_key,
+                "rounds": int(rounds8),
+                "dense_us": t_d * 1e6, "laddered_us": t_l * 1e6,
+                "speedup": sp, "zero_retrace": True, "note": note,
+            }
+            return int(rounds8)
+
+        rounds_deep = _regime(
+            "transit_deep",
+            transit_temporal_graph(frontier_nv, frontier_ne, k=1,
+                                   headway=frontier_headway, seed=4),
+            "sparse-rounds-O(V+erung)-vs-dense-O(E')")
+        assert rounds_deep >= 32, (
+            f"transit regime too shallow for the deep row: {rounds_deep} "
+            f"rounds (need >= 32; raise t_max/headway)")
+        _regime(
+            "powerlaw_crossover",
+            power_law_temporal_graph(frontier_nv, frontier_ne, seed=4),
+            "shallow-frontier-blowup;ladder-default-off")
 
     with open(path, "w") as f:
         json.dump(report, f, indent=2)

@@ -15,13 +15,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: table4,fig7,fig8,fig9,plans,sweep,"
-                         "fixpoint,multitenant,mesh2d,history,estimator,"
-                         "roofline "
+                         "fixpoint,multitenant,mesh2d,history,frontier,"
+                         "estimator,roofline "
                          "(multitenant regenerates only BENCH_fixpoint.json "
                          "parts 3/4 — multi-tenant qps + sharded devices; "
                          "mesh2d regenerates only part 6 — the edge×query "
                          "2-D mesh scaling table; history regenerates only "
-                         "part 7 — tiered-history compaction + time-travel)")
+                         "part 7 — tiered-history compaction + time-travel; "
+                         "frontier regenerates only part 8 — the "
+                         "frontier-rung ladder deep/crossover rows)")
     args = ap.parse_args()
     wanted = set(args.only.split(",")) if args.only else None
 
@@ -65,10 +67,11 @@ def main() -> None:
         from benchmarks import bench_fixpoint
         if args.quick:
             # quick runs skip part 6 (one subprocess per (E, D) shape ×
-            # regime is too slow for the CI smoke); --only mesh2d below
-            # regenerates it at reduced sizes
+            # regime is too slow for the CI smoke) and part 8 (deep
+            # ~200-round fixpoints); --only mesh2d / --only frontier below
+            # regenerate them at reduced sizes
             quick_parts = tuple(p for p in bench_fixpoint.PARTS
-                                if p != "mesh2d")
+                                if p not in ("mesh2d", "frontier"))
             bench_fixpoint.run(n_v=2_000, n_e=50_000, W=6, advances=4, iters=2,
                                dev_counts=(1, 2), shard_steps=8,
                                shard_cands=96, daemon_ticks=12,
@@ -112,6 +115,18 @@ def main() -> None:
                                history_steps=48, history_iters=3)
         else:
             bench_fixpoint.run(parts=("history",))
+
+    if wanted is not None and "frontier" in wanted:
+        # explicit-only (a full run already covers part 8 via fixpoint):
+        # regenerates the frontier-rung ladder rows — the deep-transit
+        # laddered-vs-dense speedup and the shallow power-law crossover;
+        # the JSON merge keeps the other parts intact.
+        from benchmarks import bench_fixpoint
+        if args.quick:
+            bench_fixpoint.run(parts=("frontier",), frontier_nv=1_024,
+                               frontier_ne=8_192, frontier_iters=3)
+        else:
+            bench_fixpoint.run(parts=("frontier",))
 
     if want("estimator"):
         from benchmarks import bench_estimator

@@ -56,15 +56,33 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # advances asserted against the dispatch-site log at every batch size and
 # device count, result-identity asserted before timing; emits
 # BENCH_fixpoint.json at the repo root, including the tiny-budget
-# crossover regime)
+# crossover regime and the part-2b gate check: the stateless
+# tiny_budget_gate chain must not regress below the cold baseline)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only fixpoint
 
 # smoke the tiered-history part (DESIGN.md §7.8) at reduced sizes: the
 # 48-advance compaction-on/off lockstep (identity asserted before timing,
 # one-dispatch + zero-retrace asserted per advance) and the time-travel
 # stitch vs cold full-history rebuild — merges part 7 into
-# BENCH_fixpoint.json; plus the history-chunks launch wiring.
+# BENCH_fixpoint.json; plus the history-chunks launch wiring, once
+# in-memory and once spilling sealed chunk payloads to memmap files
+# (DESIGN.md §7.9 satellite: decodes must stay bit-identical off disk).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only history
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.launch.serve --graph --daemon --ticks 6 --tenants 6 \
   --n-vertices 500 --n-edges 10000 --history-chunks 512
+SPILL_DIR="$(mktemp -d)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.serve --graph --tenants 6 --advances 8 \
+  --n-vertices 500 --n-edges 10000 --history-chunks 512 \
+  --history-spill-dir "$SPILL_DIR"
+rm -rf "$SPILL_DIR"
+
+# smoke the frontier-rung ladder part (DESIGN.md §7.9) at reduced sizes:
+# the deep-transit laddered-vs-dense EA rows (bit-identity asserted
+# BEFORE timing, zero retraces on repeated same-shape laddered solves
+# asserted from the trace log) and the honest shallow power-law
+# crossover row, plus the part-2b tiny-budget gate assertion inside the
+# fixpoint leg above — merges part 8 into BENCH_fixpoint.json.  Runs on
+# both legs of the jax version matrix like everything else here.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick --only frontier

@@ -34,6 +34,7 @@ from repro.core.edgemap import (
     view_for_plan,
 )
 from repro.engine.fixpoint import FixpointRunner
+from repro.engine.frontier import ladder_eligible
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
@@ -97,8 +98,24 @@ def _brandes_row(edges, valid_row, window, source, t, P: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_vertices", "pred", "max_rounds", "n_buckets"),
+    static_argnames=("n_vertices", "pred", "n_buckets"),
 )
+def _brandes_from_t(edges, windows, sources, valid, t, *, plan,
+                    n_vertices: int, pred: OrderingPredicateType,
+                    n_buckets: int):
+    """The vmapped forward/backward Brandes passes given precomputed EA
+    labels ``t`` — shared by the dense program (which traces its EA
+    upsweep inline) and the laddered host path (which computes ``t``
+    through the frontier-rung ladder, bit-identical, then runs this one
+    jitted downsweep).  Static fori_loop trip counts: one compilation per
+    (shape, n_buckets)."""
+    return jax.vmap(
+        lambda w, s, ok, t_row: _brandes_row(
+            edges, ok, (w[0], w[1]), s, t_row, n_buckets, pred, n_vertices,
+            axis=plan.edge_axis)
+    )(windows, sources, valid, t)
+
+
 def temporal_betweenness_over_view(
     edges: EdgeView,
     windows: jax.Array,             # i32[Q, 2]
@@ -119,7 +136,13 @@ def temporal_betweenness_over_view(
 
     ``init`` must be None: dependencies are not a monotone fixpoint (they
     are a two-pass DAG accumulation), so there is no sound warm start —
-    the serving layer refuses betweenness warm starts (DESIGN.md §7.4)."""
+    the serving layer refuses betweenness warm starts (DESIGN.md §7.4).
+
+    Under a ladder-enabled plan a host-level call runs the EA upsweep
+    through the frontier-rung ladder (DESIGN.md §7.9) — the deep integer
+    fixpoint is where the rounds go — and feeds the bit-identical arrival
+    labels to the same jitted Brandes downsweep (float accumulation order
+    unchanged, so the dependencies match the dense program exactly)."""
     if init is not None:
         raise ValueError(
             "temporal_betweenness_over_view does not accept a warm init: "
@@ -134,11 +157,9 @@ def temporal_betweenness_over_view(
         edges, runner.windows, sources=runner.sources, plan=plan,
         n_vertices=n_vertices, pred=pred, max_rounds=max_rounds,
     )                                                  # [Q, V]
-    return jax.vmap(
-        lambda w, s, ok, t_row: _brandes_row(
-            edges, ok, (w[0], w[1]), s, t_row, n_buckets, pred, n_vertices,
-            axis=plan.edge_axis)
-    )(runner.windows, runner.sources, runner.valid, t)
+    return _brandes_from_t(
+        edges, runner.windows, runner.sources, runner.valid, t, plan=plan,
+        n_vertices=n_vertices, pred=pred, n_buckets=n_buckets)
 
 
 def temporal_betweenness(

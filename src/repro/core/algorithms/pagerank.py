@@ -72,7 +72,13 @@ def temporal_pagerank_over_view(
     only the residual after n_iters, not the limit — re-iterating from the
     previous sweep's nearby answer converges faster, but the finite-iteration
     output is NOT bit-identical to a cold uniform start; pass ``init=None``
-    for the bit-reproducible serving mode)."""
+    for the bit-reproducible serving mode).
+
+    The frontier-rung ladder (DESIGN.md §7.9) is deliberately a NO-OP
+    here: power iteration touches every vertex every round (the frontier
+    never shrinks), and float sums are order-sensitive — a sparse-gathered
+    reassociation would break bit-reproducibility.  A ladder-enabled plan
+    runs the same dense program."""
     if sources is not None:
         raise ValueError("temporal_pagerank is source-free: pass sources=None")
     runner = FixpointRunner(

@@ -26,7 +26,17 @@ from repro.core.edgemap import (
     union_window,
     view_for_plan,
 )
+from repro.engine.backends import combine_windows_for_plan
 from repro.engine.fixpoint import FixpointRunner
+from repro.engine.frontier import (
+    LadderSpec,
+    companion_for_view,
+    ladder_eligible,
+    rowwise_combine,
+    run_laddered,
+    sparse_window_valid,
+    take_rows,
+)
 from repro.engine.plan import AccessPlan
 from repro.core.predicates import OrderingPredicateType, edge_follows
 from repro.core.temporal_graph import TemporalGraph
@@ -49,7 +59,8 @@ def _ea_relax(pred: OrderingPredicateType):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("pred", "max_rounds", "visit_once", "with_metrics"),
+    static_argnames=("pred", "max_rounds", "visit_once", "with_metrics",
+                     "frontier_trace"),
 )
 def earliest_arrival(
     g: TemporalGraph,
@@ -62,6 +73,7 @@ def earliest_arrival(
     max_rounds: int = 0,
     visit_once: bool = False,
     with_metrics: bool = False,
+    frontier_trace: bool = False,
 ):
     """t[v] = earliest arrival time from ``source`` to v within [ta, tb].
 
@@ -76,6 +88,9 @@ def earliest_arrival(
     ``with_metrics=True`` returns ``(arrival, FixpointMetrics)`` — the
     runner's ``touched``-driven convergence record (round count + total
     touched vertices), at the cost of one extra segment-sum per round.
+    ``frontier_trace=True`` (with metrics) additionally fills
+    ``FixpointMetrics.frontier_trace`` with the per-round occupancy — the
+    regime evidence the frontier-rung ladder reads (DESIGN.md §7.9).
     """
     runner = FixpointRunner.for_query(
         g, tger, window, plan=ensure_plan(plan), max_rounds=max_rounds
@@ -106,7 +121,8 @@ def earliest_arrival(
     init = (arrival0, frontier0, frontier0)
     if with_metrics:
         (arrival, _, _), metrics = runner.run_with_metrics(
-            cond, lambda state, rnd: step_state(state, touched=True), init)
+            cond, lambda state, rnd: step_state(state, touched=True), init,
+            frontier_trace=frontier_trace)
         return arrival, metrics
     arrival, _, _ = runner.run(
         cond, lambda state, rnd: step_state(state)[0], init)
@@ -126,7 +142,7 @@ def earliest_arrival_multi(g, sources, window, tger=None, **kw):
     static_argnames=("n_vertices", "pred", "max_rounds", "visit_once",
                      "with_rounds"),
 )
-def earliest_arrival_over_view(
+def _earliest_arrival_over_view_dense(
     edges: EdgeView,
     windows: jax.Array,             # i32[Q, 2]
     *,
@@ -139,22 +155,6 @@ def earliest_arrival_over_view(
     init: Optional[jax.Array] = None,   # [Q, V] warm-start arrival
     with_rounds: bool = False,
 ):
-    """The batched EA fixpoint over a PREBUILT (union-covering) edge view —
-    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
-    ``(sources[q], windows[q])``, so one gathered view answers a whole
-    (source × window) batch; a scalar ``sources`` broadcasts (the
-    single-tenant sweep).
-
-    This is the piece the incremental sliding-window server reuses: it
-    advances one ring view across sweeps and runs only the rows that need
-    solving.  ``init`` warm-starts the fixpoint with [Q, V] arrival labels
-    (frontier = the finite labels) — sound whenever every finite init
-    label witnesses a real temporal path inside its row's window (EA is a
-    monotone min fixpoint: relaxation from any sound over-approximation
-    converges to the same fixpoint, provided the frontier seeds every
-    finite-label vertex).  ``with_rounds=True`` returns ``(arrival,
-    rounds)`` for serving observability.
-    """
     runner = FixpointRunner.for_view(
         edges, windows=windows, sources=sources, plan=plan,
         n_vertices=n_vertices, max_rounds=max_rounds,
@@ -190,6 +190,111 @@ def earliest_arrival_over_view(
         return arrival, rounds
     arrival, _, _ = runner.run(cond, body, init)
     return arrival
+
+
+@functools.lru_cache(maxsize=None)
+def _ea_ladder_spec(pred: OrderingPredicateType) -> LadderSpec:
+    """EA's ladder contract (one spec object per predicate, so same-pred
+    solves share the segment jit caches).  State is ``(arrival, frontier)``
+    — the label-correcting variant only; ``visit_once`` stays dense."""
+    relax = _ea_relax(pred)
+
+    def dense_round(edges, valid, windows, plan, state, rnd, V):
+        arrival, frontier = state
+
+        def per_window(wvalid, f, arr):
+            cand, extra = relax(edges, arr[edges.src])
+            return cand, wvalid & f[edges.src] & extra
+
+        cand, vmask = jax.vmap(per_window)(valid, frontier, arrival)
+        out = combine_windows_for_plan(
+            plan, cand, edges.dst, V, "min", masks=vmask,
+            use_layout=(plan.method == "scan"))
+        new_arrival = jnp.minimum(arrival, out)
+        return new_arrival, new_arrival < arrival
+
+    def sparse_round(edges, windows, plan, gathered, state, rnd, V):
+        arrival, frontier = state
+        (slots, cov), = gathered
+        ok, ts, te = sparse_window_valid(edges, windows, slots, cov)
+        arr_src = take_rows(arrival, edges.src[slots])
+        ok &= edge_follows(pred, arr_src, ts, te)
+        out = rowwise_combine(te, edges.dst[slots], V, "min", ok)
+        new_arrival = jnp.minimum(arrival, out)
+        return new_arrival, new_arrival < arrival
+
+    return LadderSpec("ea", dense_round, sparse_round, lambda s: s[1])
+
+
+def _ea_laddered(edges, windows, *, plan, n_vertices, sources, pred,
+                 max_rounds, init, with_rounds):
+    runner = FixpointRunner.for_view(
+        edges, windows=windows, sources=sources, plan=plan,
+        n_vertices=n_vertices, max_rounds=max_rounds,
+    )
+    if init is None:
+        arrival0 = runner.seeded(INT_INF, runner.windows[:, 0])
+        frontier0 = runner.source_frontier()
+    else:
+        arrival0 = jnp.asarray(init)
+        frontier0 = arrival0 < INT_INF
+    comp = companion_for_view(edges.src, n_vertices)
+    (arrival, _), rounds = run_laddered(
+        _ea_ladder_spec(pred), edges, runner.windows, runner.valid, plan,
+        n_vertices, (arrival0, frontier0), companions=(comp,),
+        max_rounds=runner.max_rounds,
+    )
+    return (arrival, rounds) if with_rounds else arrival
+
+
+def earliest_arrival_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
+    pred: OrderingPredicateType = OrderingPredicateType.SUCCEEDS,
+    max_rounds: int = 0,
+    visit_once: bool = False,
+    init: Optional[jax.Array] = None,   # [Q, V] warm-start arrival
+    with_rounds: bool = False,
+):
+    """The batched EA fixpoint over a PREBUILT (union-covering) edge view —
+    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
+    ``(sources[q], windows[q])``, so one gathered view answers a whole
+    (source × window) batch; a scalar ``sources`` broadcasts (the
+    single-tenant sweep).
+
+    This is the piece the incremental sliding-window server reuses: it
+    advances one ring view across sweeps and runs only the rows that need
+    solving.  ``init`` warm-starts the fixpoint with [Q, V] arrival labels
+    (frontier = the finite labels) — sound whenever every finite init
+    label witnesses a real temporal path inside its row's window (EA is a
+    monotone min fixpoint: relaxation from any sound over-approximation
+    converges to the same fixpoint, provided the frontier seeds every
+    finite-label vertex).  ``with_rounds=True`` returns ``(arrival,
+    rounds)`` for serving observability.
+
+    Under a ladder-enabled plan (``plan.ladder > 0``) a HOST-LEVEL call
+    (concrete view, label-correcting variant) runs the frontier-rung
+    ladder (DESIGN.md §7.9) — bit-identical to the dense fixpoint, sparse
+    tail rounds proportional to the live frontier.  Traced calls (the
+    fused serving step) and ``visit_once`` fall through to the dense
+    jitted program unchanged.
+    """
+    if not visit_once and ladder_eligible(plan, edges, windows, init,
+                                          sources):
+        return _ea_laddered(
+            edges, windows, plan=plan, n_vertices=n_vertices,
+            sources=sources, pred=pred, max_rounds=max_rounds, init=init,
+            with_rounds=with_rounds,
+        )
+    return _earliest_arrival_over_view_dense(
+        edges, windows, plan=plan, n_vertices=n_vertices, sources=sources,
+        pred=pred, max_rounds=max_rounds, visit_once=visit_once, init=init,
+        with_rounds=with_rounds,
+    )
 
 
 @functools.partial(

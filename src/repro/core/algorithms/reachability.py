@@ -35,6 +35,15 @@ from repro.core.edgemap import (
     view_for_plan,
 )
 from repro.engine.fixpoint import FixpointRunner
+from repro.engine.frontier import (
+    LadderSpec,
+    companion_for_view,
+    ladder_eligible,
+    rowwise_combine,
+    run_laddered,
+    sparse_window_valid,
+    take_rows,
+)
 from repro.engine.plan import AccessPlan
 from repro.core.temporal_graph import TemporalGraph
 from repro.core.tger import TGERIndex
@@ -120,7 +129,7 @@ def overlaps_reachability(
 
 
 @functools.partial(jax.jit, static_argnames=("n_vertices", "max_rounds"))
-def overlaps_reachability_over_view(
+def _overlaps_reachability_over_view_dense(
     edges: EdgeView,
     windows: jax.Array,             # i32[Q, 2]
     *,
@@ -130,11 +139,6 @@ def overlaps_reachability_over_view(
     max_rounds: int = 0,
     init=None,                      # optional ([Q, V] end, [Q, V] start)
 ):
-    """Batched overlaps fixpoints over a PREBUILT (union-covering) view —
-    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
-    ``(sources[q], windows[q])``, the source axis vmapped alongside the
-    window axis.  Per-window validity is precomputed once ([Q, E']); the
-    fixpoint is vmapped over its rows."""
     runner = FixpointRunner.for_view(
         edges, windows=windows, sources=sources, plan=plan,
         n_vertices=n_vertices, max_rounds=max_rounds,
@@ -153,6 +157,110 @@ def overlaps_reachability_over_view(
             edges, ok, (w[0], w[1]), s, n_vertices, runner.max_rounds,
             init=(e0, s0), axis=ax)
     )(runner.windows, runner.sources, runner.valid, init[0], init[1])
+
+
+def _reach_rounds(edges_t_end, edges_t_start, dst, s_end, s_start, ok, V,
+                  combine):
+    """The shared two-pass lexicographic-min update: ``combine(vals, ids,
+    mask)`` is either the dense per-row segment combine or the sparse
+    gathered one — both minimize over the SAME valid-edge multiset, so the
+    results agree bit-for-bit (integer min is order-free)."""
+    min_end = combine(edges_t_end, dst, ok)
+    achieves = ok & (edges_t_end == take_rows(min_end, dst))
+    min_start = combine(edges_t_start, dst, achieves)
+    better = (min_end < s_end) | ((min_end == s_end) & (min_start < s_start))
+    new_end = jnp.where(better, min_end, s_end)
+    new_start = jnp.where(better, min_start, s_start)
+    return new_end, new_start, better
+
+
+def _reach_dense_round(edges, valid, windows, plan, state, rnd, V):
+    s_end, s_start, frontier = state
+    ok = jax.vmap(
+        lambda wvalid, f, pe, ps: (
+            wvalid & f[edges.src] & (pe[edges.src] < INT_INF)
+            & (ps[edges.src] <= edges.t_start)
+            & (pe[edges.src] <= edges.t_end))
+    )(valid, frontier, s_end, s_start)
+    combine = lambda vals, ids, m: jax.vmap(
+        lambda v, i, mm: segment_combine(v, i, V, "min", mask=mm,
+                                         axis=plan.edge_axis))(vals, ids, m)
+    te = jnp.broadcast_to(edges.t_end, ok.shape)
+    ts = jnp.broadcast_to(edges.t_start, ok.shape)
+    dst = jnp.broadcast_to(edges.dst, ok.shape)
+    return _reach_rounds(te, ts, dst, s_end, s_start, ok, V, combine)
+
+
+def _reach_sparse_round(edges, windows, plan, gathered, state, rnd, V):
+    s_end, s_start, frontier = state
+    (slots, cov), = gathered
+    ok, ts, te = sparse_window_valid(edges, windows, slots, cov)
+    src_at = edges.src[slots]
+    pe = take_rows(s_end, src_at)
+    ps = take_rows(s_start, src_at)
+    ok &= (pe < INT_INF) & (ps <= ts) & (pe <= te)
+    combine = lambda vals, ids, m: rowwise_combine(vals, ids, V, "min", m)
+    return _reach_rounds(te, ts, edges.dst[slots], s_end, s_start, ok, V,
+                         combine)
+
+
+_REACH_SPEC = LadderSpec("reach", _reach_dense_round, _reach_sparse_round,
+                         lambda s: s[2])
+
+
+def overlaps_reachability_over_view(
+    edges: EdgeView,
+    windows: jax.Array,             # i32[Q, 2]
+    *,
+    plan: AccessPlan,
+    n_vertices: int,
+    sources=None,                   # scalar (broadcast) | i32[Q] per-row
+    max_rounds: int = 0,
+    init=None,                      # optional ([Q, V] end, [Q, V] start)
+):
+    """Batched overlaps fixpoints over a PREBUILT (union-covering) view —
+    the uniform multi-source entry point (DESIGN.md §7.4): row q solves
+    ``(sources[q], windows[q])``, the source axis vmapped alongside the
+    window axis.  Per-window validity is precomputed once ([Q, E']); the
+    fixpoint is vmapped over its rows.
+
+    Under a ladder-enabled plan a host-level call runs the frontier-rung
+    ladder (DESIGN.md §7.9) with the two-pass lexicographic min evaluated
+    on only the gathered frontier-incident slots — bit-identical to the
+    dense sweep (a converged row's empty frontier makes every later round
+    a no-op in both formulations)."""
+    if ladder_eligible(plan, edges, windows, sources,
+                       None if init is None else init[0]):
+        runner = FixpointRunner.for_view(
+            edges, windows=windows, sources=sources, plan=plan,
+            n_vertices=n_vertices, max_rounds=max_rounds,
+        )
+        if runner.sources is None and init is None:
+            raise ValueError("overlaps_reachability_over_view needs sources=")
+        if init is None:
+            ta = runner.windows[:, 0]
+            end0 = runner.seeded(INT_INF, ta)
+            start0 = runner.seeded(INT_INF, ta)
+            frontier0 = runner.source_frontier()
+        else:
+            end0, start0 = jnp.asarray(init[0]), jnp.asarray(init[1])
+            frontier0 = end0 < INT_INF
+        comp = companion_for_view(edges.src, n_vertices)
+        (s_end, s_start, _), _ = run_laddered(
+            _REACH_SPEC, edges, runner.windows, runner.valid, plan,
+            n_vertices, (end0, start0, frontier0), companions=(comp,),
+            max_rounds=runner.max_rounds,
+        )
+        reachable = s_end < INT_INF
+        return (
+            reachable,
+            jnp.where(reachable, s_start, 0),
+            jnp.where(reachable, s_end, 0),
+        )
+    return _overlaps_reachability_over_view_dense(
+        edges, windows, plan=plan, n_vertices=n_vertices, sources=sources,
+        max_rounds=max_rounds, init=init,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("max_rounds",))

@@ -34,6 +34,7 @@ same plan.  The tier decision itself (hot / cold / split) lives on the
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -106,10 +107,19 @@ class ColdStore:
     the hot horizon is answerable.  The uncompacted tail
     ``[sealed, watermark)`` (less than one chunk) serves straight from the
     host mirrors until its chunk completes.
+
+    ``spill_dir`` moves sealed chunk payloads out of RAM: each chunk's
+    delta-encoded columns are written to one file and rebound as read-only
+    ``np.memmap`` views, decoded through exactly the same code path
+    (bit-identical stitches — the memmap is just a lazier ndarray).  The
+    chunk directory (fences and position spans) stays in memory, so tier
+    classification and ``chunks_for`` lookups never touch disk; only a
+    cold-tier decode pages payload bytes in.
     """
 
     def __init__(self, g: TemporalGraph, tger: TGERIndex, *,
-                 chunk_slots: int = 1024):
+                 chunk_slots: int = 1024,
+                 spill_dir: Optional[str] = None):
         if tger is None:
             raise ValueError("ColdStore requires a TGER index (the time-"
                              "first permutation is the compaction domain)")
@@ -118,6 +128,9 @@ class ColdStore:
         self.graph = g
         self.tger = tger
         self.chunk_slots = int(chunk_slots)
+        self.spill_dir = None if spill_dir is None else str(spill_dir)
+        if self.spill_dir is not None:
+            os.makedirs(self.spill_dir, exist_ok=True)
         self.n_positions = int(g.n_edges)
         self._covered = 0
         self._sealed = 0
@@ -125,6 +138,7 @@ class ColdStore:
         self._host: Optional[Dict[str, np.ndarray]] = None
         self._decoded: Dict[int, Tuple[np.ndarray, ...]] = {}
         self.n_compactions = 0
+        self.n_spilled = 0
 
     # -- host mirrors --------------------------------------------------------
 
@@ -208,7 +222,7 @@ class ColdStore:
         ss = h["start_sorted"]
         t_hi = (int(ss[b]) if b < ss.shape[0]
                 else int(np.iinfo(np.int32).max))
-        self._chunks.append(ColdChunk(
+        chunk = ColdChunk(
             pos_lo=a, pos_hi=b, t_lo=int(ts[0]), t_hi=t_hi,
             src=np.ascontiguousarray(h["src"][eids]),
             dst=np.ascontiguousarray(h["dst"][eids]),
@@ -216,8 +230,40 @@ class ColdStore:
             dur=_pack_unsigned(dur),
             weight=(None if np.all(w == np.float32(1.0))
                     else np.ascontiguousarray(w)),
-        ))
+        )
+        if self.spill_dir is not None:
+            chunk = self._spill(chunk)
+        self._chunks.append(chunk)
         self._sealed = b
+
+    def _spill(self, chunk: ColdChunk) -> ColdChunk:
+        """Write the sealed payload columns to ONE file under ``spill_dir``
+        and rebind them as read-only ``np.memmap`` views — an ndarray
+        subclass, so :meth:`ColdChunk.decode` and every gather path read
+        through it unchanged while the OS pages the bytes in and out on
+        demand (the directory fences and pos/t metadata stay in RAM, so
+        ``chunks_for`` never touches disk).  Zero-size columns (a 1-slot
+        chunk's empty delta column) stay in memory: mmap cannot map an
+        empty span."""
+        cols = dict(src=chunk.src, dst=chunk.dst,
+                    dt_start=chunk.dt_start, dur=chunk.dur)
+        if chunk.weight is not None:
+            cols["weight"] = chunk.weight
+        path = os.path.join(
+            self.spill_dir,
+            f"chunk_{chunk.pos_lo:012d}_{chunk.pos_hi:012d}.bin")
+        offsets: Dict[str, int] = {}
+        with open(path, "wb") as f:
+            for name, a in cols.items():
+                offsets[name] = f.tell()
+                f.write(np.ascontiguousarray(a).tobytes())
+        mapped: Dict[str, np.ndarray] = {}
+        for name, a in cols.items():
+            mapped[name] = (a if a.size == 0 else np.memmap(
+                path, dtype=a.dtype, mode="r", offset=offsets[name],
+                shape=a.shape))
+        self.n_spilled += 1
+        return dataclasses.replace(chunk, **mapped)
 
     # -- stitching -----------------------------------------------------------
 
@@ -304,6 +350,7 @@ class ColdStore:
             nbytes=self.nbytes,
             raw_nbytes=raw,
             compaction_ratio=(raw / self.nbytes) if self.nbytes else 0.0,
+            spilled_chunks=self.n_spilled,
         )
 
 

@@ -35,6 +35,12 @@ from repro.engine.backends import (  # noqa: F401 (re-export)
     segment_combine,
     segment_combine_windows,
 )
+from repro.engine.frontier import (  # noqa: F401 (re-export)
+    FrontierView,
+    advance_frontier_view,
+    build_frontier_view,
+    companion_for_view,
+)
 from repro.engine.plan import AccessPlan, make_plan
 
 INT_INF = jnp.iinfo(jnp.int32).max
@@ -277,6 +283,33 @@ def advance_hybrid_ring(g: TemporalGraph, idx: TGERIndex, prev: EdgeView,
         (g.src, g.dst, g.t_start, g.t_end, g.weight), idx.heavy_perm_by_start,
         prev, lo_prev, lo_new, hi_new,
         capacity=capacity, delta_budget=delta_budget)
+
+
+def ring_companion_delta(src_field, perm, prev: EdgeView, lo_prev, lo_new,
+                         *, capacity: int, light_prefix: int = 0):
+    """Host-side ``(slots, old_from, new_from)`` delta of one ring advance
+    — the exact triplet :func:`advance_frontier_view` consumes to keep a
+    frontier-rung companion (DESIGN.md §7.9) in sync with an advanced ring
+    instead of re-sorting it.  ``prev`` is the view BEFORE the advance;
+    ``src_field``/``perm`` are the graph's src column and the (index:
+    global, hybrid: heavy) time-first permutation; ``light_prefix`` offsets
+    hybrid slot ids past the static light partition.  The entering
+    positions [lo_prev + C, lo_new + C) mirror the advance's own scatter —
+    end-of-stream positions clamp to the last permutation entry exactly
+    like ``advance_*_ring_fields`` does, so the delta matches the resident
+    payload bit-for-bit (those slots are masked dead either way).  The
+    advance contract (lo_new - lo_prev <= capacity) makes the slots
+    distinct, as ``advance_frontier_view`` requires."""
+    import numpy as np
+
+    lo_prev, lo_new = int(lo_prev), int(lo_new)
+    enter = np.arange(lo_prev + capacity, lo_new + capacity, dtype=np.int64)
+    slots = (light_prefix + (enter % capacity)).astype(np.int32)
+    perm = np.asarray(perm)
+    eids = perm[np.minimum(enter, perm.shape[0] - 1)]
+    old_from = np.asarray(prev.src)[slots]
+    new_from = np.asarray(src_field)[eids]
+    return slots, old_from, new_from
 
 
 def ring_view_for_plan(
@@ -540,7 +573,12 @@ __all__ = [
     "hybrid_ring_view",
     "advance_hybrid_ring",
     "advance_hybrid_ring_fields",
+    "ring_companion_delta",
     "ring_view_for_plan",
+    "FrontierView",
+    "build_frontier_view",
+    "advance_frontier_view",
+    "companion_for_view",
     "ensure_plan",
     "union_window",
     "segment_combine",

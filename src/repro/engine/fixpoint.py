@@ -61,10 +61,17 @@ class FixpointMetrics(NamedTuple):
     round count of a host-side reference loop run to no-change.
     ``touched_total`` sums, over all rounds, the vertices that received at
     least one valid contribution (the runner's per-round ``touched`` mask).
+    ``frontier_trace`` (opt-in: ``run_with_metrics(frontier_trace=True)``)
+    is the i32[max_rounds] per-round frontier occupancy — entry r holds the
+    touched-vertex count of round r, -1 past the executed rounds.  It is
+    the regime evidence the frontier-rung ladder's handoff reads (DESIGN.md
+    §7.9): the tail of a deep solve shows occupancy collapsing to a handful
+    of vertices while the dense round keeps paying O(E').
     """
 
     rounds: jax.Array          # i32 scalar
     touched_total: jax.Array   # i32 scalar
+    frontier_trace: Optional[jax.Array] = None   # i32[max_rounds] | None
 
 
 class FixpointRunner:
@@ -314,28 +321,44 @@ class FixpointRunner:
         return (final, rnd) if with_rounds else final
 
     def run_with_metrics(
-        self, cond: Callable, body: Callable, init
+        self, cond: Callable, body: Callable, init, *,
+        frontier_trace: bool = False,
     ) -> Tuple[Any, FixpointMetrics]:
         """Metered loop driver: ``body(state, rnd) -> (state, touched)``
         (``touched`` from ``step(..., compute_touched=True)``); returns
         ``(final_state, FixpointMetrics)``.  Costs one extra segment-sum per
-        round over the unmetered ``run`` — serving opts in per query."""
+        round over the unmetered ``run`` — serving opts in per query.
+
+        ``frontier_trace=True`` additionally records the per-round frontier
+        occupancy into ``FixpointMetrics.frontier_trace``: an
+        i32[max_rounds] buffer whose entry r is round r's touched-vertex
+        count (summed over the batch rows), -1 for rounds never executed.
+        The buffer shape is static (``max_rounds``), so the metered trace
+        stays one jittable program."""
+
+        trace0 = (
+            jnp.full(self.max_rounds, -1, jnp.int32) if frontier_trace
+            else jnp.zeros((0,), jnp.int32)
+        )
 
         def loop_cond(carry):
-            rnd, state, _touched_total = carry
+            rnd, state, _touched_total, _trace = carry
             return (rnd < self.max_rounds) & cond(state)
 
         def loop_body(carry):
-            rnd, state, touched_total = carry
+            rnd, state, touched_total, trace = carry
             state, touched = body(state, rnd)
-            return (
-                rnd + 1, state,
-                touched_total + jnp.sum(touched.astype(jnp.int32)),
-            )
+            occ = jnp.sum(touched.astype(jnp.int32))
+            if frontier_trace:
+                trace = jax.lax.dynamic_update_index_in_dim(
+                    trace, occ, rnd, 0)
+            return rnd + 1, state, touched_total + occ, trace
 
-        rnd, final, touched_total = jax.lax.while_loop(
-            loop_cond, loop_body, (jnp.int32(0), init, jnp.int32(0)))
-        return final, FixpointMetrics(rounds=rnd, touched_total=touched_total)
+        rnd, final, touched_total, trace = jax.lax.while_loop(
+            loop_cond, loop_body, (jnp.int32(0), init, jnp.int32(0), trace0))
+        return final, FixpointMetrics(
+            rounds=rnd, touched_total=touched_total,
+            frontier_trace=trace if frontier_trace else None)
 
 
 __all__ = ["FixpointRunner", "FixpointMetrics"]

@@ -1,0 +1,410 @@
+"""Frontier-rung ladder: sparse fixpoint rounds proportional to the live
+frontier (DESIGN.md §7.9).
+
+Every fixpoint in this repo relaxes the ENTIRE hoisted edge view each
+round — the frontier is only a mask (``valid & frontier[from_v]`` in
+``FixpointRunner.step``), so a deep chain pays O(rounds × E′) while the
+frontier holds a handful of vertices for most of the tail.  Kairos's
+fork-join edgeMap iterates only *active* adjacency lists; the XLA
+translation here is a **ladder of statically-shaped sparse segments**:
+
+  * a source-grouped **companion view** (:class:`FrontierView`) of the
+    hoisted edge view — a permutation of slot ids sorted by the slot's
+    source vertex plus a CSR offset table — built once per cold view
+    (host argsort) and delta-advanced with the ring (the slot order is
+    positionally stable, so an advance touches only the entering slots:
+    the same concat/shift bookkeeping as ``index_ring_view``);
+  * a **sparse round** that pads the frontier to a static pow2 vertex
+    rung (``engine.queries.bucket_capacity`` — the admission-bucket
+    machinery), expands it through the companion offsets into at most
+    ``erung`` frontier-incident edge slots, and runs the algorithm's
+    relax + masked segment combine over ONLY those slots.  Integer
+    min/max/sum combines are order-independent, so a sparse round is
+    bit-identical to the dense masked round over the same edges;
+  * a **host-level segment loop** (:func:`run_laddered`): dense segments
+    while the frontier is wide, then descent through sparse segments at
+    static ``(vrung, erung)`` rungs.  Each segment is one jitted
+    ``while_loop`` keyed on ``(plan statics, rung)`` — after warmup the
+    whole ladder is a jit-cache hit across queries, and the per-segment
+    host sync is the only non-fused dispatch.  Rung overflow (frontier
+    outgrowing the static pads) exits the segment BEFORE an uncovered
+    round runs — never a silent truncation.
+
+The ladder engages only on host-level calls (concrete arrays) under a
+plan with ``plan.ladder > 0`` — inside a trace (the fused serving step,
+nested jits) :func:`ladder_eligible` is False and the dense program runs
+untouched, preserving the one-dispatch contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hostcache import identity_cache
+from repro.engine.backends import segment_combine
+from repro.engine.queries import bucket_capacity
+
+# sparse-segment edge rung never drops below this (a handful of tiny
+# segments would pay more in host syncs than they save in FLOPs); the
+# descent hysteresis is disabled at the floor so a zero-out-degree
+# frontier still executes its (empty) round and converges.
+ERUNG_FLOOR = 64
+# hand off dense -> sparse when the frontier's summed structural degree
+# drops under this fraction of the view (sparse rounds cost O(V + erung)
+# per row against the dense round's O(E'); at E'/4 the pow2 pad still
+# leaves a margin).
+DENSE_HANDOFF_DIV = 4
+
+# trace-time event log: every jitted segment body appends its tag ONCE
+# per compilation, so a warmed ladder adds nothing here — benchmarks
+# assert zero retraces on repeated same-shape queries from this log.
+_TRACE_LOG: List[str] = []
+
+
+def ladder_trace_log() -> Tuple[str, ...]:
+    return tuple(_TRACE_LOG)
+
+
+def ladder_trace_count() -> int:
+    return len(_TRACE_LOG)
+
+
+class FrontierView(NamedTuple):
+    """Source-grouped companion of one edge view: ``perm`` lists the
+    view's slot ids sorted by ``(from_v[slot], slot)``; ``offsets`` is the
+    CSR fence (``perm[offsets[v]:offsets[v+1]]`` are vertex v's slots);
+    ``degs`` its diff (structural out-slots per vertex — masked padding
+    slots included; they are re-masked at gather time, the count only
+    feeds rung selection).  All slots appear exactly once, so the
+    companion never needs rebuilding when only the validity mask moves."""
+
+    perm: jax.Array      # i32[E'] slot ids grouped by source vertex
+    offsets: jax.Array   # i32[V + 1]
+    degs: jax.Array      # i32[V]
+
+
+def build_frontier_view(from_v, n_vertices: int) -> FrontierView:
+    """Cold host-side build: one stable argsort over the view's source
+    endpoints (every slot, masked padding included)."""
+    fv = np.asarray(from_v)
+    perm = np.argsort(fv, kind="stable").astype(np.int32)
+    degs = np.bincount(fv, minlength=n_vertices).astype(np.int32)
+    offsets = np.zeros(n_vertices + 1, np.int32)
+    np.cumsum(degs, out=offsets[1:])
+    return FrontierView(jnp.asarray(perm), jnp.asarray(offsets),
+                        jnp.asarray(degs))
+
+
+def advance_frontier_view(fv: FrontierView, slots, old_from, new_from,
+                          n_vertices: int) -> FrontierView:
+    """Delta-advance the companion for a ring advance that rewrote
+    ``slots`` (distinct slot ids, any order — wrap-around included) from
+    source ``old_from[i]`` to ``new_from[i]``: remove the old (vertex,
+    slot) entries from the sorted grouping, insert the new ones.  O(E' +
+    Δ log E') host work — the same order as the advance's own mask
+    recompute — and exactly equal to a cold rebuild over the advanced
+    endpoints (property-tested, including wrap-around)."""
+    perm = np.asarray(fv.perm)
+    degs = np.asarray(fv.degs).copy()
+    C = perm.shape[0]
+    slots = np.asarray(slots, np.int64)
+    old_from = np.asarray(old_from, np.int64)
+    new_from = np.asarray(new_from, np.int64)
+    if slots.size == 0:
+        return fv
+    # the sorted grouping IS a sorted key array keys = owner * C + slot
+    owner = np.repeat(np.arange(n_vertices, dtype=np.int64),
+                      np.diff(np.asarray(fv.offsets)))
+    keys = owner * C + perm
+    drop = np.searchsorted(keys, np.sort(old_from * C + slots))
+    keys = np.delete(keys, drop)
+    ins = np.sort(new_from * C + slots)
+    keys = np.insert(keys, np.searchsorted(keys, ins), ins)
+    np.subtract.at(degs, old_from, 1)
+    np.add.at(degs, new_from, 1)
+    offsets = np.zeros(n_vertices + 1, np.int32)
+    np.cumsum(degs, out=offsets[1:])
+    return FrontierView(jnp.asarray((keys % C).astype(np.int32)),
+                        jnp.asarray(offsets), jnp.asarray(degs))
+
+
+@identity_cache(16)
+def _companion_cached(from_v, n_vertices: int) -> FrontierView:
+    return build_frontier_view(from_v, n_vertices)
+
+
+def companion_for_view(from_v, n_vertices: int) -> FrontierView:
+    """Identity-cached companion build: repeated laddered solves over the
+    SAME resident view arrays (the serving cold tier re-solving a stitched
+    ring, a benchmark loop) pay the argsort once."""
+    return _companion_cached(from_v, int(n_vertices))
+
+
+def ladder_eligible(plan, edges, *arrays) -> bool:
+    """True when a host-level laddered solve may run: the plan opted in
+    (``ladder > 0``), the edge axis is unsharded (the sparse gather order
+    is per-device local and a psum across shards would double-count), and
+    the call is NOT under a trace — fused serving steps and nested jits
+    keep the dense one-dispatch program.  Extra ``arrays`` (windows, warm
+    init, sources) are tracer-checked too: a jitted caller can close over
+    a concrete view while tracing its windows."""
+    if (plan is None or not getattr(plan, "ladder", 0)
+            or plan.edge_axis is not None):
+        return False
+    leaves = [edges.src, *(a for a in arrays if a is not None)]
+    return not any(isinstance(a, jax.core.Tracer) for a in leaves)
+
+
+# ---------------------------------------------------------------------------
+# the sparse gather: frontier row -> covered edge-slot rows
+# ---------------------------------------------------------------------------
+
+def _gather_row(perm, offsets, f_row, vrung: int, erung: int, V: int):
+    av = jnp.nonzero(f_row, size=vrung, fill_value=V)[0].astype(jnp.int32)
+    real = av < V
+    lo = offsets[jnp.where(real, av, 0)]
+    hi = offsets[jnp.where(real, av + 1, 0)]
+    deg = jnp.where(real, hi - lo, 0)
+    csum = jnp.cumsum(deg)
+    total = csum[-1]
+    pos = jnp.arange(erung, dtype=jnp.int32)
+    own = jnp.searchsorted(csum, pos, side="right").astype(jnp.int32)
+    own = jnp.minimum(own, vrung - 1)
+    within = pos - (csum[own] - deg[own])
+    slot_idx = jnp.clip(lo[own] + within, 0, perm.shape[0] - 1)
+    return perm[slot_idx], pos < total
+
+
+def gather_frontier_slots(fv: FrontierView, frontier, vrung: int,
+                          erung: int, n_vertices: int):
+    """[Q, erung] slot ids covering EVERY frontier-incident slot of every
+    row, plus the coverage mask (False = pow2 padding).  Exact coverage
+    requires per-row occupancy <= vrung and summed degree <= erung — the
+    segment conds guard both, exiting to the host for a bigger rung
+    instead of truncating."""
+    return jax.vmap(
+        lambda f: _gather_row(fv.perm, fv.offsets, f, vrung, erung,
+                              n_vertices)
+    )(frontier)
+
+
+def sparse_window_valid(edges, windows, slots, cov):
+    """Per-row validity of gathered slots: coverage ∧ structural mask ∧
+    window membership — the same predicate the dense rounds precompute as
+    ``runner.valid``, evaluated only on the gathered slots.  Returns
+    ``(valid, t_start, t_end)`` at the slots."""
+    from repro.core.predicates import in_window
+
+    ts = edges.t_start[slots]
+    te = edges.t_end[slots]
+    ok = cov & edges.mask[slots] & in_window(
+        ts, te, windows[:, 0:1], windows[:, 1:2])
+    return ok, ts, te
+
+
+def rowwise_combine(vals, seg_ids, n_segments: int, op: str, mask):
+    """vmapped masked segment combine: the sparse-round counterpart of
+    ``combine_windows_for_plan`` (integer min/max/sum are order-free, so
+    this matches the dense backends bit-for-bit on the same multiset)."""
+    return jax.vmap(
+        lambda v, s, m: segment_combine(v, s, n_segments, op, mask=m)
+    )(vals, seg_ids, mask)
+
+
+def take_rows(state, idx):
+    """[Q, V] state gathered at per-row indices [Q, K] -> [Q, K]."""
+    return jnp.take_along_axis(state, idx, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# ladder segments
+# ---------------------------------------------------------------------------
+
+class LadderSpec(NamedTuple):
+    """One algorithm's ladder contract (module-level, hashable — it keys
+    the segment jit caches together with the rungs and plan statics).
+
+    ``dense_round(edges, valid, windows, plan, state, rnd, V) -> state``
+    replicates the algorithm's existing batched body exactly (bit-identity
+    anchor).  ``sparse_round(edges, windows, plan, gathered, state, rnd,
+    V) -> state`` consumes the driver's per-companion ``(slots, cov)``
+    gathers.  ``frontier(state) -> bool[Q, V]`` exposes the live set the
+    rung selection and convergence test read."""
+
+    name: str
+    dense_round: Callable
+    sparse_round: Callable
+    frontier: Callable
+
+
+def _measures(spec: LadderSpec, state, deg):
+    f = spec.frontier(state)
+    occ = jnp.max(jnp.sum(f.astype(jnp.int32), axis=1))
+    sumdeg = jnp.max(jnp.sum(jnp.where(f, deg, 0), axis=1))
+    return occ, sumdeg
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "n_vertices", "max_rounds", "cutoff", "cap"),
+)
+def _dense_segment(spec: LadderSpec, edges, valid, windows, plan, deg,
+                   state, rnd, *, n_vertices: int, max_rounds: int,
+                   cutoff: int, cap: int):
+    _TRACE_LOG.append(f"{spec.name}:dense:{plan.cache_key}")
+
+    def cond(carry):
+        r, s, occ, sumdeg = carry
+        sparse_ok = (sumdeg <= cutoff) & (occ <= cap)
+        return (r < max_rounds) & (occ > 0) & ~sparse_ok
+
+    def body(carry):
+        r, s, _, _ = carry
+        s = spec.dense_round(edges, valid, windows, plan, s, r, n_vertices)
+        occ, sumdeg = _measures(spec, s, deg)
+        return r + 1, s, occ, sumdeg
+
+    occ0, sumdeg0 = _measures(spec, state, deg)
+    return jax.lax.while_loop(cond, body, (rnd, state, occ0, sumdeg0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "n_vertices", "max_rounds", "vrung", "erung",
+                     "at_floor"),
+)
+def _sparse_segment(spec: LadderSpec, edges, windows, plan, companions,
+                    deg, state, rnd, *, n_vertices: int, max_rounds: int,
+                    vrung: int, erung: int, at_floor: bool):
+    _TRACE_LOG.append(
+        f"{spec.name}:sparse:v{vrung}e{erung}:{plan.cache_key}")
+
+    def cond(carry):
+        r, s, occ, sumdeg = carry
+        ok = (occ > 0) & (occ <= vrung) & (sumdeg <= erung)
+        if not at_floor:
+            # descent hysteresis (bucket_capacity's prev//4 band): a
+            # frontier that shrank past a quarter of the rung exits so the
+            # host re-enters at a smaller static rung.
+            ok &= sumdeg > erung // 4
+        return (r < max_rounds) & ok
+
+    def body(carry):
+        r, s, _, _ = carry
+        f = spec.frontier(s)
+        gathered = tuple(
+            gather_frontier_slots(c, f, vrung, erung, n_vertices)
+            for c in companions
+        )
+        s = spec.sparse_round(edges, windows, plan, gathered, s, r,
+                              n_vertices)
+        occ, sumdeg = _measures(spec, s, deg)
+        return r + 1, s, occ, sumdeg
+
+    occ0, sumdeg0 = _measures(spec, state, deg)
+    return jax.lax.while_loop(cond, body, (rnd, state, occ0, sumdeg0))
+
+
+def choose_rungs(occ: int, sumdeg: int, prev_vrung: int, prev_erung: int,
+                 *, cap: int, n_slots: int, n_vertices: int
+                 ) -> Tuple[int, int]:
+    """Host-side rung selection for the next sparse segment: pow2 pads
+    with ``bucket_capacity`` hysteresis (a frontier inside the previous
+    rung's (cap/4, cap] band keeps the rung — same-shape queries then
+    replay the identical segment sequence and every jit lookup hits).
+    Monotone in (occ, sumdeg): shrinking inputs never pick a bigger rung
+    (property-tested)."""
+    from repro.engine.plan import rung
+
+    vrung = min(bucket_capacity(max(occ, 1), prev_vrung),
+                rung(min(cap, n_vertices)))
+    floor = min(ERUNG_FLOOR, rung(n_slots))
+    erung = max(min(bucket_capacity(max(sumdeg, 1), prev_erung),
+                    rung(n_slots)), floor)
+    return vrung, erung
+
+
+def run_laddered(
+    spec: LadderSpec,
+    edges,
+    windows,                         # i32[Q, 2]
+    valid,                           # bool[Q, E'] precomputed dense validity
+    plan,
+    n_vertices: int,
+    state,
+    *,
+    companions: Tuple[FrontierView, ...],
+    max_rounds: int,
+    segments: Optional[list] = None,
+):
+    """The host-level segment loop (DESIGN.md §7.9): dense jitted
+    segments until the frontier's summed degree drops under the handoff
+    cutoff, then sparse segments at static ``(vrung, erung)`` rungs with
+    hysteresis descent; overflow (frontier outgrowing a rung) exits to the
+    host and re-enters dense or at a bigger rung — never truncating.
+
+    Returns ``(final_state, rounds)`` with ``rounds`` the global executed
+    round count (i32 scalar), matching the dense ``run(with_rounds=True)``
+    accounting.  ``segments``, if a list, collects ``(kind, vrung, erung,
+    round_count)`` per executed segment for observability and tests."""
+    E = int(edges.src.shape[0])
+    cap = int(plan.ladder)
+    cutoff = max(E // DENSE_HANDOFF_DIV, 1)
+    deg = companions[0].degs
+    for c in companions[1:]:
+        deg = deg + c.degs
+    floor = min(ERUNG_FLOOR, 1 << (max(E, 1) - 1).bit_length())
+
+    rnd = jnp.int32(0)
+    rnd_i = 0
+    while True:
+        rnd, state, occ, sumdeg = _dense_segment(
+            spec, edges, valid, windows, plan, deg, state, rnd,
+            n_vertices=n_vertices, max_rounds=max_rounds, cutoff=cutoff,
+            cap=cap)
+        prev = rnd_i
+        occ_i, sd_i, rnd_i = int(occ), int(sumdeg), int(rnd)
+        if segments is not None and rnd_i > prev:
+            segments.append(("dense", 0, 0, rnd_i - prev))
+        if occ_i == 0 or rnd_i >= max_rounds:
+            break
+        vrung = erung = 0
+        while (0 < occ_i <= cap and sd_i <= cutoff
+               and rnd_i < max_rounds):
+            vrung, erung = choose_rungs(
+                occ_i, sd_i, vrung, erung, cap=cap, n_slots=E,
+                n_vertices=n_vertices)
+            rnd, state, occ, sumdeg = _sparse_segment(
+                spec, edges, windows, plan, companions, deg, state, rnd,
+                n_vertices=n_vertices, max_rounds=max_rounds,
+                vrung=vrung, erung=erung, at_floor=(erung <= floor))
+            prev = rnd_i
+            occ_i, sd_i, rnd_i = int(occ), int(sumdeg), int(rnd)
+            if segments is not None:
+                segments.append(("sparse", vrung, erung, rnd_i - prev))
+        if occ_i == 0 or rnd_i >= max_rounds:
+            break
+    return state, rnd
+
+
+__all__ = [
+    "FrontierView",
+    "build_frontier_view",
+    "advance_frontier_view",
+    "companion_for_view",
+    "ladder_eligible",
+    "gather_frontier_slots",
+    "sparse_window_valid",
+    "rowwise_combine",
+    "take_rows",
+    "LadderSpec",
+    "choose_rungs",
+    "run_laddered",
+    "ladder_trace_log",
+    "ladder_trace_count",
+    "ERUNG_FLOOR",
+]

@@ -79,6 +79,15 @@ class AccessPlan:
     # a tier switch can NEVER alias a hot chain's jit cache — it falls
     # cold without consuming the donated state.
     tier: str = dataclasses.field(default="hot", metadata=dict(static=True))
+    # Frontier-rung ladder cap (DESIGN.md §7.9): 0 disables; a positive
+    # value is the largest frontier occupancy (vertex rung) the sparse
+    # segments of a laddered fixpoint will serve — host-level solves under
+    # this plan descend to frontier-proportional rounds once the live
+    # frontier fits.  Static and on the cache key: laddered and dense
+    # programs never alias a jit cache entry, and the fused serving step
+    # (which traces the solves) keeps its dense one-dispatch contract —
+    # the ladder only engages on host-level (concrete-array) calls.
+    ladder: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def view_budget(self) -> int:
@@ -89,7 +98,8 @@ class AccessPlan:
 def _cache_key(method: str, backend: str, budget: int, pvb: int,
                exchange: int, tile_v: int, block_e: int,
                n_windows: int = 0, ring_capacity: int = 0,
-               batch_sig: str = "", tier: str = "hot") -> str:
+               batch_sig: str = "", tier: str = "hot",
+               ladder: int = 0) -> str:
     key = f"{method}/{backend}/b{budget}/pv{pvb}/x{exchange}/t{tile_v}x{block_e}"
     if ring_capacity:
         key += f"/r{ring_capacity}"
@@ -99,6 +109,8 @@ def _cache_key(method: str, backend: str, budget: int, pvb: int,
         key += f"/q{batch_sig}"
     if tier != "hot":
         key += f"/T{tier}"
+    if ladder:
+        key += f"/L{ladder}"
     return key
 
 
@@ -130,6 +142,7 @@ def make_plan(
     ring_capacity: int = 0,
     batch_sig: str = "",
     tier: str = "hot",
+    ladder: int = 0,
 ) -> AccessPlan:
     """Direct plan constructor (the planner-free path: legacy shims, the
     distributed engine's per-shard plans, tests)."""
@@ -139,6 +152,8 @@ def make_plan(
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if tier not in TIERS:
         raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
+    if ladder < 0:
+        raise ValueError(f"ladder must be >= 0, got {ladder}")
     if layout is not None:
         perm = jnp.asarray(layout.perm)
         block_tile = jnp.asarray(layout.block_tile)
@@ -164,11 +179,12 @@ def make_plan(
         cache_key=_cache_key(method, backend, int(budget), int(per_vertex_budget),
                              int(exchange_budget), int(tile_v), int(block_e),
                              int(n_windows), int(ring_capacity),
-                             str(batch_sig), str(tier)),
+                             str(batch_sig), str(tier), int(ladder)),
         n_windows=int(n_windows),
         ring_capacity=int(ring_capacity),
         batch_sig=str(batch_sig),
         tier=str(tier),
+        ladder=int(ladder),
     )
 
 
@@ -285,6 +301,7 @@ def plan_query(
     block_e: int = DEFAULT_BLOCK_E,
     coldstore=None,
     tier: Optional[str] = None,
+    ladder: int = 0,
 ) -> AccessPlan:
     """THE planner: one host-side decision per algorithm run (the window is
     constant across rounds, so one plan serves every round).
@@ -422,7 +439,7 @@ def plan_query(
         layout=layout, n_edges=n_edges if layout is not None else 0,
         tile_v=tile_v, block_e=block_e,
         n_windows=n_windows, ring_capacity=ring_capacity,
-        tier=tier,
+        tier=tier, ladder=int(ladder),
     )
 
 
@@ -479,7 +496,7 @@ def plan_batch(
         cache_key=_cache_key(
             plan.method, plan.backend, plan.budget, plan.per_vertex_budget,
             plan.exchange_budget, plan.tile_v, plan.block_e, plan.n_windows,
-            plan.ring_capacity, sig, plan.tier),
+            plan.ring_capacity, sig, plan.tier, plan.ladder),
     )
 
 

@@ -65,7 +65,8 @@ def run_graph(args) -> None:
     coldstore = None
     if args.history_chunks:
         from repro.core.coldstore import ColdStore
-        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks)
+        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks,
+                              spill_dir=args.history_spill_dir)
     server = GraphBatchServer(g, idx, access="index",
                               mesh=None if coldstore is not None else mesh,
                               coldstore=coldstore)
@@ -139,7 +140,8 @@ def run_daemon(args) -> None:
     coldstore = None
     if args.history_chunks:
         from repro.core.coldstore import ColdStore
-        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks)
+        coldstore = ColdStore(g, idx, chunk_slots=args.history_chunks,
+                              spill_dir=args.history_spill_dir)
         mesh = None     # the cold tier's history class is unsharded
     server = GraphBatchServer(g, idx, access="index", mesh=mesh,
                               coldstore=coldstore)
@@ -215,6 +217,11 @@ def main():
                          "window, daemon mode admits a pinned historical "
                          "tenant mid-run (disables the mesh: the cold "
                          "tier is unsharded)")
+    ap.add_argument("--history-spill-dir", default=None, metavar="DIR",
+                    help="spill sealed cold-store chunk payloads to "
+                         "memmap-backed files under DIR (needs "
+                         "--history-chunks); decodes are bit-identical, "
+                         "RAM holds only the chunk directory")
     ap.add_argument("--daemon", action="store_true",
                     help="graph daemon mode: tick loop with Poisson churn")
     ap.add_argument("--ticks", type=int, default=40)
@@ -224,6 +231,9 @@ def main():
                     help="Poisson tenant departures per tick")
     args = ap.parse_args()
 
+    if args.history_spill_dir and not args.history_chunks:
+        ap.error("--history-spill-dir needs --history-chunks (it spills "
+                 "the cold store's sealed chunks)")
     if args.daemon:
         run_daemon(args)
         return

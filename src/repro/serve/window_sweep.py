@@ -128,6 +128,14 @@ from repro.engine.queries import (
     dedup_rows,
 )
 
+# the calibrated crossover of BENCH_fixpoint.json part 2 row 1: at ring
+# capacities at or below this rung the fused incremental advance LOSES to a
+# cold re-solve (0.69x at b64/W=8 — the per-advance fixed costs dwarf the
+# delta scatter's savings), so ``sweep_incremental(tiny_budget_gate=True)``
+# routes such chains cold.  Opt-in: the default keeps the fused one-dispatch
+# contract for tests and daemons that assert on it.
+TINY_BUDGET_RING = 64
+
 
 # ---------------------------------------------------------------------------
 # the algorithm dispatch table (DESIGN.md §7.4)
@@ -1487,6 +1495,7 @@ def serve_batch(
     admission: Optional[str] = None,
     bucket_headroom: int = 0,
     coldstore=None,
+    ladder: int = 0,
 ):
     """Serve a whole :class:`~repro.engine.queries.QueryBatch` — the
     multi-tenant entry point (DESIGN.md §7.4).
@@ -1565,7 +1574,16 @@ def serve_batch(
     A state from a different graph or an incompatible explicit ``plan``
     falls back to a cold serve (the mismatched state is NOT consumed).
     ``warm_start=True`` opts into the per-algorithm containment warm
-    starts (EA/cc exact, reachability sound; refused elsewhere)."""
+    starts (EA/cc exact, reachability sound; refused elsewhere).
+
+    ``ladder`` (DESIGN.md §7.9) sets the frontier-rung cap on the batch
+    plan: HOST-LEVEL solves — the cold builds, tier stitches and
+    admission solves — then run their fixpoints through the sparse
+    frontier ladder (bit-identical results), while the fused steady-state
+    advance keeps its dense one-dispatch program (the ladder never
+    engages under a trace).  Edge-sharded plans (E > 1 meshes) ignore it
+    — the sparse gather is per-shard local.  The value rides the plan
+    cache key, so a chain keeps the ladder it cold-started with."""
     if admission not in (None, "bucketed"):
         raise ValueError(
             f"unknown admission mode {admission!r}; " + _SERVE_COMBOS)
@@ -1651,7 +1669,7 @@ def serve_batch(
         plan_builder=lambda: plan_batch(
             g, tger, batch, access=access, backend=backend,
             shards=None if mesh is None else _mesh_shape(mesh),
-            bucketed=bucketed, tier=tier),
+            bucketed=bucketed, tier=tier, ladder=int(ladder)),
         warm_start=warm_start,
         mesh=mesh,
         bucketed=bucketed,
@@ -1680,6 +1698,8 @@ def sweep_incremental(
     plan: Optional[AccessPlan] = None,
     warm_start: bool = False,
     coldstore=None,
+    ladder: int = 0,
+    tiny_budget_gate: bool = False,
     **kwargs,
 ):
     """Serve ``windows`` reusing the previous sweep's :class:`SweepState` —
@@ -1705,6 +1725,20 @@ def sweep_incremental(
     and REFUSED (cold init, with ``state.warm_applied == False``) for
     pagerank, bfs, kcore, betweenness and for EA under ``visit_once`` —
     the unsound cases of DESIGN.md §7.2/§7.4.
+
+    ``ladder`` (DESIGN.md §7.9) sets the frontier-rung cap on the sweep's
+    plan: cold solves run through the sparse frontier ladder
+    (bit-identical), the fused advance stays dense.  ``tiny_budget_gate=
+    True`` opts into the calibrated crossover gate: when the plan's ring
+    capacity is at or below :data:`TINY_BUDGET_RING` the chain serves
+    COLD every sweep, statelessly (the returned state is ``None`` — no
+    ring/companion buffers are built), instead of carrying the fused
+    incremental state —
+    BENCH part 2 row 1 measured the fused advance at 0.69x of a cold
+    solve in that regime (per-advance fixed costs dominate at tiny
+    budgets).  Off by default: the gate trades the one-dispatch contract
+    for wall-clock, which soak tests and daemons asserting on dispatch
+    counts must not inherit silently.
     """
     entry = _algo(algorithm)
     windows = np.asarray(windows, np.int32).reshape(-1, 2)
@@ -1747,12 +1781,28 @@ def sweep_incremental(
         access = "index"
         if state is not None and state.plan.tier != tier:
             state = None    # tier switches never consume the carried state
+    if tiny_budget_gate and tier == "hot":
+        p = plan if plan is not None else plan_query(
+            g, tger, windows=windows, access=access, backend=backend,
+            tier=tier, ladder=int(ladder))
+        cap = p.ring_capacity or p.budget
+        if p.method in ("index", "hybrid") and cap <= TINY_BUDGET_RING:
+            # calibrated crossover (BENCH part 2): at tiny ring capacities
+            # the per-advance fixed costs dominate and a STATELESS cold
+            # solve wins — serve it directly under the pinned plan.  No
+            # SweepState is built or returned (None): the gate re-fires on
+            # every sweep of the chain, so carried ring/companion buffers
+            # would be rebuilt dead weight, and the rebuild alone costs
+            # more than the solve in this regime.
+            _note("gate:tiny-budget")
+            _note("cold:gated")
+            return entry.batched(g, src, windows, tger, p, kwargs), None
     results, new_state = _advance(
         g, tger, groups, state,
         plan_arg=plan,
         plan_builder=lambda: plan_query(
             g, tger, windows=windows, access=access, backend=backend,
-            tier=tier),
+            tier=tier, ladder=int(ladder)),
         warm_start=warm_start,
         coldstore=coldstore,
         tier=tier,
